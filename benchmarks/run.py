@@ -1,0 +1,206 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+``python -m benchmarks.run``            reduced grid (CI-sized, ~10 min)
+``python -m benchmarks.run --full``     the paper's full T x phi x location
+                                        grid, 5 repetitions (~1 h on 1 core)
+``python -m benchmarks.run --only X``   table2|table3|table4|volume|kernels|
+                                        ft|roofline
+
+Output: CSV blocks ``name,us_per_call,derived`` per the harness convention,
+plus the full tables to artifacts/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def _ensure_dir():
+    os.makedirs("artifacts/bench", exist_ok=True)
+
+
+def bench_paper_table(table: str, full: bool):
+    """Tables 2/3 + Figs 2/3: ESRP vs ESR(T=1) vs IMCR overheads."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from benchmarks.paper_tables import format_rows, run_table
+
+    if table == "table2":
+        kind, kw = "poisson2d", dict(nx=192)
+    else:
+        kind, kw = "poisson3d", dict(nx=32)
+    Ts = (1, 20, 50, 100) if full else (1, 20, 50)
+    phis = (1, 3, 8) if full else (1, 3)
+    reps = 5 if full else 3
+    t_start = time.time()
+    t0, C, rows = run_table(kind, kw, Ts=Ts, phis=phis, reps=reps)
+    text = format_rows(f"{table} ({kind} surrogate)", t0, C, rows)
+    _ensure_dir()
+    with open(f"artifacts/bench/{table}.csv", "w") as f:
+        f.write(text + "\n")
+    print(text)
+    # harness CSV: the paper's headline setting (T=20, phi=1)
+    sel = [r for r in rows if r.T == 20 and r.phi == 1]
+    for r in sel:
+        print(f"{table}_{r.strategy}_T{r.T}_phi{r.phi}_{r.scenario},"
+              f"{1e6 * r.runtime_s:.0f},overhead_pct={100 * r.overhead:.2f}")
+    print(f"# {table} wall {time.time() - t_start:.0f}s")
+
+
+def bench_table4(full: bool):
+    """Residual drift (paper Eq. 2 / Table 4)."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.driver import solve_resilient
+    from repro.sparse.matrices import build_problem
+
+    out = []
+    for name, kind, kw in (("poisson2d_192", "poisson2d", dict(nx=192)),
+                           ("poisson3d_32", "poisson3d", dict(nx=32))):
+        p = build_problem(kind, n_nodes=16, **kw)
+        ref = solve_resilient(p, strategy="none", rtol=1e-8, chunk=128)
+        drifts = []
+        C = ref.converged_iter
+        for loc in (0, 8):
+            for phi in (1, 3):
+                failed = [(loc + i) % 16 for i in range(phi)]
+                r = solve_resilient(p, strategy="esrp", T=20, phi=phi,
+                                    rtol=1e-8, chunk=128,
+                                    fail_at=(C // 2 // 20) * 20 + 18,
+                                    failed_nodes=failed)
+                drifts.append(r.drift)
+        row = (f"table4_{name},0,reference={ref.drift:.3e};"
+               f"median={np.median(drifts):.3e};min={np.min(drifts):.3e}")
+        out.append(row)
+        print(row)
+    _ensure_dir()
+    with open("artifacts/bench/table4.csv", "w") as f:
+        f.write("\n".join(out) + "\n")
+
+
+def bench_volume():
+    """Communication-volume model (paper §2.2.1/§3.1, exact)."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from benchmarks.paper_tables import comm_volume_table
+
+    for name, kind, kw in (("poisson2d_192", "poisson2d", dict(nx=192)),
+                           ("poisson3d_32", "poisson3d", dict(nx=32))):
+        for row in comm_volume_table(kind, kw):
+            print(f"volume_{name}_phi{row['phi']},0,"
+                  f"spmv={row['spmv_bytes']};aspmv={row['aspmv_bytes']};"
+                  f"esrp_stage={row['esrp_stage_bytes']};"
+                  f"imcr_ckpt={row['imcr_ckpt_bytes']}")
+
+
+def bench_kernels():
+    """Kernel validation sweeps + jnp-path timing (us/call)."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.kernels.spmv.ops import blockell_matvec
+    from repro.kernels.spmv.ref import spmv_ref
+    from repro.kernels.fused_pcg.ops import pcg_update
+    from repro.sparse.matrices import build_problem
+
+    p = build_problem("poisson3d", n_nodes=16, nx=32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(p.m))
+    y_ref = spmv_ref(p.a.data, p.a.idx, x)
+    y_ker = blockell_matvec(p.a, x, backend="interpret")
+    err = float(jnp.abs(y_ref - y_ker).max())
+    assert err < 1e-10, err
+    f = jax.jit(lambda v: spmv_ref(p.a.data, p.a.idx, v))
+    f(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(50):
+        y = f(x)
+    y.block_until_ready()
+    us = (time.perf_counter() - t0) / 50 * 1e6
+    nnz = float(np.sum(np.asarray(p.a.nblk)) * p.a.bm * p.a.bn)
+    print(f"kernel_spmv,{us:.0f},interpret_err={err:.1e};gflops="
+          f"{2 * nnz / us / 1e3:.2f}")
+
+    alpha = jnp.asarray(0.3)
+    r, q, pv = x, x * 0.5, x * 0.25
+    ref = pcg_update(alpha, x, r, pv, q, p.pinv_blocks, backend="jnp")
+    ker = pcg_update(alpha, x, r, pv, q, p.pinv_blocks, backend="interpret",
+                     rows=160)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(ref, ker))
+    g = jax.jit(lambda a, x_, r_, p_, q_: pcg_update(
+        a, x_, r_, p_, q_, p.pinv_blocks, backend="jnp"))
+    g(alpha, x, r, pv, q)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(50):
+        o = g(alpha, x, r, pv, q)
+    o[0].block_until_ready()
+    us = (time.perf_counter() - t0) / 50 * 1e6
+    print(f"kernel_fused_pcg,{us:.0f},interpret_err={err:.1e}")
+
+
+def bench_ft():
+    """ESRP-for-training overheads (us/step, push volume per stage)."""
+    import jax
+    from repro.configs import smoke_config
+    from repro.models.lm import LM
+    from repro.train.optimizer import AdamWConfig, init_opt_state
+    from repro.train.train_step import make_train_step
+    from repro.data.pipeline import TokenPipeline
+    from repro.ft.esrp_trainer import ESRPTrainer, FTConfig
+
+    cfg = smoke_config("internlm2_1_8b")
+    model = LM(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    ts = make_train_step(model, AdamWConfig(warmup_steps=4))
+    pipe = TokenPipeline(cfg, global_batch=4, seq_len=64, seed=7)
+    for mode, compress in (("none", False), ("esrp", False),
+                           ("esrp", True), ("imcr", False)):
+        tr = ESRPTrainer(model, ts, pipe,
+                         FTConfig(mode=mode, T=10, phi=1, n_ranks=8,
+                                  compress=compress), specs)
+        tr.run(params, opt, n_steps=3)        # warmup: amortize jit compile
+        tr.push_bytes = tr.push_count = 0
+        t0 = time.perf_counter()
+        tr.run(params, opt, n_steps=40)
+        dt = time.perf_counter() - t0
+        label = mode + ("_bf16" if compress else "")
+        print(f"ft_{label},{1e6 * dt / 40:.0f},"
+              f"push_MB_per_stage="
+              f"{tr.push_bytes / max(tr.push_count, 1) / 1e6:.2f}")
+
+
+def bench_roofline():
+    """Roofline terms per dry-run cell (from artifacts/dryrun)."""
+    from repro.roofline.report import summarize
+    for line in summarize("artifacts/dryrun"):
+        print(line)
+
+
+ALL = {
+    "table2": lambda full: bench_paper_table("table2", full),
+    "table3": lambda full: bench_paper_table("table3", full),
+    "table4": lambda full: bench_table4(full),
+    "volume": lambda full: bench_volume(),
+    "kernels": lambda full: bench_kernels(),
+    "ft": lambda full: bench_ft(),
+    "roofline": lambda full: bench_roofline(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(ALL)
+    for name in names:
+        print(f"\n== {name} ==")
+        ALL[name](args.full)
+
+
+if __name__ == "__main__":
+    main()

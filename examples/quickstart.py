@@ -1,0 +1,40 @@
+"""Quickstart: resilient PCG in ~20 lines (the paper in miniature).
+
+Solves a 2-D Poisson system on 8 simulated nodes with ESRP (T=20, phi=2),
+kills nodes 2 and 3 mid-solve, reconstructs exactly (Alg. 2), and converges
+in the same number of iterations as an undisturbed run.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.driver import solve_resilient
+from repro.sparse.matrices import build_problem
+
+
+def main():
+    problem = build_problem("poisson2d", n_nodes=8, nx=64, ny=64)
+    print(f"problem: M={problem.m}, 8 nodes, block-Jacobi({problem.precond_block})")
+
+    ref = solve_resilient(problem, strategy="none", rtol=1e-8)
+    print(f"reference:       {ref.converged_iter} iters, "
+          f"rel residual {ref.rel_residual:.2e}")
+
+    rep = solve_resilient(
+        problem, strategy="esrp", T=20, phi=2, rtol=1e-8,
+        fail_at=ref.converged_iter // 2, failed_nodes=[2, 3])
+    print(f"esrp w/ failure: {rep.converged_iter} iters, "
+          f"rel residual {rep.rel_residual:.2e}")
+    print(f"  rolled back to iteration {rep.target_iter} "
+          f"({rep.wasted_iters} iterations replayed)")
+    print(f"  reconstruction inner-solve residual {rep.inner_rel:.1e}")
+    print(f"  residual drift (paper Eq. 2): {rep.drift:.2e} "
+          f"(reference {ref.drift:.2e})")
+    assert rep.converged_iter == ref.converged_iter
+    print("exact state reconstruction: trajectory preserved ✓")
+
+
+if __name__ == "__main__":
+    main()

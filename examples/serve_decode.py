@@ -1,0 +1,52 @@
+"""Serve a small model: batched prefill + greedy decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_decode.py --batch 4 --new-tokens 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models.lm import LM
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = LM(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    max_len = args.prompt_len + args.new_tokens
+    caches = model.init_cache(args.batch, max_len)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab,
+        dtype=jnp.int32)
+
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+    tok, caches = prefill(params, {"tokens": prompts}, caches)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        tok, caches = decode(params, tok, caches, pos)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    seqs = jnp.concatenate(out, axis=1)
+    print(f"{cfg.name}: {args.batch} seqs x {args.new_tokens} new tokens")
+    print(f"{args.batch * (args.new_tokens - 1) / dt:.1f} tokens/s "
+          f"(batched greedy, CPU)")
+    print("sample:", list(map(int, seqs[0, :16])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,308 @@
+"""Assemble EXPERIMENTS.md from dry-run artifacts + benchmark CSVs.
+
+Usage: PYTHONPATH=src python scripts/gen_experiments.py
+Reads artifacts/dryrun (optimized), artifacts/dryrun_baseline (paper-faithful
+baseline), artifacts/bench/*.csv. The §Perf iteration log is maintained here.
+"""
+import glob
+import json
+import os
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def terms(rec):
+    pd = rec["per_device"]
+    c, m, n = pd["hlo_flops"] / PEAK, pd["hbm_bytes"] / HBM, \
+        pd["collective_bytes"] / LINK
+    dom = max((("compute", c), ("memory", m), ("collective", n)),
+              key=lambda t: t[1])
+    return c, m, n, dom[0], (c / max(c, m, n) if max(c, m, n) else 0), \
+        rec["model_flops_per_device"] / max(pd["hlo_flops"], 1)
+
+
+def roofline_table(cur, mesh):
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | roofline frac | useful |",
+            "|---|---|---:|---:|---:|---|---:|---:|"]
+    for key in sorted(cur):
+        if key[2] != mesh:
+            continue
+        rec = cur[key]
+        if rec.get("status") != "ok":
+            rows.append(f"| {key[0]} | {key[1]} | FAILED | | | | | |")
+            continue
+        c, m, n, dom, frac, useful = terms(rec)
+        rows.append(f"| {key[0]} | {key[1]} | {c:.3f} | {m:.3f} | {n:.3f} "
+                    f"| {dom} | {frac:.3f} | {useful:.2f} |")
+    return "\n".join(rows)
+
+
+def baseline_vs_now(cur, base):
+    rows = ["| arch | shape | baseline max-term s | optimized max-term s | "
+            "speedup | baseline frac | optimized frac |",
+            "|---|---|---:|---:|---:|---:|---:|"]
+    for key in sorted(cur):
+        if key[2] != "16x16":
+            continue
+        a, b = cur.get(key), base.get(key)
+        if not a or not b or a.get("status") != "ok" or \
+                b.get("status") != "ok":
+            continue
+        ca, ma, na, _, fa, _ = terms(a)
+        cb, mb, nb, _, fb, _ = terms(b)
+        mx_a, mx_b = max(ca, ma, na), max(cb, mb, nb)
+        if abs(mx_b - mx_a) / max(mx_b, 1e-12) < 0.01:
+            continue                       # unchanged cells omitted
+        rows.append(f"| {key[0]} | {key[1]} | {mx_b:.3f} | {mx_a:.3f} | "
+                    f"{mx_b / mx_a:.1f}x | {fb:.3f} | {fa:.3f} |")
+    return "\n".join(rows)
+
+
+def dryrun_summary(cur):
+    ok = sum(1 for r in cur.values() if r.get("status") == "ok")
+    fail = len(cur) - ok
+    per_mesh = {}
+    for (a, s, m), r in cur.items():
+        per_mesh.setdefault(m, [0, 0])
+        per_mesh[m][0 if r.get("status") == "ok" else 1] += 1
+    lines = [f"- {ok} / {len(cur)} cells compile ({fail} failures)."]
+    for m, (o, f) in sorted(per_mesh.items()):
+        lines.append(f"  - mesh {m}: {o} ok, {f} failed")
+    # compile times
+    ts = [r["t_compile_s"] for r in cur.values() if r.get("status") == "ok"]
+    lines.append(f"- compile time per cell: median "
+                 f"{sorted(ts)[len(ts)//2]:.1f}s, max {max(ts):.1f}s "
+                 f"(1-core CPU host; lower+compile with 512 partitions).")
+    return "\n".join(lines)
+
+
+PERF_LOG = """\
+### Cell 1 — qwen2-moe-a2.7b × train_4k (worst baseline roofline fraction, 0.016)
+
+| iter | hypothesis (napkin math) | change | dominant term before → after | verdict |
+|---|---|---|---|---|
+| moe-1 | the dispatch scatter uses *global* token indices, so GSPMD cannot shard the (E·C, d) buffer and replicates + all-reduces it per layer: buf = 64·81920·2048·2B ≈ 21.5 GB, ×(fwd+bwd grads) ≈ the measured 6.7e12 B/step of all-reduce | group-local dispatch bound to the dp axis (G=16 groups, sort/scatter indices local per group; expert GEMMs on (G,E,C,d), G→dp, E→tp) | N 138.86 s → 11.43 s (12.2×); C 2.16→0.65; useful 0.16→0.52 | **confirmed** |
+| moe-2 | remaining 103 GB/step all-gather = shared-expert branch on a (1, n, d) pseudo-batch (size-1 batch dim unshardable → 1M-token activations replicate); + 51 GB/step u32 all-reduce = take_along_axis broadcasting indices to (G, ng·k, d) | shared experts on the natural (B,S,d) layout; vmapped integer gathers | N 11.43 → 8.54 s; AG 1.96e11→5.7e10; useful 0.52→0.70 | **confirmed** |
+| moe-3 | attention weights are tiny (16 M/layer) — replicating them and running attention data-parallel should remove the ~1 GB/layer Megatron ARs | new "ep" profile: model axis reserved for experts, attention/dense-MLP on a separate (unbound) "atp" logical axis | N 8.54 → 8.93 s, C 0.48 → 0.95 s — **worse**: per-device S² attention compute rises 16× while the removed ARs were only ~half the remaining traffic | **refuted** — reverted to 2d (the profile machinery stays; useful for attention-light MoEs) |
+| moe-4 | slot-sharding the combine over the model axis should turn the masked all-reduce (≈ 1.07 GB/layer) into per-pair a2a traffic (≈ 67 MB) | constrain slot_out to ("dp","seqtp",None) | N 8.54 → 12.70 s — GSPMD all-gathers the expert buffer instead of forming an a2a | **refuted** — reverted. The true fix is a shard_map-level manual all_to_all (outside GSPMD's pattern library); two consecutive <5% iterations ⇒ stop rule for this cell |
+
+**Result: dominant term 138.86 s → 8.54 s (16.3×).** granite-moe shares the
+same code path and improves collaterally (see before/after table).
+
+### Cell 2 — xlstm-125m × prefill_32k (most collective-bound, N = 8 721 s)
+
+| iter | hypothesis | change | before → after | verdict |
+|---|---|---|---|---|
+| xlstm-1 | the mLSTM lax.scan runs 32 768 sequential steps; per-step input resharding makes GSPMD emit ~13.3 GB of all-gather *per timestep* | exact stabilized **chunkwise mLSTM**: with in-chunk decay b_t = cumsum(log f) and a_j = i_j − b_j, the stabilizer unrolls to m_t = b_t + max(m_prev, cummax a_j), every weight exp(·) ≤ 1; S-step scan → S/64 chunk steps of (Q×Q)/(Q×P) MXU matmuls. Validated allclose (≤ 1e-4) vs the recurrent oracle, incl. carried state | N 8 720.6 → 1 694.9 s (5.1×); M 534 → 104 s | **confirmed** (partially — sLSTM scan remained) |
+| xlstm-2 | remaining 2.6 GB/step all-gather: the Megatron-SP residual constraint propagates *sequence-over-model* sharding into the scan xs; a dynamic-slice over a sharded loop dim forces GSPMD to re-gather the full array every iteration | constrain every time-scanned input (sLSTM wx, mLSTM chunk tensors) to batch-only sharding; replicate the tiny recurrent R | N 1 694.9 → **0.370 s**; M 104 → 0.207 s | **confirmed** |
+
+**Result: dominant term 8 720.6 s → 0.370 s (23 569×).** Remaining 0.37 s is
+the sLSTM per-step scan's small gathers (inherent to its recurrent R h_{t-1}
+term); a chunkwise sLSTM variant is the identified next lever.
+
+### Cell 3 — command-r-plus-104b × train_4k (most representative: the dense
+training cell the ESRP-for-training feature protects)
+
+| iter | hypothesis | change | before → after | verdict |
+|---|---|---|---|---|
+| cr-1 | the 2D layout pays **both** Megatron-TP activation all-reduces (≈ 4 ARs × 1.6 GB × 2 = 13.5 GB/layer) **and** FSDP param gathers (≈ 12 GB/layer); pure ZeRO-3 pays only params: 3 bf16 gathers + grad sync ≈ 830 GB/device → ≈ 16.6 s | per-arch parallelism profile "fsdp": params/batch shard over all 256 chips, no TP | N 34.71 → 16.49 s; M 8.84 → 6.97; **roofline fraction 0.481 → 1.000** (compute-bound) | **confirmed** (napkin within 1%) |
+| cr-2 | bf16 param *storage* should halve gather bytes | param_dtype = bfloat16 | N 16.49 → 16.49 s (unchanged) | **refuted** — XLA already hoists the compute-dtype casts above the gathers; they were bf16 all along. fp32 storage retained (optimizer quality) |
+
+Residual analysis: the 415 GB "all-reduce" is grad sync measured at the
+spmd-partitioning stage; TPU pipelines later fuse AR+dynamic-slice →
+reduce-scatter, so the true N ≈ 12.5 s (our N is an upper bound). The
+remaining compute gap (useful = 0.78) is causally-masked full-S² attention +
+remat recompute — a flash-attention Pallas kernel is the next lever.
+**Result: compute-bound at C = 16.70 s/step ⇒ model-FLOPs utilization ≈
+0.78 × 197 TF = ~154 TF/chip (78% MFU) once collectives overlap.**
+
+### Beyond the three required cells — cr-1 generalized
+
+The cr-1 napkin math applies to every dense/hybrid/recurrent arch at these
+sizes (TP activation ARs scale with B_loc·S·d; FSDP gathers with params —
+for ≤ 30 B-param models at batch 256 × 4 k the params are far cheaper), so
+the "fsdp" profile was applied to 7 more archs and re-measured
+(single-pod train_4k, dominant-term seconds):
+
+| arch | 2d baseline max-term s | fsdp | speedup | new bottleneck |
+|---|---:|---:|---:|---|
+| internlm2-1.8b | 2.88 | 0.37 | 7.7× | memory (frac 0.87) |
+| glm4-9b | 15.85 | 1.56 | 10.1× | **compute (frac 1.00)** |
+| gemma3-27b | 23.08 | 5.34 | 4.3× | collective (frac 0.94) |
+| musicgen-medium | 17.20 | 0.98 | 17.5× | memory |
+| internvl2-1b | 4.60 | 0.29 | 15.6× | memory |
+| zamba2-7b | 10.81 | 2.40 | 4.5× | memory (frac 0.65) |
+| xlstm-125m | 2774.6 | 1.19 | 2339× (with xlstm-1/2) | collective (sLSTM scan) |
+
+(exact per-cell terms in the §Roofline table above, which reflects the
+optimized profiles). MoE archs keep the 2d profile: their expert weights
+need the model axis for expert parallelism — replicating 15 B expert params
+does not fit HBM.
+
+**Negative result / guard rail:** on the 2-pod mesh (512 chips) train_4k's
+global batch (256) is *below* the device count; forcing ZeRO-3 there made
+zamba2 13× worse (N 6.0 → 81.4 s: batch falls back to 32-way sharding while
+params shard 512-way → resharding storm). The launcher therefore applies the
+fsdp profile only when global_batch divides by the device count — at real
+scale one raises the global batch (or microbatches) before widening ZeRO.
+
+**Memory-term probe (zamba-1, refuted):** zamba2 train is memory-dominant
+after the profile change (M = 2.40 s). Hypothesis: the SSD intra-chunk score
+matmuls scale with chunk length Q, so Q 128→64 should cut M. Measured:
+Q=64 → M 2.42 s, Q=256 → M 2.65 s — flat-to-worse: score-dot bytes (∝ S·Q)
+fall exactly as inter-chunk state traffic (∝ S/Q · H·N·P) rises; Q = 128
+already sits at the sweet spot. The remaining M is the FSDP weight-streaming
+floor.
+"""
+
+
+def bench_tables():
+    out = []
+    for t in ("table2", "table3", "table4"):
+        f = f"artifacts/bench/{t}.csv"
+        if os.path.exists(f):
+            out.append(f"### {t}\n\n```\n{open(f).read().strip()}\n```")
+    return "\n\n".join(out)
+
+
+def main():
+    cur = load("artifacts/dryrun")
+    base = load("artifacts/dryrun_baseline")
+    doc = f"""# EXPERIMENTS
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+All per-chip terms come from the while-aware analyzer over the
+post-SPMD-partitioning HLO (see `repro/roofline/hlo_analysis.py` for the
+exact cost model and DESIGN.md §9 for why that dump is the faithful source
+on a CPU host). MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (serve);
+"useful" = MODEL_FLOPS / HLO_FLOPs. Roofline fraction = compute term /
+dominant term (1.0 = compute-bound).
+
+## §Dry-run
+
+Every (architecture × applicable shape) cell lowers AND compiles on the
+single-pod 16×16 mesh and the 2-pod 2×16×16 mesh (deliverable e). 33 cells ×
+2 meshes = 66 compilations; 7 long_500k cells are skipped by design for pure
+full-attention archs (DESIGN.md §Arch-applicability).
+
+{dryrun_summary(cur)}
+
+Per-cell artifacts (memory_analysis, cost_analysis, collective breakdown,
+while-loop trip counts) live in `artifacts/dryrun/*.json`; the paper-faithful
+baseline snapshot (pre-§Perf) is `artifacts/dryrun_baseline/`.
+
+## §Roofline — single-pod (16×16, 256 chips), optimized configuration
+
+{roofline_table(cur, "16x16")}
+
+### Multi-pod (2×16×16, 512 chips)
+
+{roofline_table(cur, "2x16x16")}
+
+Reading guide: decode cells are tiny-absolute-time and memory/collective
+bound by nature (one token vs a 32k-500k cache — expected). The long_500k
+rows exist only for the sub-quadratic archs. "useful" below ~0.5 on serve
+cells reflects cache-wide masked ops vs the 2·N·B model-FLOPs convention;
+on MoE cells it additionally reflects capacity-factor padding (×1.25).
+
+## §Perf — baseline all cells, hillclimb three (hypothesis → change → measure)
+
+The paper-faithful implementation was lowered for every cell first
+(`artifacts/dryrun_baseline/`). Three cells were then hillclimbed per the
+required selection rule — worst roofline fraction (qwen2-moe train_4k,
+frac 0.016), most collective-bound (xlstm prefill_32k, N = 8 721 s), most
+representative of the technique (command-r-plus train_4k — the dense
+training workload ESRP protects):
+
+{PERF_LOG}
+
+### Collateral improvements (all changed cells, baseline → optimized)
+
+{baseline_vs_now(cur, base)}
+
+## §Solver benchmarks — the paper's tables (CPU host, 16 simulated nodes)
+
+Protocol = paper §5: medians of ≥5 repetitions, failure 2 iterations before
+the end of the interval containing C/2 (worst case), locations start/center,
+ψ = φ simultaneous failures, rtol 1e-8, inner reconstruction solves at 1e-14.
+SuiteSparse is unavailable offline; seeded surrogates of the same regime are
+used (DESIGN.md §3). Notes vs the paper: (i) wall times are 1-core CPU
+simulations — *relative* overheads are the meaningful signal, and they are
+noisier than the paper's 128-node medians (the paper itself reports
+noise-limited cases); (ii) reconstruction overhead is a larger *fraction*
+here because the surrogate problems converge in under a second while the
+inner solve cost does not shrink proportionally (the paper's runs are
+15-23 s) — the paper's own observation that recovery cost depends on the
+matrix and failed-block location reproduces cleanly; (iii) ESRP failure-free
+overhead decreasing with T, and ESR (T=1) being the most expensive
+failure-free variant at high φ, both reproduce.
+
+{bench_tables()}
+
+### Communication-volume model (exact; paper §2.2.1 / §3.1)
+
+`python -m benchmarks.run --only volume` prints, per matrix and φ: natural
+SpMV bytes, augmented ASpMV bytes, per-stage ESRP extra bytes
+(2 augmented products), and the IMCR checkpoint bytes (4 vectors × φ
+buddies). This is the scale-relevant comparison the paper argues
+qualitatively: ESRP's redundancy rides existing communication; IMCR's is a
+new round. For the training-side analogue, `--only ft` reports
+ESRP ≈ 2/3 of IMCR push volume (moments only vs params+moments), and bf16
+moment compression halves it again (beyond-paper).
+
+## ESRP-for-training validation
+
+`tests/test_ft_trainer.py`: after a simulated ≤ φ node failure, recovery +
+deterministic replay reproduces the undisturbed run **bit-exactly** (the
+paper's trajectory-identity property carried to Adam training), for ESRP and
+IMCR, with buddy buffers hosted on failed nodes also lost (paper §4
+semantics). Compressed (bf16) redundancy gives a bounded ~1e-4 deviation.
+Elastic restart (checkpoint under 8 FSDP ranks, resume under 4, then another
+failure) also reproduces the trajectory bit-exactly.
+
+## Physical-runtime validation (multi-device)
+
+`tests/test_solver_multidevice.py` + `tests/test_multidevice.py` (8 host
+devices, subprocess):
+- the sharded solver (block rows over a "nodes" mesh axis) reproduces the
+  single-device ESRP solve iteration-for-iteration;
+- `ring_halo_matvec` (±1 ``ppermute`` halo exchange — the paper's MPI
+  neighbour sends on ICI) equals the reference SpMV to 1e-11;
+- `aspmv_push` delivers every redundant tile of the ASpMV plan to its
+  designated neighbour d_{{s,k}} via per-k ``collective-permute`` hops,
+  verified value-by-value against the plan's holder matrix;
+- the sharded LM train step matches the single-device step.
+
+## Beyond-paper extensions (summary)
+
+1. ESRP for LM training (params piggyback on FSDP gathers; moments buddy-
+   pushed; rollback + deterministic replay) — DESIGN.md §4.
+2. bf16-compressed redundancy pushes (half volume, bounded deviation).
+3. Fused PCG-update Pallas kernel (one HBM pass for Alg. 1 lines 4-7).
+4. Exact stabilized chunkwise mLSTM (23 569x on the xlstm prefill cell).
+5. Grouped MoE dispatch (16.3x on the qwen2-moe train cell).
+6. Per-arch parallelism profiles with a batch-divisibility guard rail
+   (up to 17.5x on dense train cells; command-r to roofline fraction 1.0).
+7. Residual replacement (r := b - Ax every K iters): tightens the paper's
+   Eq. 2 drift and composes with ESRP recovery (tested).
+8. Flash-attention Pallas kernel (causal + sliding-window, block skipping)
+   — the identified next lever for the attention-bound cells.
+9. Erratum fix for the paper's R^c_{{s,k}} condition (DESIGN.md §9).
+"""
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md written",
+          f"({sum(1 for r in cur.values() if r.get('status') == 'ok')} ok cells)")
+
+
+if __name__ == "__main__":
+    main()

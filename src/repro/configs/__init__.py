@@ -1,0 +1,36 @@
+"""Assigned architecture registry: ``get_config(name)`` / ``ARCHS``."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "command_r_plus_104b",
+    "internlm2_1_8b",
+    "glm4_9b",
+    "gemma3_27b",
+    "qwen2_moe_a2_7b",
+    "granite_moe_1b_a400m",
+    "internvl2_1b",
+    "zamba2_7b",
+    "xlstm_125m",
+    "musicgen_medium",
+]
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str, **overrides):
+    key = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    cfg = mod.config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def smoke_config(name: str):
+    """Reduced same-family config for CPU smoke tests."""
+    key = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.smoke()

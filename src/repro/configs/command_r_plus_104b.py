@@ -1,0 +1,25 @@
+"""command-r-plus-104b [dense] — 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000 — GQA, no-bias, parallel blocks, tied embeddings.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-plus-104b",
+        n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8,
+        d_ff=33792, vocab=256000,
+        block_pattern="dense", parallel_block=True,
+        norm="layernorm", tie_embeddings=True,
+        rope_theta=75_000_000.0,
+        parallelism="fsdp",   # §Perf cr-1: ZeRO-3 beats 2D for this cell
+        source="hf:CohereForAI/c4ai-command-r-plus")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-plus-104b-smoke",
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2,
+        d_ff=128, vocab=256,
+        block_pattern="dense", parallel_block=True,
+        norm="layernorm", tie_embeddings=True, remat="none")

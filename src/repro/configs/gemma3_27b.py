@@ -1,0 +1,25 @@
+"""gemma3-27b [dense] — 62L d_model=5376 32H (GQA kv=16) d_ff=21504
+vocab=262144 — 5:1 local:global sliding-window, 128k context.
+[hf:google/gemma-3-27b-pt; unverified]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16,
+        d_ff=21504, vocab=262144,
+        block_pattern="local_global:6", window=1024,
+        norm="rmsnorm", tie_embeddings=True,
+        rope_theta=1_000_000.0,                  # global layers; locals 10k
+        parallelism="fsdp",   # §Perf: ZeRO-3 beats 2D for train (cr-1 generalized)
+        source="hf:google/gemma-3-27b-pt")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b-smoke",
+        n_layers=8, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256,
+        block_pattern="local_global:6", window=16,
+        tie_embeddings=True, remat="none")

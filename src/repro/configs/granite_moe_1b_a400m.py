@@ -1,0 +1,25 @@
+"""granite-moe-1b-a400m [moe] — 24L d_model=1024 16H (GQA kv=8) d_ff=512
+vocab=49155, MoE 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8,
+        d_ff=512, vocab=49155,
+        block_pattern="moe",
+        n_experts=32, top_k=8, n_shared_experts=0, d_ff_expert=512,
+        norm="rmsnorm", rope_theta=10_000.0,
+        source="hf:ibm-granite/granite-3.0-1b-a400m-base")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=259,          # deliberately not a multiple of 16
+        block_pattern="moe",
+        n_experts=5, top_k=2, n_shared_experts=0, d_ff_expert=64,
+        remat="none")

@@ -1,0 +1,25 @@
+"""musicgen-medium [audio] — 48L d_model=1536 24H (GQA kv=24) d_ff=6144
+vocab=2048 — decoder-only over EnCodec tokens. Frontend STUB: input_specs
+provides precomputed frame embeddings; single-stream (the 4-codebook delay
+pattern is a frontend concern). [arXiv:2306.05284]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+        d_ff=6144, vocab=2048,
+        block_pattern="dense", norm="layernorm",
+        rope_theta=10_000.0,
+        frontend="audio",
+        parallelism="fsdp",   # §Perf: ZeRO-3 beats 2D for train (cr-1 generalized)
+        source="arXiv:2306.05284")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=128, block_pattern="dense", norm="layernorm",
+        frontend="audio", remat="none")

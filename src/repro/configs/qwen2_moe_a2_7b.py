@@ -1,0 +1,25 @@
+"""qwen2-moe-a2.7b [moe] — 24L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=151936, MoE 60 routed top-4 + 4 shared experts.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b",
+        n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1408, vocab=151936,
+        block_pattern="moe",
+        n_experts=60, top_k=4, n_shared_experts=4, d_ff_expert=1408,
+        norm="rmsnorm", rope_theta=1_000_000.0,
+        source="hf:Qwen/Qwen1.5-MoE-A2.7B")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=64, vocab=256,
+        block_pattern="moe",
+        n_experts=6, top_k=2, n_shared_experts=2, d_ff_expert=64,
+        remat="none")

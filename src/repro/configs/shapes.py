@@ -1,0 +1,101 @@
+"""Assigned input shapes and ``input_specs`` — ShapeDtypeStruct stand-ins for
+every model input (no device allocation; the dry-run lowers against these).
+
+  train_4k     seq_len=4096    global_batch=256   -> train_step
+  prefill_32k  seq_len=32768   global_batch=32    -> prefill_step
+  decode_32k   seq_len=32768   global_batch=128   -> decode_step (1 new token,
+                                                    KV cache of seq_len)
+  long_500k    seq_len=524288  global_batch=1     -> decode_step; requires a
+               sub-quadratic arch — run for zamba2-7b / xlstm-125m / gemma3-27b
+               (sliding-window), skipped for pure full-attention archs
+               (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+LONG_OK = {"gemma3-27b", "zamba2-7b", "xlstm-125m"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.name in LONG_OK
+    return True
+
+
+def cells(cfgs):
+    """All applicable (cfg, shape) dry-run cells."""
+    out = []
+    for cfg in cfgs:
+        for sname, shape in SHAPES.items():
+            if applicable(cfg, sname):
+                out.append((cfg, shape))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: Shape):
+    """ShapeDtypeStructs for the model inputs of one cell.
+
+    train/prefill: token batch (+ stub frontend embeddings + labels);
+    decode: one new token per sequence (the KV cache specs come from
+    ``LM.init_cache`` via ``jax.eval_shape``).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "decode":
+        return {"tokens": sds((b, 1), i32)}
+
+    batch = {}
+    if cfg.frontend == "vlm":
+        nf = cfg.n_frontend_tokens
+        batch["patch_embeds"] = sds((b, nf, cfg.d_model), f32)
+        batch["tokens"] = sds((b, s - nf), i32)
+        batch["labels"] = sds((b, s - nf), i32)
+    elif cfg.frontend == "audio":
+        batch["frame_embeds"] = sds((b, s, cfg.d_model), f32)
+        batch["labels"] = sds((b, s), i32)
+    else:
+        batch["tokens"] = sds((b, s), i32)
+        batch["labels"] = sds((b, s), i32)
+    if shape.kind == "prefill":
+        batch.pop("labels", None)
+    return batch
+
+
+def concrete_batch(cfg: ModelConfig, shape: Shape, seed: int = 0):
+    """Small-scale concrete batch matching input_specs (for smoke tests)."""
+    specs = input_specs(cfg, shape)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, sd in specs.items():
+        key, k = jax.random.split(key)
+        if sd.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, sd.shape, 0, cfg.vocab,
+                                           dtype=jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, sd.shape, sd.dtype)
+    return out

@@ -1,0 +1,23 @@
+"""xlstm-125m [ssm] — 12L d_model=768 4H (GQA kv=4) d_ff=0 vocab=50304 —
+sLSTM + mLSTM blocks (3 mLSTM : 1 sLSTM per group; no separate FFN —
+the blocks carry their own projections). [arXiv:2405.04517; unverified]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m",
+        n_layers=12, d_model=768, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=50304,
+        block_pattern="xlstm:4",
+        norm="rmsnorm", tie_embeddings=True,
+        parallelism="fsdp",   # §Perf: ZeRO-3 beats 2D for train (cr-1 generalized)
+        source="arXiv:2405.04517")
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m-smoke",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab=256, block_pattern="xlstm:4",
+        tie_embeddings=True, remat="none")

@@ -1,0 +1,118 @@
+"""Augmented sparse matrix-vector product (ASpMV) redundancy planning.
+
+Implements §2.2/§2.2.1 of the paper at column-tile granularity (the TPU
+adaptation: ownership and sends are per (bn)-wide tile, matching the Block-ELL
+layout and the ``ppermute`` halo exchange; see DESIGN.md §3).
+
+Definitions (paper notation, tile-granular):
+  I_{s,l}  — tiles owned by node s whose data node l needs to compute A·p
+             (derived from the sparsity structure: l's rows reference them).
+  m(t)     — multiplicity: #nodes that tile t is sent to naturally.
+  d_{s,k}  — designated redundancy destinations, Eq. (1) (ring neighbours).
+  g(t)     — #designated destinations that already receive t naturally.
+  R^c_{s,k}— extra sends: t goes to d_{s,k} iff t ∉ I_{s,d_{s,k}} and
+             m(t) − g(t) ≤ φ − k.
+
+ERRATUM NOTE: the paper prints the condition as strict ``m−g < φ−k``; for
+φ = 1, k = 1 that sends *nothing* (m−g ≥ 0 always), contradicting §2.2's own
+prose ("entries that would not have been sent to any node ... are transferred
+to a neighbor anyway"). The intended non-strict form ``m−g ≤ φ−k`` restores
+the φ+1-copies invariant, which ``verify`` checks and the property tests
+sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sparse.blockell import BlockEll
+from repro.sparse.partition import Partition, neighbors
+
+
+@dataclasses.dataclass
+class RedundancyPlan:
+    """Static ASpMV plan for one (matrix, partition, φ).
+
+    holders:    (col_tiles, n_nodes) bool — holders[t, n] ⇔ node n holds a
+                copy of tile t after one ASpMV (owner included).
+    extra_sends:list over nodes s of list over k (1..φ) of np arrays of tile
+                ids pushed to d_{s,k} beyond the natural SpMV traffic.
+    natural_bytes / augmented_bytes: per-ASpMV communication volume (element
+                count × itemsize) — the overhead the paper discusses in §2.2.1.
+    """
+
+    part: Partition
+    phi: int
+    holders: np.ndarray
+    extra_sends: list[list[np.ndarray]]
+    natural_tiles_sent: int
+    extra_tiles_sent: int
+
+    @property
+    def n_nodes(self) -> int:
+        return self.part.n_nodes
+
+    def bytes_per_aspmv(self, itemsize: int = 8) -> tuple[int, int]:
+        per_tile = self.part.bn * itemsize
+        return (self.natural_tiles_sent * per_tile,
+                (self.natural_tiles_sent + self.extra_tiles_sent) * per_tile)
+
+    def verify(self) -> None:
+        """φ+1-copies invariant (paper §2.2.1, last paragraph)."""
+        n_copies = self.holders.sum(axis=1)
+        if int(n_copies.min()) < self.phi + 1:
+            t = int(np.argmin(n_copies))
+            raise AssertionError(
+                f"tile {t} has {int(n_copies[t])} copies < phi+1={self.phi + 1}")
+
+    def survives(self, failed: np.ndarray) -> np.ndarray:
+        """(col_tiles,) bool — a redundant copy of tile t survives iff some
+        holder is not in the failed set."""
+        alive = np.ones(self.n_nodes, bool)
+        alive[np.asarray(failed)] = False
+        return (self.holders & alive[None, :]).any(axis=1)
+
+
+def build_plan(a: BlockEll, part: Partition, phi: int) -> RedundancyPlan:
+    if phi >= part.n_nodes:
+        raise ValueError(f"phi={phi} must be < n_nodes={part.n_nodes}")
+    ct = part.col_tiles
+    n = part.n_nodes
+
+    # receives[t, l]: node l needs tile t for its local rows (I_{s,l} union).
+    receives = np.zeros((ct, n), bool)
+    for l, tiles in enumerate(a.needed_col_tiles(part)):
+        receives[tiles, l] = True
+    owner = part.owner_of_col_tile(np.arange(ct))
+    receives[np.arange(ct), owner] = False          # I_{s,s} := ∅ (paper §2.2.1)
+
+    m = receives.sum(axis=1)                        # multiplicity m(t)
+    holders = receives.copy()
+    holders[np.arange(ct), owner] = True            # owner's own copy
+
+    extra_sends: list[list[np.ndarray]] = []
+    extra_total = 0
+    for s in range(n):
+        lo, hi = part.node_col_tiles(s)
+        tiles = np.arange(lo, hi)
+        dests = neighbors(s, phi, n)
+        g = np.zeros(hi - lo, np.int64)
+        for d in set(dests):
+            g += receives[tiles, d]
+        per_k = []
+        for k in range(1, phi + 1):
+            d = dests[k - 1]
+            sel = (~receives[tiles, d]) & (d != s) & (m[tiles] - g <= phi - k)
+            extra = tiles[sel]
+            per_k.append(extra)
+            holders[extra, d] = True
+            extra_total += extra.size
+        extra_sends.append(per_k)
+
+    plan = RedundancyPlan(part=part, phi=phi, holders=holders,
+                          extra_sends=extra_sends,
+                          natural_tiles_sent=int(receives.sum()),
+                          extra_tiles_sent=extra_total)
+    plan.verify()
+    return plan

@@ -1,0 +1,258 @@
+"""Resilient-solve orchestration: run → (inject failure) → recover → converge.
+
+Mirrors the paper's experimental protocol (§4-§5): one node-failure event per
+run, injected at a marked iteration (the driver lands exactly on it), failed
+nodes zero out all their dynamic data and then act as their own replacements.
+Reported quantities match the paper's tables: total runtime, reconstruction
+overhead, wasted iterations, converged iteration count, and residual drift
+(Eq. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import esr, esrp, imcr
+from repro.core.aspmv import RedundancyPlan, build_plan
+from repro.core.failures import failed_row_mask, zero_failed
+from repro.core.pcg import PCGState, pcg_iterate, residual_drift
+from repro.sparse.matrices import Problem
+
+
+@dataclasses.dataclass
+class SolveReport:
+    strategy: str
+    T: int
+    phi: int
+    converged_iter: int
+    rel_residual: float
+    runtime_s: float
+    recovery_s: float            # reconstruction ops only (paper's metric)
+    wasted_iters: int            # rollback distance
+    target_iter: int             # reconstruction point (-1 = restart)
+    inner_rel: float             # Alg.2 line-8 inner-solve relative residual
+    drift: float                 # paper Eq. (2)
+    aspmv_natural_bytes: int = 0
+    aspmv_total_bytes: int = 0
+
+
+def _find_convergence(norms: np.ndarray, thresh: float) -> int:
+    """Index of first iteration with ||r|| < thresh, or -1."""
+    below = np.nonzero(norms < thresh)[0]
+    return int(below[0]) if below.size else -1
+
+
+def solve_resilient(
+    problem: Problem,
+    strategy: str = "esrp",            # "esrp" | "imcr" | "none"
+    T: int = 20,
+    phi: int = 1,
+    rtol: float = 1e-8,
+    max_iters: int = 100_000,
+    fail_at: Optional[int] = None,     # iteration J struck by the failure
+    failed_nodes: Optional[list[int]] = None,
+    matvec: Optional[Callable] = None,
+    chunk: int = 64,
+    rr_every: int = 0,                 # residual replacement period (0 = off)
+) -> SolveReport:
+    matvec = matvec or problem.a.matvec
+    precond = problem.apply_precond
+    b = problem.b
+    thresh = rtol * float(jnp.linalg.norm(b))
+    part = problem.part
+
+    plan: Optional[RedundancyPlan] = None
+    if strategy == "esrp":
+        plan = build_plan(problem.a, part, phi)   # static, verified φ+1 copies
+
+    if strategy == "imcr":
+        st = imcr.imcr_init(matvec, precond, b)
+        run = lambda s, n: imcr.run_chunk(s, matvec, precond, T, phi,
+                                          part.rows_per_node, n)
+        get_pcg = lambda s: s.pcg
+    elif strategy == "esrp":
+        st = esrp.esrp_init(matvec, precond, b)
+        run = lambda s, n: esrp.run_chunk(s, matvec, precond, T, n,
+                                          b=b, rr_every=rr_every)
+        get_pcg = lambda s: s.pcg
+    elif strategy == "none":
+        st = esrp.esrp_init(matvec, precond, b)   # T=max => never stores
+        run = lambda s, n: esrp.run_chunk(s, matvec, precond, 1 << 30, n,
+                                          b=b, rr_every=rr_every)
+        get_pcg = lambda s: s.pcg
+    else:
+        raise ValueError(strategy)
+
+    recovery_s = 0.0
+    wasted = 0
+    target = -2
+    inner_rel = float("nan")
+    pending_fail = fail_at is not None
+
+    t0 = time.perf_counter()
+    total_iters = 0
+    resume_numeric_only = False
+    while True:
+        if resume_numeric_only:
+            # post-recovery: re-run the reconstruction-point iteration without
+            # its storage prelude (its push already happened pre-failure).
+            pcg = get_pcg(st)
+            pcg = pcg_iterate(pcg, matvec(pcg.p), precond)
+            st = st._replace(pcg=pcg)
+            total_iters = int(pcg.j)
+            resume_numeric_only = False
+            if float(jnp.linalg.norm(pcg.r)) < thresh:
+                break
+            continue
+
+        n = chunk
+        if pending_fail:
+            n = min(n, fail_at - total_iters)
+        if n > 0:
+            prev = st
+            st, norms = run(st, n)
+            norms = np.asarray(norms)
+            hit = _find_convergence(norms, thresh)
+            if hit >= 0:
+                # rerun the tail precisely up to convergence
+                st, _ = run(prev, hit + 1)
+                total_iters += hit + 1
+                break
+            total_iters += n
+        if total_iters >= max_iters:
+            break
+
+        if pending_fail and total_iters == fail_at:
+            pending_fail = False
+            failed = sorted(failed_nodes or [0])
+            if strategy == "imcr":
+                st, wasted, target, rec_t = _imcr_failure(
+                    st, part, failed, phi, matvec, precond, b)
+            else:
+                st, wasted, target, inner_rel, rec_t = _esrp_failure(
+                    problem, plan, st, failed, T, matvec)
+            recovery_s += rec_t
+            total_iters = int(get_pcg(st).j)
+            resume_numeric_only = target >= 0
+    runtime = time.perf_counter() - t0
+
+    pcg = get_pcg(st)
+    jax.block_until_ready(pcg.x)
+    drift = float(residual_drift(matvec, b, pcg.x, pcg.r))
+    rel = float(jnp.linalg.norm(pcg.r)) / float(jnp.linalg.norm(b))
+    nat_bytes = tot_bytes = 0
+    if plan is not None:
+        nat_bytes, tot_bytes = plan.bytes_per_aspmv(np.dtype(problem.b.dtype).itemsize)
+    return SolveReport(
+        strategy=strategy, T=T, phi=phi, converged_iter=total_iters,
+        rel_residual=rel, runtime_s=runtime, recovery_s=recovery_s,
+        wasted_iters=wasted, target_iter=target, inner_rel=inner_rel,
+        drift=drift, aspmv_natural_bytes=nat_bytes, aspmv_total_bytes=tot_bytes)
+
+
+# --------------------------------------------------------------------------- #
+def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
+                  failed: list[int], T: int, matvec):
+    """Failure strikes during iteration J right after its (A)SpMV: run the
+    iteration-J storage prelude, zero the failed nodes' dynamic data, then
+    reconstruct (Alg. 2) and rebuild a consistent post-stage ESRP state."""
+    part = problem.part
+    J = int(st.pcg.j)
+    st = jax.jit(esrp.esrp_prelude, static_argnums=1)(st, T)
+
+    # --- the failure: all dynamic data on failed nodes is lost -------------
+    mask = failed_row_mask(part, failed)
+    lose = lambda v: zero_failed(v, mask)
+    pcg = st.pcg._replace(x=lose(st.pcg.x), r=lose(st.pcg.r),
+                          z=lose(st.pcg.z), p=lose(st.pcg.p))
+    st = st._replace(pcg=pcg, x_s=lose(st.x_s), r_s=lose(st.r_s),
+                     z_s=lose(st.z_s), p_s=lose(st.p_s))
+
+    # redundant copies survive iff a holder outlives the failure
+    col_tiles = np.unique(np.concatenate(
+        [np.arange(*part.node_col_tiles(s)) for s in failed]))
+    if not plan.survives(np.array(failed))[col_tiles].all():
+        raise RuntimeError(
+            f"{len(failed)} simultaneous failures exceed phi={plan.phi}")
+
+    target, prev_slot, curr_slot = esrp.recovery_point(st, T)
+    if target < 0:
+        # before the first completed storage stage: restart from scratch
+        st2 = esrp.esrp_init(matvec, problem.apply_precond, problem.b)
+        return st2, J, -1, float("nan"), 0.0
+
+    if T == 1:
+        # ESR: no rollback — reconstruct the *live* iteration J from the
+        # surviving r, x and the replicated scalar β^(J-1) (paper §2.3)
+        r_surv, x_surv, z_surv, p_surv = pcg.r, pcg.x, pcg.z, pcg.p
+        beta_prev = pcg.beta
+    else:
+        r_surv, x_surv, z_surv, p_surv = st.r_s, st.x_s, st.z_s, st.p_s
+        beta_prev = st.beta_s
+
+    # static-data reload (excluded from the recovery timing, paper §4) —
+    # cached per (problem, failed-set) so repeated benchmark runs also reuse
+    # the jitted inner solve (a C framework has no JIT warmup; timing it
+    # would misattribute compilation to the paper's reconstruction cost)
+    cache = getattr(problem, "_recon_cache", None)
+    if cache is None:
+        cache = {}
+        problem._recon_cache = cache
+    key = tuple(failed)
+    if key not in cache:
+        ops = esr.ReconstructionOps.build(problem, failed)
+        # warm the jitted reconstruction (compile excluded from timing)
+        esr.reconstruct(ops, p_prev=st.q[prev_slot], p_curr=st.q[curr_slot],
+                        beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv
+                        )[0].block_until_ready()
+        cache[key] = ops
+    ops = cache[key]
+    t0 = time.perf_counter()
+    x_f, r_f, z_f, inner_rel = esr.reconstruct(
+        ops, p_prev=st.q[prev_slot], p_curr=st.q[curr_slot],
+        beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv)
+    f_rows = jnp.asarray(ops.f_rows)
+    x = x_surv.at[f_rows].set(x_f)
+    r = r_surv.at[f_rows].set(r_f)
+    z = z_surv.at[f_rows].set(z_f)
+    p = p_surv.at[f_rows].set(st.q[curr_slot][f_rows])
+    rz = r @ z
+    jax.block_until_ready(x)
+    rec_t = time.perf_counter() - t0
+
+    new_pcg = PCGState(x=x, r=r, z=z, p=p, rz=rz, beta=beta_prev,
+                       j=jnp.asarray(target, jnp.int32))
+    empty = jnp.zeros_like(p)
+    st2 = esrp.ESRPState(
+        pcg=new_pcg,
+        q=jnp.stack([empty, st.q[prev_slot], st.q[curr_slot]]),
+        q_tags=jnp.asarray([-1, target - 1, target], jnp.int32),
+        x_s=x, r_s=r, z_s=z, p_s=p, beta_s=beta_prev, rz_s=rz,
+        star_tag=jnp.asarray(target, jnp.int32))
+    return st2, J - target, target, float(inner_rel), rec_t
+
+
+def _imcr_failure(st: imcr.IMCRState, part, failed: list[int], phi: int,
+                  matvec, precond, b):
+    """IMCR: zero the failed nodes' live data, then everyone rolls back to the
+    last checkpoint (replacements fetch their parts from surviving buddies)."""
+    J = int(st.pcg.j)
+    if len(failed) > phi:
+        raise RuntimeError(f"{len(failed)} failures exceed phi={phi}")
+    mask = failed_row_mask(part, failed)
+    lose = lambda v: zero_failed(v, mask)
+    st = st._replace(pcg=st.pcg._replace(
+        x=lose(st.pcg.x), r=lose(st.pcg.r), z=lose(st.pcg.z), p=lose(st.pcg.p)))
+    tag = int(st.ck_tag)
+    if tag < 0:                      # failure before the first checkpoint
+        return imcr.imcr_init(matvec, precond, b), J, -1, 0.0
+    t0 = time.perf_counter()
+    pcg = imcr.recover(st)           # fetch-from-buddy (restore the copies)
+    jax.block_until_ready(pcg.x)
+    rec_t = time.perf_counter() - t0
+    return st._replace(pcg=pcg), J - tag, tag, rec_t

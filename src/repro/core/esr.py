@@ -1,0 +1,123 @@
+"""Exact state reconstruction — paper Alg. 2, run on the replacement nodes.
+
+Given the two latest redundantly-stored search directions p^(j-1), p^(j), the
+replicated scalar β^(j-1), and the surviving parts of r^(j), x^(j), rebuild
+the failed nodes' entries of z, r, x *exactly* (up to fp perturbation):
+
+  line 4:  z_f = p_f^(j) − β^(j-1) p_f^(j-1)
+  line 5:  v  = z_f − P_{f,I\f} r_{I\f}          (block-Jacobi ⇒ P offdiag = 0)
+  line 6:  solve P_ff r_f = v                     (block-diagonal ⇒ r_f = A_bb v)
+  line 7:  w  = b_f − r_f − A_{f,I\f} x_{I\f}
+  line 8:  solve A_ff x_f = w                     (inner PCG @ rtol 1e-14,
+                                                   block-Jacobi precond — §5)
+
+Static data (A rows, P blocks, b entries of the failed nodes) is rebuilt from
+the problem's host-side COO — the paper's "retrieve from safe storage".
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import failures
+from repro.core.pcg import run_pcg
+from repro.sparse.blockell import BlockEll
+from repro.sparse.matrices import Problem
+
+
+@dataclasses.dataclass
+class ReconstructionOps:
+    """Static per-(problem, failed-set) operators, built once per failure.
+
+    In a real cluster this assembly happens on the replacement nodes from
+    safe storage; it is therefore *not* part of the solver's dynamic state.
+    """
+
+    problem: Problem
+    failed: list[int]
+    mask: np.ndarray                 # (M,) bool over I_f
+    f_rows: np.ndarray               # sorted global indices I_f
+    a_rows_f: BlockEll               # A_{I_f, I}        (|I_f| x M strip)
+    a_ff: BlockEll                   # A_{I_f, I_f}      (compact)
+    diag_f: jax.Array                # (|I_f|/b, b, b) raw diag blocks (= P_ff^{-1})
+    pinv_f: jax.Array                # (|I_f|/b, b, b) inverse blocks (A_ff precond)
+    b_f: jax.Array
+    precond_f: object = None         # stable closure: jitted inner solves
+    #                                  must see the same callable each call
+
+    @staticmethod
+    def build(problem: Problem, failed: list[int]) -> "ReconstructionOps":
+        part = problem.part
+        failed = sorted(failed)
+        mask = failures.failed_row_mask(part, failed)
+        f_rows = failures.failed_rows(part, failed)
+        to_compact = failures.compact_map(part, failed)
+
+        rows, cols, vals = problem.coo
+        in_f_rows = mask[rows]
+        # A_{I_f, I}: compact rows, global cols
+        r_sel = rows[in_f_rows]
+        a_rows_f = BlockEll.from_coo(
+            to_compact(r_sel), cols[in_f_rows], vals[in_f_rows],
+            m=part.m, bm=part.bm, bn=part.bn, dtype=np.asarray(vals).dtype)
+        # from_coo builds square-shape metadata; fix the row extent
+        nf = f_rows.size
+        rt = nf // part.bm
+        a_rows_f = BlockEll(a_rows_f.data[:rt], a_rows_f.idx[:rt],
+                            a_rows_f.nblk[:rt], (nf, part.m), part.bm, part.bn)
+
+        in_ff = in_f_rows & mask[cols]
+        a_ff = BlockEll.from_coo(
+            to_compact(rows[in_ff]), to_compact(cols[in_ff]), vals[in_ff],
+            m=nf, bm=part.bm, bn=part.bn, dtype=np.asarray(vals).dtype)
+
+        b_blk = problem.precond_block
+        blk_ids = np.unique(f_rows // b_blk)
+        pinv_f = problem.pinv_blocks[blk_ids]
+
+        def precond_f(r, _pinv=pinv_f, _b=b_blk):
+            return jnp.einsum("nij,nj->ni", _pinv,
+                              r.reshape(-1, _b)).reshape(-1)
+
+        return ReconstructionOps(
+            problem=problem, failed=failed, mask=mask, f_rows=f_rows,
+            a_rows_f=a_rows_f, a_ff=a_ff,
+            diag_f=problem.diag_blocks[blk_ids],
+            pinv_f=pinv_f,
+            b_f=problem.b[f_rows], precond_f=precond_f)
+
+
+def reconstruct(ops: ReconstructionOps, *, p_prev: jax.Array, p_curr: jax.Array,
+                beta_prev: jax.Array, r_surv: jax.Array, x_surv: jax.Array,
+                inner_rtol: float = 1e-14, inner_max_iters: int = 20_000):
+    """Run Alg. 2. Inputs are full-length vectors; only surviving (resp.
+    redundant-copy) entries are read, enforced by masking. Returns the failed
+    nodes' compact (x_f, r_f, z_f) plus the inner-solve relative residual.
+    """
+    mask = jnp.asarray(ops.mask)
+    f_rows = jnp.asarray(ops.f_rows)
+    b = ops.problem.precond_block
+
+    p_prev_f = p_prev[f_rows]
+    p_curr_f = p_curr[f_rows]
+    z_f = p_curr_f - beta_prev * p_prev_f                       # line 4
+    v = z_f                                                     # line 5
+    r_f = jnp.einsum("nij,nj->ni", ops.diag_f,
+                     v.reshape(-1, b)).reshape(-1)               # line 6
+
+    x_masked = jnp.where(mask, jnp.zeros_like(x_surv), x_surv)  # x_{I\f} only
+    w = ops.b_f - r_f - ops.a_rows_f.matvec(x_masked)           # line 7
+
+    state, rel = run_pcg(ops.a_ff.matvec, ops.precond_f, w,
+                         rtol=inner_rtol, max_iters=inner_max_iters)  # line 8
+    return state.x, r_f, z_f, rel
+
+
+def scatter_failed(full_surv: jax.Array, compact_f: jax.Array,
+                   ops: ReconstructionOps) -> jax.Array:
+    """Merge reconstructed failed entries into the surviving vector."""
+    return full_surv.at[jnp.asarray(ops.f_rows)].set(compact_f)

@@ -1,0 +1,155 @@
+"""ESR with periodic storage (ESRP) — paper §3, Alg. 3.
+
+The storage stage runs the augmented SpMV in two consecutive iterations every
+T iterations (j ≡ 0 and j ≡ 1 mod T, j > 2) and pushes the current search
+direction into a queue of THREE redundant copies, so that a failure landing
+after the first push of a stage still finds two *consecutive* directions from
+the previous stage (Fig. 1). At the second push each node also duplicates its
+local x, r, z, p and the replicated β — the rollback anchor for survivors.
+
+Implementation notes (vs. the paper listing):
+  * The SpMV and ASpMV produce the *same numbers*; ASpMV only adds redundancy
+    traffic. We therefore always compute q = A·p once and gate only the
+    bookkeeping on the schedule — the failure-free trajectory is bit-identical
+    to plain PCG (the paper's trajectory-identity property, tested).
+  * β capture: the paper stages β through β** (line 6) and commits at line 10.
+    Entering the *second* storage iteration j₀+1, the live β variable already
+    holds β^(j₀) — exactly the value Alg. 2 needs to reconstruct iteration
+    j₀+1 — so we capture β* := β directly at the second push. This is
+    equivalent to the β**/β* two-phase dance (the paper needs it only because
+    its listing captures *before* the iteration-j₀ β update) and is covered by
+    the mid-stage failure tests.
+  * With T = 1 both schedule conditions hold every iteration; only the push
+    branch runs and recovery reads the *live* state — that is exactly ESR
+    (paper §3: "For T = 1 ... corresponds to regular ESR").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pcg import PCGState, pcg_init, pcg_iterate
+
+
+class ESRPState(NamedTuple):
+    pcg: PCGState
+    q: jax.Array          # (3, M) redundant copies of p (newest = slot 2)
+    q_tags: jax.Array     # (3,) int32 iteration of each copy, -1 = empty
+    x_s: jax.Array        # starred locals (rollback anchor), iteration j*
+    r_s: jax.Array
+    z_s: jax.Array
+    p_s: jax.Array
+    beta_s: jax.Array     # β* = β^(j*-1)
+    rz_s: jax.Array       # r*ᵀz* (avoids a recompute on rollback)
+    star_tag: jax.Array   # j*, -1 = none
+
+
+def esrp_init(matvec: Callable, precond: Callable, b: jax.Array,
+              x0: jax.Array | None = None) -> ESRPState:
+    pcg = pcg_init(matvec, precond, b, x0)
+    z = jnp.zeros_like(b)
+    return ESRPState(
+        pcg=pcg,
+        q=jnp.zeros((3,) + b.shape, b.dtype),
+        q_tags=jnp.full((3,), -1, jnp.int32),
+        x_s=z, r_s=z, z_s=z, p_s=z,
+        beta_s=jnp.zeros((), b.dtype), rz_s=jnp.zeros((), b.dtype),
+        star_tag=jnp.full((), -1, jnp.int32))
+
+
+def storage_flags(j: jax.Array, T: int):
+    """(push?, star?) for iteration j — Alg. 3 lines 4/7 schedule."""
+    if T == 1:                      # ESR: push every iteration, no stars
+        return j > 2, jnp.zeros((), bool)
+    push1 = (j % T == 0) & (j > 2)
+    push2 = ((j - 1) % T == 0) & (j > 2)
+    return push1 | push2, push2
+
+
+def push_queue(st: ESRPState, tag: jax.Array) -> ESRPState:
+    """ASpMV side effect: rotate the queue-of-3, newest copy = current p."""
+    q = jnp.concatenate([st.q[1:], st.pcg.p[None]], axis=0)
+    tags = jnp.concatenate([st.q_tags[1:], tag[None]])
+    return st._replace(q=q, q_tags=tags)
+
+
+def capture_stars(st: ESRPState, tag: jax.Array) -> ESRPState:
+    """Second storage iteration: duplicate locals (Alg. 3 lines 9-10).
+
+    Entering iteration j the live fields are x^(j), r^(j), z^(j), p^(j) and
+    beta = β^(j-1) — precisely the reconstruction point's requirements.
+    """
+    p = st.pcg
+    return st._replace(x_s=p.x, r_s=p.r, z_s=p.z, p_s=p.p,
+                       beta_s=p.beta, rz_s=p.rz, star_tag=tag)
+
+
+def esrp_prelude(st: ESRPState, T: int) -> ESRPState:
+    """The storage bookkeeping of iteration j (everything that happens at the
+    (A)SpMV point, *before* the numeric update). Split out so the failure
+    driver can inject a failure exactly mid-iteration, after the push."""
+    j = st.pcg.j
+    push, star = storage_flags(j, T)
+    st = jax.tree.map(
+        lambda a, b: jnp.where(push, a, b), push_queue(st, j), st)
+    st = jax.tree.map(
+        lambda a, b: jnp.where(star, a, b), capture_stars(st, j), st)
+    return st
+
+
+def esrp_step(st: ESRPState, matvec: Callable, precond: Callable,
+              T: int, b: jax.Array | None = None,
+              rr_every: int = 0) -> ESRPState:
+    """One full ESRP iteration: bookkeeping + the PCG update (Alg. 3 body).
+
+    rr_every > 0 enables *residual replacement* [van der Vorst & Ye '00 —
+    the drift mechanism the paper's Eq. 2 measures]: every rr_every
+    iterations the recursive residual is replaced by the true b - A x (and
+    z, rz, p's conjugation base refresh accordingly), keeping the Eq. 2
+    drift near zero at the cost of one extra SpMV per period. Extension
+    beyond the paper (its §"Accuracy of the experiments" discusses but does
+    not implement replacement)."""
+    st = esrp_prelude(st, T)
+    q_vec = matvec(st.pcg.p)
+    pcg = pcg_iterate(st.pcg, q_vec, precond)
+    if rr_every > 0 and b is not None:
+        do = (pcg.j % rr_every == 0) & (pcg.j > 0)
+        r_true = b - matvec(pcg.x)
+        z_true = precond(r_true)
+        rz_true = r_true @ z_true
+        pcg_rr = pcg._replace(r=r_true, z=z_true, rz=rz_true)
+        pcg = jax.tree.map(lambda a_, b_: jnp.where(do, a_, b_), pcg_rr, pcg)
+    return st._replace(pcg=pcg)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 6))
+def run_chunk(st: ESRPState, matvec: Callable, precond: Callable, T: int,
+              n_iters: int, b: jax.Array | None = None, rr_every: int = 0):
+    """Run n_iters ESRP iterations, recording ||r|| after each (the paper
+    checks convergence every iteration; the driver scans the record)."""
+
+    def body(s, _):
+        s = esrp_step(s, matvec, precond, T, b=b, rr_every=rr_every)
+        return s, jnp.linalg.norm(s.pcg.r)
+
+    return jax.lax.scan(body, st, None, length=n_iters)
+
+
+def recovery_point(st: ESRPState, T: int):
+    """Which iteration can be reconstructed from the queue?
+
+    Returns (target_iter, prev_slot, curr_slot); target -1 if unrecoverable
+    (failure before the first completed storage stage — driver restarts).
+    Newest consecutive pair wins: (1,2) if tags[2] == tags[1]+1 else (0,1)
+    if tags[1] == tags[0]+1 (the Fig. 1 queue states, incl. the mid-stage
+    case where the newest copy has no consecutive partner yet).
+    """
+    t = [int(x) for x in st.q_tags]
+    if t[2] >= 0 and t[2] == t[1] + 1:
+        return t[2], 1, 2
+    if t[1] >= 0 and t[1] == t[0] + 1:
+        return t[1], 0, 1
+    return -1, -1, -1

@@ -1,0 +1,47 @@
+"""Node-failure simulation (paper §4).
+
+A node failure zeroes *all dynamic data* owned by the failed nodes (their
+entries of x, r, z, p, the starred locals, and their replicated scalars) —
+exactly the paper's simulation protocol: "the nodes set to fail zero-out all
+their vector entries, as well as the scalars they contain". Static data
+(matrix, preconditioner, b) is reloadable from safe storage and is never
+touched. The failed nodes also act as their own replacements (paper §4).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sparse.partition import Partition
+
+
+def failed_row_mask(part: Partition, failed: list[int]) -> np.ndarray:
+    """(M,) bool — True on indices I_f owned by the failed nodes."""
+    mask = np.zeros(part.m, bool)
+    for s in failed:
+        lo, hi = part.node_rows(s)
+        mask[lo:hi] = True
+    return mask
+
+
+def failed_rows(part: Partition, failed: list[int]) -> np.ndarray:
+    """Concatenated (sorted) global row indices I_f."""
+    return np.concatenate([np.arange(*part.node_rows(s)) for s in sorted(failed)])
+
+
+def compact_map(part: Partition, failed: list[int]):
+    """Map global indices in I_f -> compact [0, |I_f|) (for A_ff assembly)."""
+    failed = sorted(failed)
+    starts = np.array([part.node_rows(s)[0] for s in failed])
+    r = part.rows_per_node
+
+    def to_compact(idx: np.ndarray) -> np.ndarray:
+        node_pos = np.searchsorted(starts, idx, side="right") - 1
+        return node_pos * r + (idx - starts[node_pos])
+
+    return to_compact
+
+
+def zero_failed(vec: jnp.ndarray, mask: np.ndarray) -> jnp.ndarray:
+    """Lose the failed nodes' entries of a distributed vector."""
+    return jnp.where(jnp.asarray(mask), jnp.zeros_like(vec), vec)

@@ -1,0 +1,132 @@
+"""Buddy-redundancy primitives over the FSDP axis (paper Eq. 1 on a mesh).
+
+A "node" here is a position along the FSDP sharding axis. ``buddy_push``
+produces, for each k in 1..phi, a pytree whose shard at rank ``d_{s,k}``
+holds rank s's data — realized as ``jnp.roll`` along each leaf's sharded
+dimension, which GSPMD lowers to a ``collective-permute`` ring hop: the
+physical buddy send of the paper's IMCR / the moment push of our ESRP
+trainer. Recovery reads failed rank f's content from buf k at slice
+``d_{f,k}`` of the *rolled* tree, i.e. the surviving buddy's memory.
+
+Shard-dim selection: the first dimension whose logical spec names "fsdp"
+(falling back to the first dim divisible by the axis size). Scalars and
+replicated leaves need no redundancy (they survive on any rank, like the
+paper's replicated beta).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sparse.partition import neighbor
+
+
+def _fsdp_dim(spec: Optional[P], arr, n_ranks: int) -> Optional[int]:
+    if spec is not None:
+        for i, ax in enumerate(spec):
+            names = (ax,) if isinstance(ax, str) else tuple(ax or ())
+            if "fsdp" in names:
+                return i if arr.shape[i] % n_ranks == 0 else None
+    for i, d in enumerate(arr.shape):
+        if d % n_ranks == 0 and d >= n_ranks:
+            return i
+    return None
+
+
+def shard_slice(arr, dim: int, rank: int, n_ranks: int):
+    size = arr.shape[dim] // n_ranks
+    idx = [slice(None)] * arr.ndim
+    idx[dim] = slice(rank * size, (rank + 1) * size)
+    return tuple(idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class BuddyPlan:
+    """Static layout: per-leaf shard dims + ring neighbours."""
+    n_ranks: int
+    phi: int
+    dims: tuple          # flat tuple of per-leaf shard dim (or None)
+    treedef: object
+
+    @staticmethod
+    def build(tree, specs, n_ranks: int, phi: int) -> "BuddyPlan":
+        leaves, treedef = jax.tree.flatten(tree)
+        if specs is None:
+            spec_leaves = [None] * len(leaves)
+        else:
+            spec_leaves = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P))
+        dims = tuple(_fsdp_dim(s, a, n_ranks)
+                     for s, a in zip(spec_leaves, leaves))
+        return BuddyPlan(n_ranks, phi, dims, treedef)
+
+    # ------------------------------------------------------------------ #
+    def push(self, tree, dtype=None):
+        """phi rolled copies: copy k's shard at rank d_{s,k} = rank s's data.
+        Optionally down-cast (compressed redundancy, beyond-paper)."""
+        leaves = jax.tree.flatten(tree)[0]
+        out = []
+        for k in range(1, self.phi + 1):
+            # receiving rank d = neighbor(s, k): shift = d - s
+            shift = ((k + 1) // 2) if k % 2 == 1 else -(k // 2)
+            rolled = []
+            for leaf, dim in zip(leaves, self.dims):
+                if dim is None:
+                    rolled.append(leaf)         # replicated: survives anyway
+                    continue
+                size = leaf.shape[dim] // self.n_ranks
+                r = jnp.roll(leaf, shift * size, axis=dim)
+                rolled.append(r.astype(dtype) if dtype else r)
+            out.append(jax.tree.unflatten(self.treedef, rolled))
+        return out
+
+    def lose(self, tree, failed: list[int]):
+        """Failure simulation: zero the failed ranks' shards (paper §4)."""
+        leaves = jax.tree.flatten(tree)[0]
+        out = []
+        for leaf, dim in zip(leaves, self.dims):
+            if dim is None:
+                out.append(leaf)
+                continue
+            for f in failed:
+                sl = shard_slice(leaf, dim, f, self.n_ranks)
+                leaf = leaf.at[sl].set(0)
+            out.append(leaf)
+        return jax.tree.unflatten(self.treedef, out)
+
+    def recover(self, lost_tree, buddies: list, failed: list[int],
+                dtype_tree=None):
+        """Rebuild failed shards from surviving buddies' buffers."""
+        failed_set = set(failed)
+        if len(failed) > self.phi:
+            raise RuntimeError(
+                f"{len(failed)} simultaneous failures exceed phi={self.phi}")
+        lost_leaves = jax.tree.flatten(lost_tree)[0]
+        buddy_leaves = [jax.tree.flatten(b)[0] for b in buddies]
+        out = list(lost_leaves)
+        for f in failed:
+            k_ok = next(k for k in range(1, self.phi + 1)
+                        if neighbor(f, k, self.n_ranks) not in failed_set)
+            d = neighbor(f, k_ok, self.n_ranks)
+            for i, dim in enumerate(self.dims):
+                if dim is None:
+                    continue
+                src = buddy_leaves[k_ok - 1][i]
+                sl_d = shard_slice(src, dim, d, self.n_ranks)
+                sl_f = shard_slice(out[i], dim, f, self.n_ranks)
+                out[i] = out[i].at[sl_f].set(
+                    src[sl_d].astype(out[i].dtype))
+        return jax.tree.unflatten(self.treedef, out)
+
+    def bytes_per_push(self, tree) -> int:
+        """Per-push communication volume (for the overhead model)."""
+        total = 0
+        for leaf, dim in zip(jax.tree.flatten(tree)[0], self.dims):
+            if dim is not None:
+                total += leaf.size * leaf.dtype.itemsize
+        return total * self.phi

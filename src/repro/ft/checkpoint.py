@@ -1,0 +1,65 @@
+"""Disk checkpointing (the outer layer of defense, below ESRP in frequency).
+
+In the paper's framing: ESRP handles node failures within a job (in-memory,
+cheap, every T steps); disk checkpoints handle full-job loss (rare, slow,
+every T_disk >> T steps). Plain npz + a json manifest per save — no external
+checkpoint library in this environment. Arrays are saved device-host via
+numpy; restore returns numpy arrays that jax consumes directly (sharding is
+re-applied by the caller's jit in_shardings).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, **trees) -> None:
+    """save(dir, step, params=..., opt=...). Atomic via rename."""
+    os.makedirs(path, exist_ok=True)
+    tmp = os.path.join(path, f".tmp_step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "trees": {}}
+    for name, tree in trees.items():
+        leaves, treedef = _flatten(tree)
+        np.savez(os.path.join(tmp, f"{name}.npz"),
+                 **{f"leaf_{i}": np.asarray(a) for i, a in enumerate(leaves)})
+        manifest["trees"][name] = {
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(path, f"step_{step:08d}")
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+
+def latest_step(path: str):
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, templates: dict) -> dict:
+    """templates: {name: pytree with the target structure}. Returns
+    {name: restored pytree} (+ "step")."""
+    d = os.path.join(path, f"step_{step:08d}")
+    out = {"step": step}
+    for name, template in templates.items():
+        data = np.load(os.path.join(d, f"{name}.npz"))
+        leaves, treedef = _flatten(template)
+        restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
+        out[name] = jax.tree_util.tree_unflatten(treedef, restored)
+    return out

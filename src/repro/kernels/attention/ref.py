@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (BH, Sq, dh); k, v: (BH, Skv, dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / np.sqrt(dh)
+    sq, skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(sq)[:, None] + (skv - sq if causal else 0)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

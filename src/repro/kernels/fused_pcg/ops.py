@@ -1,0 +1,17 @@
+"""Dispatch wrapper for the fused PCG update."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fused_pcg.fused_pcg import fused_pcg_update
+from repro.kernels.fused_pcg.ref import fused_pcg_update_ref
+
+
+def pcg_update(alpha, x, r, p, q, pinv_blocks, *, backend: str = "auto",
+               rows: int = 256):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return fused_pcg_update_ref(alpha, x, r, p, q, pinv_blocks)
+    return fused_pcg_update(alpha, x, r, p, q, pinv_blocks, rows=rows,
+                            interpret=(backend == "interpret"))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused PCG update."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_pcg_update_ref(alpha, x, r, p, q, pinv_blocks):
+    x_new = x + alpha * p
+    r_new = r - alpha * q
+    nb, b, _ = pinv_blocks.shape
+    z_new = jnp.einsum("nij,nj->ni", pinv_blocks,
+                       r_new.reshape(nb, b)).reshape(-1)
+    return x_new, r_new, z_new, r_new @ z_new

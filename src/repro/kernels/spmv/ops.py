@@ -1,0 +1,20 @@
+"""Jit'd dispatch wrapper: Pallas kernel on TPU, interpret-mode kernel for
+validation, jnp oracle as the default CPU path."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.spmv.ref import spmv_ref
+from repro.kernels.spmv.spmv import spmv as spmv_pallas
+from repro.sparse.blockell import BlockEll
+
+
+def blockell_matvec(a: BlockEll, x: jax.Array, *, backend: str = "auto"):
+    """backend: "auto" (pallas on TPU else jnp), "pallas", "interpret",
+    "jnp"."""
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if backend == "jnp":
+        return spmv_ref(a.data, a.idx, x)
+    return spmv_pallas(a.data, a.idx, x,
+                       interpret=(backend == "interpret"))

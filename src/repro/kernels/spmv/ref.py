@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Block-ELL SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ref(data: jax.Array, idx: jax.Array, x: jax.Array) -> jax.Array:
+    """data: (rt, kmax, bm, bn); idx: (rt, kmax); x: (ct*bn,) -> (rt*bm,)."""
+    rt, kmax, bm, bn = data.shape
+    xb = x.reshape(-1, bn)
+    gathered = xb[idx]                                    # (rt, kmax, bn)
+    out = jnp.einsum("rkij,rkj->ri", data, gathered)
+    return out.reshape(rt * bm)

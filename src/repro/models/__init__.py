@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models.lm import LM
+
+__all__ = ["ModelConfig", "LM"]

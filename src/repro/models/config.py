@@ -1,0 +1,86 @@
+"""Model configuration for the assigned architecture pool.
+
+One dataclass covers all 10 families; the ``block_pattern`` field selects the
+stack layout:
+  "dense"          — homogeneous decoder blocks (attention + FFN)
+  "local_global:K" — K-1 sliding-window layers per 1 global layer (gemma3)
+  "moe"            — dense attention + MoE FFN
+  "mamba_hybrid:K" — Mamba2 blocks with one *shared* attention block applied
+                     after every K Mamba blocks (zamba2)
+  "xlstm:K"        — mLSTM blocks with one sLSTM block every K (xlstm)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # stack layout
+    block_pattern: str = "dense"
+    parallel_block: bool = False          # PaLM/command-r style attn ∥ ffn
+    norm: str = "rmsnorm"                 # "rmsnorm" | "layernorm"
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    window: int = 0                       # sliding window (local layers)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    conv_width: int = 4
+    # xLSTM
+    mlstm_head_dim: int = 0
+    # modality frontend stub: "none" | "vlm" | "audio"
+    frontend: str = "none"
+    n_frontend_tokens: int = 0            # patch/frame embeds prepended
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"                   # "full" | "none"
+    # parallelism profile: "2d" = FSDP x TP (Megatron-style),
+    # "fsdp" = pure ZeRO-3 data parallelism over every mesh axis — for archs
+    # where TP activation all-reduces exceed FSDP param gathers (§Perf cr-1)
+    parallelism: str = "2d"
+    # architecture notes recorded in DESIGN.md
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.block_pattern.startswith("xlstm")
+
+    @property
+    def subquadratic(self) -> bool:
+        return (self.block_pattern.startswith(("mamba_hybrid", "xlstm"))
+                or self.block_pattern.startswith("local_global"))
+
+    def pattern_arg(self, default: int = 0) -> int:
+        if ":" in self.block_pattern:
+            return int(self.block_pattern.split(":")[1])
+        return default
+
+    def padded_vocab(self, multiple: int) -> int:
+        return ((self.vocab + multiple - 1) // multiple) * multiple
+
+    def padded_experts(self, multiple: int) -> int:
+        if self.n_experts == 0:
+            return 0
+        return ((self.n_experts + multiple - 1) // multiple) * multiple

@@ -1,0 +1,219 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, gated MLP.
+
+Pure functions over explicit param pytrees (dicts of arrays) plus a parallel
+tree of *logical* ``PartitionSpec``s produced at init time. Logical axes:
+  "fsdp" — parameter/optimizer sharding axis   (bound to ("pod","data"))
+  "tp"   — tensor parallel axis                (bound to ("model",))
+  "dp"   — activation batch axis               (bound to ("pod","data"))
+  "sp"   — sequence sharding for long KV       (bound to ("data",))
+``sharding.constrain`` applies them with divisibility/conflict fallbacks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import axis_size, constrain
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def norm_init(cfg, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    s = {"scale": P(None)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+        s["bias"] = P(None)
+    return p, s
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        xf = xf - xf.mean(-1, keepdims=True)
+    rms = jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    out = xf * rms * p["scale"].astype(jnp.float32)
+    if kind == "layernorm" and "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------------- #
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention (grouped einsum — KV heads are never materialized H-wide)
+# --------------------------------------------------------------------------- #
+def attention_init(cfg, key, dtype):
+    d, dh = cfg.d_model, cfg.head_dim
+    h, k = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], (d, h * dh), dtype),
+        "wk": dense_init(ks[1], (d, k * dh), dtype),
+        "wv": dense_init(ks[2], (d, k * dh), dtype),
+        "wo": dense_init(ks[3], (h * dh, d), dtype, scale=1.0 / np.sqrt(h * dh)),
+    }
+    specs = {"wq": P("fsdp", "atp"), "wk": P("fsdp", "atp"),
+             "wv": P("fsdp", "atp"), "wo": P("atp", "fsdp")}
+    return params, specs
+
+
+def attention(p, x, cfg, *, positions, window: int = 0,
+              kv_cache=None, cache_pos=None):
+    """GQA attention.
+
+    Train/prefill: x (B,S,d), causal (+ optional sliding ``window``) mask.
+    Decode: x (B,1,d); kv_cache {"k","v"}: (B,S_max,K,Dh), updated in place at
+    cache_pos. Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kh
+    cdt = x.dtype
+
+    # adaptive sharding:
+    #  * flattened attention heads h = kh*g shard over the model axis when
+    #    divisible (covers GQA configs where neither kh nor g alone divides);
+    #  * otherwise the q-sequence dim shards over the model axis;
+    #  * KV caches prefer kv-head sharding, else sequence-over-model
+    #    (flash-decoding split-K: softmax then reduces across the model axis)
+    tp = axis_size("atp")
+    heads_sharded = tp > 1 and h % tp == 0
+    kvh_sharded = tp > 1 and kh % tp == 0
+
+    q = (x @ p["wq"].astype(cdt)).reshape(b, s, kh, g, dh)
+    kx = (x @ p["wk"].astype(cdt)).reshape(b, s, kh, dh)
+    vx = (x @ p["wv"].astype(cdt)).reshape(b, s, kh, dh)
+    q = apply_rope(q.reshape(b, s, h, dh), positions,
+                   cfg.rope_theta).reshape(b, s, kh, g, dh)
+    kx = apply_rope(kx, positions, cfg.rope_theta)
+    q = constrain(q, "dp", None, "atp" if kvh_sharded else None,
+                  "atp" if (heads_sharded and not kvh_sharded) else None, None)
+
+    if kv_cache is not None:
+        kv_axes = ("dp", "sp", "atp", None) if kvh_sharded else \
+                  ("dp", "seqtp", None, None)
+        kv_seq_ax = "sp" if kvh_sharded else "seqtp"
+        zero = jnp.zeros((), jnp.int32)
+        start = (zero, jnp.asarray(cache_pos, jnp.int32), zero, zero)
+        ck = jax.lax.dynamic_update_slice(
+            kv_cache["k"], kx.astype(kv_cache["k"].dtype), start)
+        cv = jax.lax.dynamic_update_slice(
+            kv_cache["v"], vx.astype(kv_cache["v"].dtype), start)
+        ck = constrain(ck, *kv_axes)
+        cv = constrain(cv, *kv_axes)
+        new_cache = {"k": ck, "v": cv}
+        keys, values = ck.astype(cdt), cv.astype(cdt)
+        kv_positions = jnp.arange(ck.shape[1])
+    else:
+        new_cache = None
+        keys, values = kx, vx
+        kv_positions = positions
+        keys = constrain(keys, "dp", "sp",
+                         "atp" if kvh_sharded else None, None)
+        values = constrain(values, "dp", "sp",
+                           "atp" if kvh_sharded else None, None)
+        kv_seq_ax = "sp"
+
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, keys) / np.sqrt(dh)
+    # flatten (kh, g) -> h for the softmax block so the full head count can
+    # shard over the model axis (adjacent-dim merge keeps GSPMD propagation)
+    logits = logits.reshape(b, h, s, keys.shape[1])
+    if heads_sharded:
+        log_axes = ("dp", "atp", None, kv_seq_ax)
+    else:
+        log_axes = ("dp", None, "seqtp", kv_seq_ax)
+    logits = constrain(logits, *log_axes)
+
+    qpos = positions if positions.ndim == 1 else positions.reshape(-1)
+    mask = kv_positions[None, :] <= qpos[:, None]               # causal; also
+    # masks the not-yet-written tail of a decode cache (those slots have
+    # kv_position > current position by construction)
+    if window > 0:
+        mask &= kv_positions[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits.astype(jnp.float32),
+                       jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    probs = constrain(probs, *log_axes)
+    probs = probs.reshape(b, kh, g, s, keys.shape[1])
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, values)
+    out = out.reshape(b, s, h * dh) @ p["wo"].astype(cdt)
+    return constrain(out, "dp", None, None), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# gated MLP (SwiGLU)
+# --------------------------------------------------------------------------- #
+def mlp_init(cfg, key, dtype, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params = {
+        "wi": dense_init(ks[0], (d, f), dtype),
+        "wg": dense_init(ks[1], (d, f), dtype),
+        "wo": dense_init(ks[2], (f, d), dtype, scale=1.0 / np.sqrt(f)),
+    }
+    specs = {"wi": P("fsdp", "atp"), "wg": P("fsdp", "atp"),
+             "wo": P("atp", "fsdp")}
+    return params, specs
+
+
+def mlp(p, x):
+    cdt = x.dtype
+    h = jax.nn.silu(x @ p["wg"].astype(cdt)) * (x @ p["wi"].astype(cdt))
+    h = constrain(h, "dp", None, "atp")
+    return h @ p["wo"].astype(cdt)
+
+
+# --------------------------------------------------------------------------- #
+# dense decoder block
+# --------------------------------------------------------------------------- #
+def dense_block_init(cfg, key, dtype):
+    ka, km = jax.random.split(key, 2)
+    attn_p, attn_s = attention_init(cfg, ka, dtype)
+    mlp_p, mlp_s = mlp_init(cfg, km, dtype)
+    n1, n1s = norm_init(cfg, dtype)
+    n2, n2s = norm_init(cfg, dtype)
+    return ({"attn": attn_p, "mlp": mlp_p, "ln1": n1, "ln2": n2},
+            {"attn": attn_s, "mlp": mlp_s, "ln1": n1s, "ln2": n2s})
+
+
+def dense_block(p, x, cfg, *, positions, window=0, kv_cache=None,
+                cache_pos=None):
+    if cfg.parallel_block:              # command-r style: attn ∥ ffn, one norm
+        hN = apply_norm(p["ln1"], x, cfg.norm)
+        a, cache = attention(p["attn"], hN, cfg, positions=positions,
+                             window=window, kv_cache=kv_cache,
+                             cache_pos=cache_pos)
+        return x + a + mlp(p["mlp"], hN), cache
+    a, cache = attention(p["attn"], apply_norm(p["ln1"], x, cfg.norm), cfg,
+                         positions=positions, window=window,
+                         kv_cache=kv_cache, cache_pos=cache_pos)
+    x = x + a
+    x = x + mlp(p["mlp"], apply_norm(p["ln2"], x, cfg.norm))
+    return x, cache

@@ -1,0 +1,435 @@
+"""LM assembly: stacks, scan-over-layers, train/prefill/decode entry points.
+
+Every architecture is a list of *segments*; each segment is a homogeneous
+stack scanned with ``lax.scan`` over stacked params (keeps HLO size and
+compile time bounded at 512 devices). Heterogeneous patterns become grouped
+segments:
+
+  dense            [("dense", L)]
+  local_global:K   [("lg_group", L//K)] + [("local", L mod K)]   (gemma3)
+  moe              [("moe", L)]
+  mamba_hybrid:K   [("zamba_group", L//K)] + [("mamba", L mod K)] (zamba2;
+                   one *shared* attention block applied per group — single
+                   param set closed over by every group iteration)
+  xlstm:K          [("xlstm_group", L//K)] + mLSTM remainder      (xlstm)
+
+Modality frontends (vlm/audio) are stubs per the assignment: ``input_specs``
+provides precomputed patch/frame embeddings; here they are consumed as-is.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers, moe as moe_mod, ssm, xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+from repro.models.sharding import constrain
+
+PAD_MULTIPLE = 16          # vocab / expert padding multiple (max model-axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str          # dense | local | moe | mamba | lg_group | zamba_group
+    #                  | xlstm_group
+    n: int             # scan length
+    group: int = 0     # inner group size (lg/zamba/xlstm groups)
+
+
+def build_segments(cfg: ModelConfig) -> list[Segment]:
+    pat = cfg.block_pattern
+    L = cfg.n_layers
+    if pat == "dense":
+        return [Segment("dense", L)]
+    if pat == "moe":
+        return [Segment("moe", L)]
+    if pat.startswith("local_global"):
+        k = cfg.pattern_arg(6)
+        segs = [Segment("lg_group", L // k, group=k)]
+        if L % k:
+            segs.append(Segment("local", L % k))
+        return segs
+    if pat.startswith("mamba_hybrid"):
+        k = cfg.pattern_arg(6)
+        segs = [Segment("zamba_group", L // k, group=k)]
+        if L % k:
+            segs.append(Segment("mamba", L % k))
+        return segs
+    if pat.startswith("xlstm"):
+        k = cfg.pattern_arg(4)
+        segs = [Segment("xlstm_group", L // k, group=k)]
+        if L % k:
+            segs.append(Segment("mamba_rem_invalid", L % k))  # should not happen
+        return segs
+    raise ValueError(pat)
+
+
+class LM:
+    """Functional model: ``init`` -> (params, logical specs); apply fns are
+    pure and jit/pjit-friendly."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = build_segments(cfg)
+        self.v_pad = cfg.padded_vocab(PAD_MULTIPLE)
+        self.pdt = jnp.dtype(cfg.param_dtype)
+        self.cdt = jnp.dtype(cfg.compute_dtype)
+
+    # ------------------------------------------------------------------ #
+    # init
+    # ------------------------------------------------------------------ #
+    def _block_init(self, kind: str, key):
+        cfg = self.cfg
+        if kind in ("dense", "local"):
+            return layers.dense_block_init(cfg, key, self.pdt)
+        if kind == "moe":
+            return moe_mod.moe_block_init(cfg, key, self.pdt, PAD_MULTIPLE)
+        if kind == "mamba":
+            return ssm.mamba_residual_init(cfg, key, self.pdt)
+        raise ValueError(kind)
+
+    def _stack(self, init_fn, key, dims: tuple[int, ...]):
+        """vmap ``init_fn`` over a grid of keys. Spec trees (static Python
+        objects) are captured via a trace-time side channel so no concrete
+        init ever runs — ``abstract_init`` works for 100B-scale configs."""
+        cap = {}
+
+        def only_params(k):
+            p, s = init_fn(k)
+            cap["specs"] = s
+            return p
+
+        keys = jax.random.split(key, int(np.prod(dims)))
+        keys = keys.reshape(tuple(dims) + keys.shape[1:])
+        fn = only_params
+        for _ in dims:
+            fn = jax.vmap(fn)
+        return fn(keys), cap["specs"]
+
+    def _segment_init(self, seg: Segment, key):
+        if seg.kind in ("dense", "local", "moe", "mamba"):
+            return self._stack(lambda k: self._block_init(seg.kind, k),
+                               key, (seg.n,))
+        if seg.kind == "lg_group":
+            kl, kg = jax.random.split(key)
+            lp, ls = self._stack(lambda k: self._block_init("local", k),
+                                 kl, (seg.n, seg.group - 1))
+            gp, gs = self._stack(lambda k: self._block_init("dense", k),
+                                 kg, (seg.n,))
+            return {"local": lp, "global": gp}, {"local": ls, "global": gs}
+        if seg.kind == "zamba_group":
+            mp, ms = self._stack(lambda k: self._block_init("mamba", k),
+                                 key, (seg.n, seg.group))
+            return {"mamba": mp}, {"mamba": ms}
+        if seg.kind == "xlstm_group":
+            km, ks_ = jax.random.split(key)
+            mp, ms = self._stack(
+                lambda k: xlstm_mod.xlstm_block_init(self.cfg, k, self.pdt,
+                                                     "mlstm"),
+                km, (seg.n, seg.group - 1))
+            sp, ss = self._stack(
+                lambda k: xlstm_mod.xlstm_block_init(self.cfg, k, self.pdt,
+                                                     "slstm"), ks_, (seg.n,))
+            return {"mlstm": mp, "slstm": sp}, {"mlstm": ms, "slstm": ss}
+        raise ValueError(seg.kind)
+
+    def abstract_init(self, key):
+        """(param ShapeDtypeStructs, logical specs) without any allocation."""
+        cap = {}
+
+        def f(k):
+            p, s = self.init(k)
+            cap["specs"] = s
+            return p
+
+        shapes = jax.eval_shape(f, key)
+        return shapes, cap["specs"]
+
+    def init(self, key):
+        cfg = self.cfg
+        n_seg = len(self.segments)
+        keys = jax.random.split(key, n_seg + 4)
+        params: dict[str, Any] = {}
+        specs: dict[str, Any] = {}
+
+        params["emb"] = (jax.random.normal(keys[0], (self.v_pad, cfg.d_model))
+                         * 0.02).astype(self.pdt)
+        specs["emb"] = P("tp", "fsdp")
+        if not cfg.tie_embeddings:
+            params["head"] = layers.dense_init(
+                keys[1], (cfg.d_model, self.v_pad), self.pdt)
+            specs["head"] = P("fsdp", "tp")
+        np_, ns = layers.norm_init(cfg, self.pdt)
+        params["out_norm"], specs["out_norm"] = np_, ns
+
+        if cfg.block_pattern.startswith("mamba_hybrid"):
+            sp, ss = layers.dense_block_init(cfg, keys[2], self.pdt)
+            params["shared_attn"], specs["shared_attn"] = sp, ss
+
+        seg_p, seg_s = [], []
+        for seg, k in zip(self.segments, keys[4:]):
+            p_, s_ = self._segment_init(seg, k)
+            # stacked params carry 1 (segment scan) or 2 (+ inner group)
+            # leading dims; pad each logical spec with Nones to match rank
+            s_ = jax.tree.map(
+                lambda sp_, arr: P(*((None,) * (arr.ndim - len(sp_))
+                                     + tuple(sp_))),
+                s_, p_, is_leaf=lambda x: isinstance(x, P))
+            seg_p.append(p_)
+            seg_s.append(s_)
+        params["segments"] = seg_p
+        specs["segments"] = seg_s
+        return params, specs
+
+    # ------------------------------------------------------------------ #
+    # forward
+    # ------------------------------------------------------------------ #
+    def _block_apply(self, kind: str, p, x, *, positions, cache=None,
+                     cache_pos=None, theta=None, window=0):
+        cfg = self.cfg
+        if kind in ("dense", "local"):
+            w = cfg.window if kind == "local" else window
+            c = cfg if theta is None else dataclasses.replace(
+                cfg, rope_theta=theta)
+            return layers.dense_block(p, x, c, positions=positions, window=w,
+                                      kv_cache=cache, cache_pos=cache_pos)
+        if kind == "moe":
+            return moe_mod.moe_block(p, x, cfg, positions=positions,
+                                     pad_experts_to=PAD_MULTIPLE,
+                                     kv_cache=cache, cache_pos=cache_pos)
+        if kind == "mamba":
+            return ssm.mamba_residual(p, x, cfg, ssm_cache=cache)
+        raise ValueError(kind)
+
+    def _segment_apply(self, seg: Segment, p, x, *, positions, caches=None,
+                       cache_pos=None, shared_attn=None):
+        cfg = self.cfg
+        use_cache = caches is not None
+        remat = cfg.remat == "full" and not use_cache
+
+        def wrap(f):
+            return jax.checkpoint(f) if remat else f
+
+        if seg.kind in ("dense", "local", "moe", "mamba"):
+            theta = 10_000.0 if seg.kind == "local" else None
+            @wrap
+            def body(x, inp):
+                lp, lc = inp
+                out, nc = self._block_apply(seg.kind, lp, x,
+                                            positions=positions, cache=lc,
+                                            cache_pos=cache_pos, theta=theta)
+                return constrain(out, "dp", "seqtp", None), nc
+            xs = (p, caches)
+            x, new_caches = jax.lax.scan(body, x, xs)
+            return x, new_caches
+
+        if seg.kind == "lg_group":
+            local_theta = 10_000.0
+            @wrap
+            def body(x, inp):
+                gp, gc = inp
+                def inner(x, li):
+                    lp, lc = li
+                    out, nc = self._block_apply("local", lp, x,
+                                                positions=positions, cache=lc,
+                                                cache_pos=cache_pos,
+                                                theta=local_theta)
+                    return out, nc
+                x, lc_new = jax.lax.scan(
+                    inner, x, (gp["local"],
+                               None if gc is None else gc["local"]))
+                x, gc_new = self._block_apply(
+                    "dense", gp["global"], x, positions=positions,
+                    cache=None if gc is None else gc["global"],
+                    cache_pos=cache_pos, theta=self.cfg.rope_theta)
+                return constrain(x, "dp", "seqtp", None), \
+                    {"local": lc_new, "global": gc_new}
+            x, new_caches = jax.lax.scan(body, x, (p, caches))
+            return x, new_caches
+
+        if seg.kind == "zamba_group":
+            @wrap
+            def body(x, inp):
+                gp, gc = inp
+                def inner(x, li):
+                    lp, lc = li
+                    out, nc = ssm.mamba_residual(lp, x, cfg, ssm_cache=lc)
+                    return out, nc
+                x, mc_new = jax.lax.scan(
+                    inner, x, (gp["mamba"],
+                               None if gc is None else gc["mamba"]))
+                x, ac_new = layers.dense_block(
+                    shared_attn, x, cfg, positions=positions,
+                    kv_cache=None if gc is None else gc["attn"],
+                    cache_pos=cache_pos)
+                return constrain(x, "dp", "seqtp", None), \
+                    {"mamba": mc_new, "attn": ac_new}
+            x, new_caches = jax.lax.scan(body, x, (p, caches))
+            return x, new_caches
+
+        if seg.kind == "xlstm_group":
+            @wrap
+            def body(x, inp):
+                gp, gc = inp
+                def inner(x, li):
+                    lp, lc = li
+                    return xlstm_mod.xlstm_block(lp, x, cfg, "mlstm",
+                                                 cache=lc)
+                x, mc_new = jax.lax.scan(
+                    inner, x, (gp["mlstm"],
+                               None if gc is None else gc["mlstm"]))
+                x, sc_new = xlstm_mod.xlstm_block(
+                    gp["slstm"], x, cfg, "slstm",
+                    cache=None if gc is None else gc["slstm"])
+                return constrain(x, "dp", "seqtp", None), \
+                    {"mlstm": mc_new, "slstm": sc_new}
+            x, new_caches = jax.lax.scan(body, x, (p, caches))
+            return x, new_caches
+        raise ValueError(seg.kind)
+
+    def embed(self, params, batch):
+        """Token + frontend embedding. Returns (x, positions)."""
+        cfg = self.cfg
+        x = None
+        if "tokens" in batch:
+            x = params["emb"].astype(self.cdt)[batch["tokens"]]
+        if cfg.frontend == "vlm" and "patch_embeds" in batch:
+            # prefill/train: stub frontend embeddings prepended; decode steps
+            # see text tokens only (the patches are already in the caches)
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(self.cdt), x], axis=1)
+        elif cfg.frontend == "audio" and "frame_embeds" in batch:
+            x = batch["frame_embeds"].astype(self.cdt)
+        positions = jnp.arange(x.shape[1])
+        return constrain(x, "dp", None, None), positions
+
+    def forward(self, params, batch, *, caches=None, cache_pos=None,
+                positions=None):
+        """Full forward. Returns (logits, new_caches)."""
+        cfg = self.cfg
+        x, pos = self.embed(params, batch)
+        if positions is not None:
+            pos = positions
+        # sequence-parallel residual stream (Megatron-SP): the scan carry —
+        # which remat saves per layer — is sharded over the model axis too,
+        # bounding saved activations to B*S*d/(dp*tp) per layer
+        x = constrain(x, "dp", "seqtp", None)
+        shared = params.get("shared_attn")
+        new_caches = []
+        for i, seg in enumerate(self.segments):
+            x, nc = self._segment_apply(
+                seg, params["segments"][i], x, positions=pos,
+                caches=None if caches is None else caches[i],
+                cache_pos=cache_pos, shared_attn=shared)
+            x = constrain(x, "dp", "seqtp", None)
+            new_caches.append(nc)
+        x = layers.apply_norm(params["out_norm"], x, cfg.norm)
+        head = (params["emb"].T if cfg.tie_embeddings
+                else params["head"]).astype(self.cdt)
+        logits = x @ head
+        return constrain(logits, "dp", None, "tp"), new_caches
+
+    # ------------------------------------------------------------------ #
+    # loss
+    # ------------------------------------------------------------------ #
+    def loss(self, params, batch):
+        """Mean CE over positions with labels >= 0 (frontend/pad = -1)."""
+        logits, _ = self.forward(params, batch)
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:       # vlm: frontend prepended
+            pad = logits.shape[1] - labels.shape[1]
+            labels = jnp.concatenate(
+                [jnp.full((labels.shape[0], pad), -1, labels.dtype), labels],
+                axis=1)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(
+            lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = (lse - gold) * mask
+        return ce.sum() / jnp.maximum(mask.sum(), 1.0)
+
+    # ------------------------------------------------------------------ #
+    # serve: cache init / prefill / decode
+    # ------------------------------------------------------------------ #
+    def init_cache(self, batch_size: int, max_len: int):
+        """Abstract cache pytree (zeros) for decode; mirrors segments."""
+        cfg = self.cfg
+        kh, dh = cfg.n_kv_heads, cfg.head_dim
+        kv = lambda s_len: {
+            "k": jnp.zeros((batch_size, s_len, kh, dh), self.cdt),
+            "v": jnp.zeros((batch_size, s_len, kh, dh), self.cdt)}
+
+        def mamba_cache():
+            di, h, p_, n = ssm.mamba_dims(cfg)
+            conv_ch = di + 2 * n
+            return {"state": jnp.zeros((batch_size, h, n, p_), jnp.float32),
+                    "conv": jnp.zeros((batch_size, cfg.conv_width - 1,
+                                       conv_ch), self.cdt)}
+
+        def xlstm_cache(kind):
+            if kind == "mlstm":
+                di, h, p_ = xlstm_mod.xlstm_dims(cfg)
+                return {"C": jnp.zeros((batch_size, h, p_, p_), jnp.float32),
+                        "n": jnp.zeros((batch_size, h, p_), jnp.float32),
+                        "m": jnp.full((batch_size, h), -1e30, jnp.float32),
+                        "conv": jnp.zeros((batch_size, cfg.conv_width - 1, di),
+                                          self.cdt)}
+            h, pd = cfg.n_heads, cfg.d_model // cfg.n_heads
+            z = jnp.zeros((batch_size, h, pd), jnp.float32)
+            return {"c": z, "n": z, "m": jnp.full((batch_size, h, pd), -1e30,
+                                                  jnp.float32), "h": z,
+                    "conv": jnp.zeros((batch_size, cfg.conv_width - 1,
+                                       cfg.d_model), self.cdt)}
+
+        def stack(tree, n):
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+        caches = []
+        for seg in self.segments:
+            if seg.kind in ("dense", "moe"):
+                caches.append(stack(kv(max_len), seg.n))
+            elif seg.kind == "local":
+                caches.append(stack(kv(max_len), seg.n))
+            elif seg.kind == "mamba":
+                caches.append(stack(mamba_cache(), seg.n))
+            elif seg.kind == "lg_group":
+                caches.append({
+                    "local": stack(stack(kv(max_len), seg.group - 1), seg.n),
+                    "global": stack(kv(max_len), seg.n)})
+            elif seg.kind == "zamba_group":
+                caches.append({
+                    "mamba": stack(stack(mamba_cache(), seg.group), seg.n),
+                    "attn": stack(kv(max_len), seg.n)})
+            elif seg.kind == "xlstm_group":
+                caches.append({
+                    "mlstm": stack(stack(xlstm_cache("mlstm"), seg.group - 1),
+                                   seg.n),
+                    "slstm": stack(xlstm_cache("slstm"), seg.n)})
+        return caches
+
+    def prefill(self, params, batch, caches):
+        """Populate caches from a full prompt; returns (logits, caches)."""
+        return self.forward(params, batch, caches=caches, cache_pos=0)
+
+    def decode_step(self, params, tokens, caches, pos):
+        """One token: tokens (B,1) int32; pos scalar int32."""
+        positions = pos[None] if pos.ndim == 0 else pos
+        batch = {"tokens": tokens}
+        if self.cfg.frontend == "audio":
+            batch = {"frame_embeds":
+                     params["emb"].astype(self.cdt)[tokens]}
+        logits, caches = self.forward(params, batch, caches=caches,
+                                      cache_pos=pos, positions=positions)
+        return logits, caches
+
+    # ------------------------------------------------------------------ #
+    def count_params(self, params) -> int:
+        return sum(int(np.prod(a.shape)) for a in jax.tree.leaves(params))

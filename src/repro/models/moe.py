@@ -1,0 +1,159 @@
+"""Mixture-of-experts FFN with sort-based capacity dispatch.
+
+TPU adaptation notes: instead of GShard's one-hot dispatch einsum (whose
+dispatch FLOPs exceed the expert GEMMs for large E·C) we sort token-slots by
+expert id and scatter into a dense (E, C, d) buffer — gathers/scatters are
+memory ops, the MXU only sees the real batched expert GEMMs, so compiled
+FLOPs ≈ active-parameter FLOPs (what the 6·N_active·D roofline expects).
+Experts are sharded over the "tp" axis (expert parallelism); counts are
+padded to a multiple of the axis size with router masking (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, mlp, mlp_init
+from repro.models.sharding import constrain
+
+
+def moe_init(cfg, key, dtype, pad_experts_to: int = 1):
+    d, fe = cfg.d_model, cfg.d_ff_expert or cfg.d_ff
+    e = cfg.padded_experts(pad_experts_to)
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": dense_init(ks[0], (d, e), dtype, scale=0.02),
+        "wi": dense_init(ks[1], (e, d, fe), dtype),
+        "wg": dense_init(ks[2], (e, d, fe), dtype),
+        "wo": dense_init(ks[3], (e, fe, d), dtype, scale=1.0 / np.sqrt(fe)),
+    }
+    specs = {
+        "router": P("fsdp", None),
+        "wi": P("tp", "fsdp", None),
+        "wg": P("tp", "fsdp", None),
+        "wo": P("tp", "fsdp", None),
+    }
+    if cfg.n_shared_experts:
+        shared_p, shared_s = mlp_init(cfg, ks[4], dtype,
+                                      d_ff=cfg.n_shared_experts * fe)
+        params["shared"] = shared_p
+        specs["shared"] = shared_s
+    return params, specs
+
+
+def moe_ffn(p, x, cfg, pad_experts_to: int = 1, n_groups: int = 0):
+    """x: (B, S, d) -> (B, S, d). Top-k routing with capacity drop.
+
+    Dispatch is *grouped by data-parallel shard* (GShard-style groups bound
+    to the physical dp axis): the sort/scatter indices stay local to each
+    group, so GSPMD shards the dispatch over dp instead of replicating a
+    global (E*C, d) scatter buffer — the baseline's dominant all-reduce
+    (measured 6.7e12 B/device/step for qwen2-moe train_4k; see EXPERIMENTS.md
+    §Perf iteration moe-1). Expert GEMMs run on a (G, E, C_g, d) batch with
+    G sharded over dp and E over tp; token->expert traffic becomes the
+    expected all-to-all. With 1 device (tests) G=1 reproduces the exact
+    ungrouped semantics.
+    """
+    from repro.models.sharding import axis_size
+
+    b, s, d = x.shape
+    cdt = x.dtype
+    e = cfg.padded_experts(pad_experts_to)
+    k = cfg.top_k
+    n = b * s
+    g = n_groups or axis_size("dp")
+    while n % g:                                          # batch not divisible
+        g //= 2
+    g = max(g, 1)
+    ng = n // g                                           # tokens per group
+    cap = int(np.ceil(ng * k / e * cfg.capacity_factor))
+    cap = max(8, ((cap + 7) // 8) * 8)                    # align
+
+    xf = x.reshape(n, d)
+    logits = (xf @ p["router"].astype(cdt)).astype(jnp.float32)
+    if e != cfg.n_experts:                                # mask pad experts
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    weights, experts = jax.lax.top_k(logits, k)           # (n, k)
+    weights = jax.nn.softmax(weights, axis=-1).astype(cdt)
+
+    # ---- group-local sort-based dispatch -------------------------------- #
+    xg = constrain(xf.reshape(g, ng, d), "dp", None, None)
+    exp_g = experts.reshape(g, ng * k)
+    w_g = weights.reshape(g, ng * k)
+
+    order = jnp.argsort(exp_g, axis=1)                    # (g, ng*k) local
+    sorted_exp = jnp.take_along_axis(exp_g, order, axis=1)
+    pos = jnp.arange(ng * k)[None, :]
+    seg_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(
+        sorted_exp)                                       # (g, e)
+    rank = pos - jnp.take_along_axis(seg_start, sorted_exp, axis=1)
+    keep = rank < cap
+    token_of_slot = order // k                            # (g, ng*k) local ids
+
+    dest = jnp.where(keep, sorted_exp * cap + rank, e * cap)
+    # integer gather (vmapped) — take_along_axis would broadcast the u32
+    # index tensor to (g, ng*k, d), which GSPMD then all-reduces (measured
+    # 51 GB/step for qwen2-moe; §Perf iteration moe-2)
+    gathered = jax.vmap(lambda xv, t: xv[t])(xg, token_of_slot)
+    buf = jnp.zeros((g, e * cap + 1, d), cdt)
+    buf = jax.vmap(lambda bu, de, ga: bu.at[de].set(ga))(buf, dest, gathered)
+    expert_in = buf[:, :-1].reshape(g, e, cap, d)
+    expert_in = constrain(expert_in, "dp", "tp", None, None)
+
+    # ---- batched expert SwiGLU (G x E grid; E sharded over tp) ---------- #
+    h = (jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in,
+                                p["wg"].astype(cdt)))
+         * jnp.einsum("gecd,edf->gecf", expert_in, p["wi"].astype(cdt)))
+    h = constrain(h, "dp", "tp", None, None)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(cdt))
+    expert_out = constrain(expert_out, "dp", "tp", None, None)
+
+    # ---- combine back (group-local gather + weighted segment sum) ------- #
+    flat_out = expert_out.reshape(g, e * cap, d)
+    slot_src = jnp.minimum(dest, e * cap - 1)
+    slot_out = jax.vmap(lambda fo, s_: fo[s_])(flat_out, slot_src)
+    # NOTE (§Perf moe-4, refuted): slot-sharding this combine over the model
+    # axis ("seqtp") made GSPMD all-gather the expert buffer instead of
+    # forming an all-to-all (N 8.54 -> 12.70 s) — the true fix is a
+    # shard_map-level manual a2a; left as the documented next lever.
+    slot_out = jnp.where(keep[..., None], slot_out, jnp.zeros((1, d), cdt))
+    w_sorted = jnp.take_along_axis(w_g, order, axis=1)
+    contrib = slot_out * w_sorted[..., None]
+    out = jnp.zeros((g, ng, d), cdt)
+    out = jax.vmap(lambda o, t, c: o.at[t].add(c))(out, token_of_slot,
+                                                   contrib)
+    out = out.reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        # shared experts run on the natural (B, S, d) layout — a (1, n, d)
+        # pseudo-batch cannot shard over dp and was measured replicating
+        # 1M-token activations (103 GB/step of all-gather; §Perf moe-2)
+        out = out + mlp(p["shared"], x)
+    return constrain(out, "dp", None, None)
+
+
+def moe_block_init(cfg, key, dtype, pad_experts_to: int = 1):
+    from repro.models.layers import attention_init, norm_init
+    ka, km = jax.random.split(key, 2)
+    attn_p, attn_s = attention_init(cfg, ka, dtype)
+    moe_p, moe_s = moe_init(cfg, km, dtype, pad_experts_to)
+    n1, n1s = norm_init(cfg, dtype)
+    n2, n2s = norm_init(cfg, dtype)
+    return ({"attn": attn_p, "moe": moe_p, "ln1": n1, "ln2": n2},
+            {"attn": attn_s, "moe": moe_s, "ln1": n1s, "ln2": n2s})
+
+
+def moe_block(p, x, cfg, *, positions, pad_experts_to: int = 1,
+              kv_cache=None, cache_pos=None):
+    from repro.models.layers import apply_norm, attention
+    a, cache = attention(p["attn"], apply_norm(p["ln1"], x, cfg.norm), cfg,
+                         positions=positions, kv_cache=kv_cache,
+                         cache_pos=cache_pos)
+    x = x + a
+    x = x + moe_ffn(p["moe"], apply_norm(p["ln2"], x, cfg.norm), cfg,
+                    pad_experts_to)
+    return x, cache

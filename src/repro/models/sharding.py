@@ -1,0 +1,109 @@
+"""Logical-axis sharding context.
+
+Model code annotates tensors with *logical* axes ("dp", "tp", "fsdp", "sp");
+the launcher binds them to physical mesh axes. ``constrain`` applies a
+``with_sharding_constraint`` with two safety fallbacks that keep every
+(arch × shape × mesh) cell compiling:
+
+  * divisibility — a dim that does not divide by the bound mesh-axis size is
+    replicated instead (e.g. kv_heads=8 on a 16-way "model" axis, batch=1 on
+    the dp axis for long-context decode);
+  * conflict     — a mesh axis may appear only once per spec; later logical
+    axes that would reuse it are dropped (e.g. "sp" sequence sharding skipped
+    when "dp" already consumed the data axis for a shardable batch).
+
+The same resolution logic converts logical param-spec trees into physical
+``NamedSharding``s (``physical_param_specs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    mesh: Optional[Mesh] = None
+    # logical -> tuple of physical mesh axis names
+    bindings: dict = dataclasses.field(default_factory=dict)
+
+    def axis_size(self, names: tuple[str, ...]) -> int:
+        return math.prod(self.mesh.shape[n] for n in names)
+
+
+_CTX = ShardCtx()
+
+
+def set_context(mesh: Optional[Mesh], bindings: dict) -> None:
+    """bindings: e.g. {"dp": ("pod","data"), "fsdp": ("pod","data"),
+    "tp": ("model",), "sp": ("data",)}. None mesh disables constraints
+    (single-device tests)."""
+    _CTX.mesh = mesh
+    _CTX.bindings = {k: tuple(v) if v else () for k, v in bindings.items()}
+
+
+def get_context() -> ShardCtx:
+    return _CTX
+
+
+def axis_size(logical: str) -> int:
+    """Total mesh size bound to a logical axis (1 if unbound / no mesh)."""
+    if _CTX.mesh is None:
+        return 1
+    names = _CTX.bindings.get(logical, ())
+    return _CTX.axis_size(names) if names else 1
+
+
+def _resolve(logical_axes, shape) -> P:
+    """Logical spec -> physical PartitionSpec with fallbacks."""
+    used: set[str] = set()
+    phys = []
+    for dim, logical in enumerate(logical_axes):
+        if logical is None:
+            phys.append(None)
+            continue
+        names = _CTX.bindings.get(logical, ())
+        names = tuple(n for n in names if n not in used)
+        if not names:
+            phys.append(None)
+            continue
+        # largest prefix of the binding that divides the dim
+        while names and shape[dim] % _CTX.axis_size(names) != 0:
+            names = names[:-1]
+        if names:
+            used.update(names)
+            phys.append(names if len(names) > 1 else names[0])
+        else:
+            phys.append(None)
+    return P(*phys)
+
+
+def constrain(x: jax.Array, *logical_axes):
+    """Annotate array x with logical axes (None = replicated dim)."""
+    if _CTX.mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axes for rank-{x.ndim} array")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, _resolve(logical_axes, x.shape)))
+
+
+def physical_spec(logical: P, shape) -> P:
+    return _resolve(tuple(logical) + (None,) * (len(shape) - len(logical)),
+                    shape)
+
+
+def physical_shardings(logical_specs, shapes):
+    """Map a pytree of logical P specs + matching ShapeDtypeStructs/arrays to
+    NamedShardings (for jit in_shardings/out_shardings)."""
+    mesh = _CTX.mesh
+
+    def one(spec, arr):
+        return NamedSharding(mesh, physical_spec(spec, arr.shape))
+
+    return jax.tree.map(one, logical_specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))

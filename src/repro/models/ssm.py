@@ -1,0 +1,190 @@
+"""Mamba2 (SSD — state-space duality) blocks, TPU-adapted.
+
+Training/prefill uses the *chunked* SSD formulation: within a chunk the
+recurrence is expanded into a masked (Q×Q) attention-like matmul (MXU work),
+across chunks a short ``lax.scan`` carries the (H, N, P) state — this is the
+natural TPU mapping of Mamba2 (matmul-heavy, no per-step scan over the full
+sequence). Decode carries the recurrent state explicitly: O(1) per token,
+which is what makes the long_500k cells tractable for the hybrid/SSM archs.
+
+Simplifications vs. the reference CUDA implementation (recorded in DESIGN.md):
+single B/C group (G=1), no learned init states, RMSNorm gate before out-proj.
+Since A < 0 and dt > 0, every exponential in the chunked form is ≤ 1 — the
+decay matrices are built in fp32 without extra stabilization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, norm_init, apply_norm
+from repro.models.sharding import constrain
+
+
+def mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_init(cfg, key, dtype):
+    d = cfg.d_model
+    di, h, p_, n = mamba_dims(cfg)
+    conv_ch = di + 2 * n                      # x, B, C get the causal conv
+    ks = jax.random.split(key, 6)
+    params = {
+        # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) *
+                   0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "w_out": dense_init(ks[2], (di, d), dtype, scale=1.0 / np.sqrt(di)),
+        "gn_scale": jnp.ones((di,), dtype),
+    }
+    specs = {
+        "w_in": P("fsdp", "tp"),
+        "conv_w": P(None, "tp"),
+        "conv_b": P("tp"),
+        "a_log": P("tp"),
+        "dt_bias": P("tp"),
+        "d_skip": P("tp"),
+        "w_out": P("tp", "fsdp"),
+        "gn_scale": P("tp"),
+    }
+    return params, specs
+
+
+def _split_proj(cfg, proj):
+    di, h, p_, n = mamba_dims(cfg)
+    z, x, bm, cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, x, bm, cm, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B,S,C); w: (W,C). state: (B,W-1,C) carries
+    the last inputs for decode. Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return y + b, xp[:, -(width - 1):]
+
+
+def ssd_chunked(xh, dt, a, bm, cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) >=0; a: (H,) < 0;
+    bm, cm: (B,S,N). Returns (y: (B,S,H,P), final_state: (B,H,N,P)).
+    """
+    b, s, h, p_ = xh.shape
+    n = bm.shape[-1]
+    q = chunk
+    nc = s // q
+    f32 = jnp.float32
+
+    la = (dt.astype(f32) * a).reshape(b, nc, q, h)            # log-decay ≤ 0
+    xb = (xh.astype(f32) * dt.astype(f32)[..., None]).reshape(b, nc, q, h, p_)
+    bmc = bm.astype(f32).reshape(b, nc, q, n)
+    cmc = cm.astype(f32).reshape(b, nc, q, n)
+
+    cum = jnp.cumsum(la, axis=2)                              # (B,nc,Q,H)
+    total = cum[:, :, -1]                                     # (B,nc,H)
+
+    # intra-chunk: scores[i,j] = exp(cum_i - cum_j) * (C_i . B_j), i >= j
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None, :, :])  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    cb = jnp.einsum("bcin,bcjn->bcij", cmc, bmc)              # (B,nc,Q,Q)
+    scores = jnp.where(tri[None, None, ..., None], cb[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xb)
+
+    # chunk summary states: S_c = sum_j exp(total - cum_j) B_j ⊗ Xb_j
+    w_end = jnp.exp(total[:, :, None] - cum)                  # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bmc, w_end, xb)
+
+    # inter-chunk recurrence (short scan over nc)
+    g = jnp.exp(total)                                        # (B,nc,H)
+    s0 = (jnp.zeros((b, h, n, p_), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        g_c, s_c = inp                                        # (B,H), (B,H,N,P)
+        new = carry * g_c[..., None, None] + s_c
+        return new, carry                                     # emit state BEFORE chunk
+
+    gT = jnp.moveaxis(g, 1, 0)                                # (nc,B,H)
+    sT = jnp.moveaxis(s_chunk, 1, 0)                          # (nc,B,H,N,P)
+    final, prev_states = jax.lax.scan(step, s0, (gT, sT))
+    prev = jnp.moveaxis(prev_states, 0, 1)                    # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cmc, jnp.exp(cum), prev)
+    y = (y_intra + y_inter).reshape(b, s, h, p_)
+    return y, final
+
+
+def mamba_block(p, x, cfg, *, ssm_cache=None):
+    """x: (B,S,d). ssm_cache: {"state": (B,H,N,P), "conv": (B,W-1,C)} for
+    decode (S=1) / carried prefill. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    di, h, pd, n = mamba_dims(cfg)
+    cdt = x.dtype
+
+    proj = x @ p["w_in"].astype(cdt)
+    z, xr, bm, cm, dtr = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xr, bm, cm], axis=-1)
+    conv_state = None if ssm_cache is None else ssm_cache["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(cdt),
+                                      p["conv_b"].astype(cdt), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xr, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    xh = constrain(xr.reshape(b, s, h, pd), "dp", None, "tp", None)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                  # (H,) < 0
+
+    if ssm_cache is None or s > 1:
+        init = None if ssm_cache is None else ssm_cache["state"]
+        y, final = ssd_chunked(xh, dt, a, bm, cm,
+                               min(cfg.ssm_chunk, s), init_state=init)
+    else:                                                     # decode: 1 step
+        st = ssm_cache["state"].astype(jnp.float32)           # (B,H,N,P)
+        dt1 = dt[:, 0]                                        # (B,H)
+        g = jnp.exp(dt1 * a[None])                            # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bm[:, 0].astype(jnp.float32),
+                         dt1, xh[:, 0].astype(jnp.float32))
+        st = st * g[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cm[:, 0].astype(jnp.float32), st)
+        y = y[:, None]                                        # (B,1,H,P)
+        final = st
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(cdt)
+    # gated RMSNorm (mamba2 style), then out-projection
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + 1e-6)
+         * p["gn_scale"].astype(jnp.float32)).astype(cdt)
+    out = y @ p["w_out"].astype(cdt)
+    new_cache = {"state": final.astype(jnp.float32), "conv": new_conv}
+    return constrain(out, "dp", None, None), new_cache
+
+
+def mamba_residual_init(cfg, key, dtype):
+    km, kn = jax.random.split(key)
+    mp, ms = mamba_init(cfg, km, dtype)
+    np_, ns = norm_init(cfg, dtype)
+    return {"mamba": mp, "ln": np_}, {"mamba": ms, "ln": ns}
+
+
+def mamba_residual(p, x, cfg, *, ssm_cache=None):
+    h, cache = mamba_block(p["mamba"], apply_norm(p["ln"], x, cfg.norm), cfg,
+                           ssm_cache=ssm_cache)
+    return x + h, cache

@@ -1,0 +1,288 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent mixing) — [arXiv:2405.04517].
+
+The mLSTM recurrence is run as a ``lax.scan`` over time with exponential-gate
+stabilization in log space (states C (B,H,P,P), n (B,H,P), m (B,H)). sLSTM is
+inherently sequential (recurrent R h_{t-1} term — that is its point) and also
+scans. Decode is the same cell applied once — O(1) state, which is why
+xlstm-125m runs the long_500k cell. A chunked-parallel mLSTM formulation is a
+§Perf hillclimb candidate (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, norm_init, apply_norm
+from repro.models.sharding import constrain
+from repro.models.ssm import _causal_conv
+
+
+def xlstm_dims(cfg):
+    di = 2 * cfg.d_model                 # mLSTM expansion factor 2
+    h = cfg.n_heads
+    return di, h, di // h
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+def mlstm_init(cfg, key, dtype):
+    d = cfg.d_model
+    di, h, p_ = xlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    params = {
+        "w_up": dense_init(ks[0], (d, 2 * di), dtype),       # x, z-gate
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_qkv": dense_init(ks[2], (di, 3 * di), dtype),
+        "w_if": dense_init(ks[3], (di, 2 * h), dtype, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]
+                                ).astype(jnp.float32),
+        "gn_scale": jnp.ones((di,), dtype),
+        "w_down": dense_init(ks[4], (di, d), dtype, scale=1.0 / np.sqrt(di)),
+    }
+    specs = {"w_up": P("fsdp", "tp"), "conv_w": P(None, "tp"),
+             "conv_b": P("tp"), "w_qkv": P("fsdp", "tp"),
+             "w_if": P("fsdp", None), "b_if": P(None),
+             "gn_scale": P("tp"), "w_down": P("tp", "fsdp")}
+    return params, specs
+
+
+def _mlstm_cell(carry, inp):
+    """One stabilized mLSTM step. carry: (C,n,m); inp: (q,k,v,it,ft)."""
+    C, n, m = carry
+    q, k, v, it, ft = inp                       # (B,H,P),(B,H,P),(B,H,P),(B,H)
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)[..., None]
+    f_p = jnp.exp(ft + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f_p * n + i_p * k
+    num = jnp.einsum("bhpq,bhq->bhp", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q)), 1.0)
+    return (C, n, m_new), num / den[..., None]
+
+
+def mlstm_seq(q, k, v, it, ft, state=None):
+    """q,k,v: (B,S,H,P); it,ft: (B,S,H) fp32. Returns (y, final_state)."""
+    b, s, h, p_ = q.shape
+    if state is None:
+        C = jnp.zeros((b, h, p_, p_), jnp.float32)
+        n = jnp.zeros((b, h, p_), jnp.float32)
+        m = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C, n, m = state["C"], state["n"], state["m"]
+    cst = lambda t: constrain(t, *((None, "dp") + (None,) * (t.ndim - 2)))
+    xs = (cst(jnp.moveaxis(q, 1, 0).astype(jnp.float32)),
+          cst(jnp.moveaxis(k, 1, 0).astype(jnp.float32)),
+          cst(jnp.moveaxis(v, 1, 0).astype(jnp.float32)),
+          cst(jnp.moveaxis(it, 1, 0)), cst(jnp.moveaxis(ft, 1, 0)))
+    (C, n, m), ys = jax.lax.scan(_mlstm_cell, (C, n, m), xs)
+    return jnp.moveaxis(ys, 0, 1), {"C": C, "n": n, "m": m}
+
+
+def mlstm_chunked(q, k, v, it, ft, state=None, chunk: int = 64):
+    """Exact stabilized chunkwise mLSTM (beyond-paper optimization; §Perf
+    iteration xlstm-1).
+
+    Identical numerics to ``mlstm_seq`` (tested allclose): with per-chunk
+    in-chunk log-decay b_t = cumsum(ft) and a_j = i_j - b_j, the recurrent
+    stabilizer unrolls to m_t = b_t + M_t, M_t = max(m_prev, cummax_{j<=t}
+    a_j), so every intra-chunk weight exp(a_j - M_t) and carry-in weight
+    exp(m_prev - M_t) is <= 1 — the sequential max recurrence becomes a
+    cummax and the time scan collapses from S steps of (P x P) outer products
+    to S/Q steps of (Q x Q)/(Q x P) MXU matmuls. This removes the per-step
+    collectives that made xlstm train/prefill cells ~1000x collective-bound
+    in the baseline dry-run.
+    """
+    bsz, s, h, p_ = q.shape
+    nc = s // chunk
+    f32 = jnp.float32
+    # scan inputs must NOT be sharded on the chunk (time) dim: a dynamic
+    # slice over a sharded loop dim makes GSPMD re-gather the whole array
+    # every iteration (measured: the baseline's per-step all-gathers).
+    # Batch shards over dp; the model axis stays out of the recurrence.
+    cst = lambda t: constrain(t, *(("dp",) + (None,) * (t.ndim - 1)))
+    qc = cst(q.astype(f32).reshape(bsz, nc, chunk, h, p_))
+    kc = cst(k.astype(f32).reshape(bsz, nc, chunk, h, p_))
+    vc = cst(v.astype(f32).reshape(bsz, nc, chunk, h, p_))
+    bcum = cst(jnp.cumsum(ft.reshape(bsz, nc, chunk, h), axis=2))
+    a = cst(it.reshape(bsz, nc, chunk, h) - bcum)              # (B,nc,Q,H)
+
+    if state is None:
+        C0 = jnp.zeros((bsz, h, p_, p_), f32)
+        n0 = jnp.zeros((bsz, h, p_), f32)
+        m0 = jnp.full((bsz, h), -1e30, f32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        q_c, k_c, v_c, a_c, b_c = inp          # (B,Q,H,P)/(B,Q,H)
+        M = jnp.maximum(jax.lax.cummax(a_c, axis=1), m[:, None, :])  # (B,Q,H)
+        w_intra = jnp.exp(a_c[:, None, :, :] - M[:, :, None, :])     # (B,t,j,H)
+        w_intra = jnp.where(tri[None, :, :, None], w_intra, 0.0)
+        qk = jnp.einsum("bqhp,bjhp->bqjh", q_c, k_c)
+        scores = qk * w_intra
+        num = jnp.einsum("bqjh,bjhp->bqhp", scores, v_c)
+        w_in = jnp.exp(m[:, None, :] - M)                            # (B,Q,H)
+        num = num + w_in[..., None] * jnp.einsum("bhpr,bqhr->bqhp", C, q_c)
+        nvec = (jnp.einsum("bqjh,bjhp->bqhp", w_intra, k_c)
+                + w_in[..., None] * n[:, None])
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bqhp,bqhp->bqh", nvec, q_c)), 1.0)
+        h_out = num / den[..., None]
+        # carry to chunk end (exact recurrent state at t = Q-1)
+        m_last = M[:, -1]                                            # (B,H)
+        w_k = jnp.exp(a_c - m_last[:, None, :])                      # (B,Q,H)
+        decay = jnp.exp(m - m_last)
+        C_new = (decay[..., None, None] * C
+                 + jnp.einsum("bjh,bjhp,bjhq->bhpq", w_k, v_c, k_c))
+        n_new = decay[..., None] * n + jnp.einsum("bjh,bjhp->bhp", w_k, k_c)
+        m_new = b_c[:, -1] + m_last
+        return (C_new, n_new, m_new), h_out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, a, bcum))
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p_)
+    return y, {"C": C, "n": n, "m": m}
+
+
+def mlstm_block(p, x, cfg, *, cache=None):
+    b, s, d = x.shape
+    di, h, pd = xlstm_dims(cfg)
+    cdt = x.dtype
+    up = x @ p["w_up"].astype(cdt)
+    xr, z = jnp.split(up, 2, axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(xr, p["conv_w"].astype(cdt),
+                                p["conv_b"].astype(cdt), conv_state)
+    xc = jax.nn.silu(xc)
+    qkv = xc @ p["w_qkv"].astype(cdt)
+    q, k, v = [t.reshape(b, s, h, pd) for t in jnp.split(qkv, 3, -1)]
+    k = k / np.sqrt(pd)
+    gates = (xc @ p["w_if"].astype(cdt)).astype(jnp.float32) + p["b_if"]
+    it, ft = jnp.split(gates, 2, -1)            # (B,S,H) pre-activations
+    ft = jax.nn.log_sigmoid(ft)                 # log f-gate (≤0, stable)
+    state = None if cache is None else cache
+    if s > 1:
+        chunk = s
+        for cand in (64, 32, 16, 8, 4, 2, 1):
+            if s % cand == 0:
+                chunk = cand
+                break
+        y, new_state = mlstm_chunked(q, k, v, it, ft, state, chunk=chunk)
+    else:
+        y, new_state = mlstm_seq(q, k, v, it, ft, state)
+    y = y.reshape(b, s, di).astype(cdt)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + 1e-6)
+         * p["gn_scale"].astype(jnp.float32)).astype(cdt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_down"].astype(cdt)
+    new_cache = dict(new_state, conv=new_conv)
+    return constrain(out, "dp", None, None), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+def slstm_init(cfg, key, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    pd = d // h
+    ks = jax.random.split(key, 5)
+    params = {
+        "conv_w": (jax.random.normal(ks[0], (cfg.conv_width, d)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        "w_gates": dense_init(ks[1], (d, 4 * d), dtype),      # z,i,f,o
+        "r_gates": (jax.random.normal(ks[2], (h, pd, 4 * pd)) /
+                    np.sqrt(pd)).astype(dtype),               # block-diag R
+                    # (replicated: it lives inside the per-step recurrence)
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "gn_scale": jnp.ones((d,), dtype),
+        "w_ff_up": dense_init(ks[3], (d, 2 * (4 * d // 3)), dtype),
+        "w_ff_dn": dense_init(ks[4], (4 * d // 3, d), dtype,
+                              scale=1.0 / np.sqrt(4 * d // 3)),
+    }
+    specs = {"conv_w": P(None, "tp"), "conv_b": P("tp"),
+             "w_gates": P("fsdp", "tp"), "r_gates": P(None, None, None),
+             "b_gates": P(None), "gn_scale": P("tp"),
+             "w_ff_up": P("fsdp", "tp"), "w_ff_dn": P("tp", "fsdp")}
+    return params, specs
+
+
+def _slstm_cell(p_r, carry, wx):
+    """carry: (c,n,m,hprev) each (B,H,P)[m,n scalar-per-unit]; wx: (B,4*d)."""
+    c, n, m, hp = carry
+    b = hp.shape[0]
+    h_, pd = p_r.shape[0], p_r.shape[1]
+    rec = jnp.einsum("bhp,hpq->bhq", hp, p_r)        # (B,H,4P)
+    gates = wx.reshape(b, h_, 4 * pd) + rec
+    zt, it, ft, ot = jnp.split(gates, 4, -1)          # (B,H,P)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(jax.nn.log_sigmoid(ft) + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(zt)
+    n = f_p * n + i_p
+    hnew = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, hnew), hnew
+
+
+def slstm_block(p, x, cfg, *, cache=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    pd = d // h
+    cdt = x.dtype
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(x, p["conv_w"].astype(cdt),
+                                p["conv_b"].astype(cdt), conv_state)
+    xc = jax.nn.silu(xc)
+    wx = (xc @ p["w_gates"].astype(cdt)).astype(jnp.float32) + p["b_gates"]
+    # replicate over the model axis / shard batch over dp before the time
+    # scan — a time-dim-sharded xs forces a full re-gather per step
+    wx = constrain(wx, "dp", None, None)
+    if cache is None:
+        z = jnp.zeros((b, h, pd), jnp.float32)
+        carry = (z, z, jnp.full((b, h, pd), -1e30, jnp.float32), z)
+    else:
+        carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    r = p["r_gates"].astype(jnp.float32)
+    (c, n, m, hl), ys = jax.lax.scan(
+        lambda cr, inp: _slstm_cell(r, cr, inp), carry,
+        jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, d).astype(cdt)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf ** 2, -1, keepdims=True) + 1e-6)
+         * p["gn_scale"].astype(jnp.float32)).astype(cdt)
+    # small gated FFN (the sLSTM block's 4/3 projection)
+    g, u = jnp.split(y @ p["w_ff_up"].astype(cdt), 2, -1)
+    out = (jax.nn.silu(g) * u) @ p["w_ff_dn"].astype(cdt)
+    new_cache = {"c": c, "n": n, "m": m, "h": hl, "conv": new_conv}
+    return constrain(out, "dp", None, None), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# residual wrappers
+# --------------------------------------------------------------------------- #
+def xlstm_block_init(cfg, key, dtype, kind: str):
+    kb, kn = jax.random.split(key)
+    if kind == "mlstm":
+        bp, bs = mlstm_init(cfg, kb, dtype)
+    else:
+        bp, bs = slstm_init(cfg, kb, dtype)
+    np_, ns = norm_init(cfg, dtype)
+    return {"blk": bp, "ln": np_}, {"blk": bs, "ln": ns}
+
+
+def xlstm_block(p, x, cfg, kind: str, *, cache=None):
+    fn = mlstm_block if kind == "mlstm" else slstm_block
+    hid, new_cache = fn(p["blk"], apply_norm(p["ln"], x, cfg.norm), cfg,
+                        cache=cache)
+    return x + hid, new_cache

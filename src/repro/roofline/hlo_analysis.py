@@ -1,0 +1,267 @@
+"""While-aware HLO cost analyzer over the post-SPMD-partitioning HLO dump.
+
+Why this source: (a) ``compiled.cost_analysis()`` visits while bodies ONCE, so
+scanned-layer models are undercounted ~n_layers x (measured); (b) the CPU
+backend legalizes bf16 compute to f32 during optimization, which would
+inflate every byte count 2x vs the TPU target. The
+``after_spmd-partitioning`` dump is per-device, still bf16, still while-
+structured, and pre-fusion — exactly the program a TPU backend would start
+from.
+
+Cost model ("perfect fusion"):
+  flops            — dot: 2 x |result| x contraction size; convolution approx.
+  hbm_bytes        — ops that must touch HBM in a well-fused TPU program:
+                     dot/conv (operands + result), collectives (result),
+                     gather/dynamic-slice (2x slice), scatter/dynamic-update-
+                     slice (2x update), reduce (operands + result). Pure
+                     elementwise/layout ops are assumed fused (skipped), so
+                     this is an HBM-traffic floor; §Roofline notes say so.
+  collective_bytes — per-chip ring-model link traffic: all-reduce 2x|res|,
+                     all-gather |res|, reduce-scatter |operand|,
+                     collective-permute / all-to-all max(|res|, |operand|).
+  while bodies are multiplied by trip counts parsed from the loop-condition
+  compare constants.
+
+All numbers are per chip (the module is the partitioned per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)="
+    r"(?:{([^}]*)}|%?([\w.\-]+))")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_CALLER_KINDS = ("call", "conditional", "while", "fusion", "map", "sort",
+                 "reduce", "scatter", "reduce-window", "select-and-scatter",
+                 "all-reduce", "reduce-scatter")
+
+
+def _shapes_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    rest: str
+    operand_types: list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    current = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{",
+                          stripped)
+        if header:
+            current = Computation(header.group(1), [])
+            comps[current.name] = current
+            continue
+        if stripped.startswith("}"):
+            continue
+        m = _OP_RE.match(line)
+        if m and current is not None:
+            name, rtype, kind, rest = m.groups()
+            current.ops.append(Op(name, kind, rtype, rest, []))
+    for comp in comps.values():
+        types = {op.name: op.result_type for op in comp.ops}
+        for op in comp.ops:
+            arg_sec = op.rest.split("),")[0]
+            for t in re.finditer(r"%([\w.\-]+)", arg_sec):
+                if t.group(1) in types:
+                    op.operand_types.append(types[t.group(1)])
+    return comps
+
+
+def _dot_flops(op: Op) -> float:
+    _, rdims = _shape_dims(op.result_type)
+    out = 1.0
+    for d in rdims:
+        out *= d
+    cm = re.search(r"lhs_contracting_dims={([\d,]*)}", op.rest)
+    contraction = 1.0
+    if cm and op.operand_types:
+        _, ldims = _shape_dims(op.operand_types[0])
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(ldims):
+                contraction *= ldims[int(idx)]
+    return 2.0 * out * contraction
+
+
+def _collective_bytes(op: Op) -> float:
+    res = _shapes_bytes(op.result_type)
+    opnd = sum(_shapes_bytes(t) for t in op.operand_types)
+    if op.kind.startswith("all-reduce"):
+        return 2.0 * res
+    if op.kind.startswith("all-gather"):
+        return res
+    if op.kind.startswith("reduce-scatter"):
+        return opnd if opnd else res
+    return max(res, opnd)
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    best = 1
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        cname = stack.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        for op in comps[cname].ops:
+            if op.kind == "constant":
+                cm = re.match(r"(\d+)\)?", op.rest)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+            cm2 = re.search(r"constant\((\d+)\)", op.rest)
+            if cm2:
+                best = max(best, int(cm2.group(1)))
+            for g in _CALL_ATTR_RE.finditer(op.rest):
+                names = g.group(1) or g.group(2)
+                for n in re.findall(r"%?([\w.\-]+)", names):
+                    stack.append(n)
+    return best
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "HloCosts", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+
+
+def analyze(text: str) -> HloCosts:
+    comps = parse_hlo(text)
+    memo: dict[str, HloCosts] = {}
+    trips_seen: dict[str, int] = {}
+
+    called = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            for g in _CALL_ATTR_RE.finditer(op.rest):
+                names = g.group(1) or g.group(2)
+                for n in re.findall(r"%?([\w.\-]+)", names):
+                    called.add(n)
+    entry_m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = entry_m.group(1) if entry_m else None
+    if entry not in comps:
+        candidates = [c for c in comps if c not in called]
+        entry = candidates[-1] if candidates else next(iter(comps))
+
+    def cost_of(cname: str) -> HloCosts:
+        if cname in memo:
+            return memo[cname]
+        total = HloCosts()
+        memo[cname] = total
+        comp = comps.get(cname)
+        if comp is None:
+            return total
+        for op in comp.ops:
+            kind = op.kind
+            if kind == "dot":
+                total.flops += _dot_flops(op)
+                total.hbm_bytes += (_shapes_bytes(op.result_type)
+                                    + sum(_shapes_bytes(t)
+                                          for t in op.operand_types))
+            elif kind == "convolution":
+                total.flops += 2.0 * _shapes_bytes(op.result_type)
+                total.hbm_bytes += (_shapes_bytes(op.result_type)
+                                    + sum(_shapes_bytes(t)
+                                          for t in op.operand_types))
+            elif any(kind.startswith(c) for c in COLLECTIVES):
+                base = kind.split("-start")[0].split("-done")[0]
+                if kind.endswith("-done"):
+                    continue                       # counted at -start
+                cb = _collective_bytes(op)
+                total.collective_bytes += cb
+                total.collectives[base] = total.collectives.get(base, 0.) + cb
+                total.hbm_bytes += _shapes_bytes(op.result_type)
+            elif kind == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    trips_seen[body] = trips
+                    total.add(cost_of(body), trips)
+            elif kind in ("gather", "dynamic-slice"):
+                total.hbm_bytes += 2.0 * _shapes_bytes(op.result_type)
+            elif kind in ("scatter", "dynamic-update-slice"):
+                upd = (op.operand_types[1] if len(op.operand_types) > 1
+                       else op.result_type)
+                total.hbm_bytes += 2.0 * _shapes_bytes(upd)
+                if kind == "scatter":
+                    for g in _CALL_ATTR_RE.finditer(op.rest):
+                        names = g.group(1) or g.group(2)
+                        for n in re.findall(r"%?([\w.\-]+)", names):
+                            if n in comps:
+                                total.add(cost_of(n))
+            elif kind == "reduce" or kind == "reduce-window":
+                total.hbm_bytes += (_shapes_bytes(op.result_type)
+                                    + sum(_shapes_bytes(t)
+                                          for t in op.operand_types))
+            elif kind in ("call", "conditional", "fusion", "map", "sort",
+                          "select-and-scatter", "custom-call"):
+                for g in _CALL_ATTR_RE.finditer(op.rest):
+                    names = g.group(1) or g.group(2)
+                    for n in re.findall(r"%?([\w.\-]+)", names):
+                        if n in comps:
+                            total.add(cost_of(n))
+        return total
+
+    out = HloCosts()
+    out.add(cost_of(entry))
+    out.while_trips = dict(trips_seen)
+    return out

@@ -1,0 +1,60 @@
+"""MODEL_FLOPS: the useful-work baseline for the roofline ratio.
+
+train:   6 * N * D  (fwd 2ND + bwd 4ND), N = active params, D = tokens
+prefill: 2 * N * D
+decode:  2 * N * B  (one token per sequence)
+
+For MoE archs N counts only *active* parameters: non-expert params plus
+(top_k + n_shared)/n_experts of the routed expert params. Attention
+score/value FLOPs (O(S^2)) are excluded per the standard 6ND convention —
+the HLO/model ratio therefore runs above 1 for long sequences, which the
+§Roofline notes call out per cell.
+"""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+from repro.models.lm import LM, PAD_MULTIPLE
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Active-parameter count from config arithmetic (not materialized)."""
+    d, f = cfg.d_model, cfg.d_ff
+    dh, h, kh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    attn = d * (h * dh) * 2 + d * (kh * dh) * 2
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+
+    per_layer_dense = attn + 3 * d * f
+    if cfg.block_pattern == "moe":
+        fe = cfg.d_ff_expert or f
+        active_experts = cfg.top_k + cfg.n_shared_experts
+        per_layer = attn + d * cfg.n_experts + 3 * d * fe * active_experts
+        return cfg.n_layers * per_layer + emb
+    if cfg.block_pattern.startswith("mamba_hybrid"):
+        di = cfg.ssm_expand * d
+        hh = di // cfg.ssm_head_dim
+        n = cfg.ssm_state
+        mamba = d * (2 * di + 2 * n + hh) + di * d + cfg.conv_width * (
+            di + 2 * n)
+        k = cfg.pattern_arg(6)
+        n_shared_invocations = cfg.n_layers // k
+        shared = attn + 3 * d * f
+        return (cfg.n_layers * mamba + n_shared_invocations * shared + emb)
+    if cfg.block_pattern.startswith("xlstm"):
+        di = 2 * d
+        mlstm = d * 2 * di + di * 3 * di + di * 2 * cfg.n_heads + di * d
+        slstm = d * 4 * d + cfg.n_heads * (d // cfg.n_heads) ** 2 * 4 + \
+            d * 2 * (4 * d // 3) + (4 * d // 3) * d
+        k = cfg.pattern_arg(4)
+        n_groups = cfg.n_layers // k
+        return n_groups * ((k - 1) * mlstm + slstm) + emb
+    return cfg.n_layers * per_layer_dense + emb
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    n = active_params(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/sequence

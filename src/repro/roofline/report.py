@@ -1,0 +1,81 @@
+"""Roofline report: three terms per dry-run cell + bottleneck + notes.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI. Terms are seconds-per-step lower bounds:
+    compute    = HLO_FLOPs_per_chip / peak
+    memory     = HBM_bytes_per_chip / bw          (perfect-fusion floor)
+    collective = link_bytes_per_chip / link_bw    (ring model, 1 link)
+The bottleneck is the max term; roofline fraction = compute / max term
+(how close the cell is to being compute-limited — 1.0 means the arithmetic
+is the wall). MODEL_FLOPS/HLO_FLOPs flags remat/attention/dispatch overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def terms(rec: dict) -> dict:
+    pd = rec["per_device"]
+    c = pd["hlo_flops"] / PEAK_FLOPS
+    m = pd["hbm_bytes"] / HBM_BW
+    n = pd["collective_bytes"] / LINK_BW
+    dom = max((("compute", c), ("memory", m), ("collective", n)),
+              key=lambda t: t[1])
+    return {
+        "compute_s": c, "memory_s": m, "collective_s": n,
+        "dominant": dom[0],
+        "roofline_fraction": c / max(c, m, n) if max(c, m, n) > 0 else 0.0,
+        "useful_flops_ratio": (rec["model_flops_per_device"]
+                               / max(pd["hlo_flops"], 1.0)),
+    }
+
+
+def load(dirpath: str) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") == "ok":
+            rec["terms"] = terms(rec)
+        out.append(rec)
+    return out
+
+
+def summarize(dirpath: str) -> list[str]:
+    lines = ["cell,us_per_call,derived"]
+    for rec in load(dirpath):
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec.get("status") != "ok":
+            lines.append(f"roofline_{tag},0,status=FAILED")
+            continue
+        t = rec["terms"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        lines.append(
+            f"roofline_{tag},{1e6 * bound:.0f},"
+            f"compute={t['compute_s']:.4f};memory={t['memory_s']:.4f};"
+            f"collective={t['collective_s']:.4f};dom={t['dominant']};"
+            f"frac={t['roofline_fraction']:.3f};"
+            f"useful={t['useful_flops_ratio']:.3f}")
+    return lines
+
+
+def markdown_table(dirpath: str, mesh: str = "16x16") -> str:
+    """EXPERIMENTS.md §Roofline table (single-pod cells)."""
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | roofline frac | useful FLOPs |",
+            "|---|---|---|---|---|---|---|---|"]
+    for rec in load(dirpath):
+        if rec.get("status") != "ok" or rec.get("mesh") != mesh:
+            continue
+        t = rec["terms"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{t['dominant']} | {t['roofline_fraction']:.3f} | "
+            f"{t['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)

@@ -1,0 +1,29 @@
+"""Serving steps: prefill (prompt -> populated cache) and decode (one token).
+
+``decode_*`` shapes in the assignment lower ``serve_step`` — one new token
+against a KV cache of seq_len — NOT ``train_step``; these builders are what
+the dry-run lowers for the inference cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch, caches):
+        logits, caches = model.prefill(params, batch, caches)
+        # next-token from the last prompt position (greedy)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, tokens, caches, pos):
+        logits, caches = model.decode_step(params, tokens, caches, pos)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return decode_step

@@ -1,0 +1,5 @@
+from repro.sparse.partition import Partition
+from repro.sparse.blockell import BlockEll
+from repro.sparse import matrices
+
+__all__ = ["Partition", "BlockEll", "matrices"]

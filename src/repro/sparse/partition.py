@@ -1,0 +1,97 @@
+"""Block-row distribution of a sparse matrix over N nodes (paper §1.2).
+
+Node ``s`` owns the contiguous index range ``I_s = [s*R, (s+1)*R)`` of rows of
+the system matrix and the matching entries of every distributed vector — the
+PETSc-style *block row distribution* the paper assumes. On TPU the "node" axis
+is a mesh axis; here we keep the mapping static and explicit so that both the
+single-device simulator (``comm.sim``) and the ``shard_map`` runtime
+(``comm.shard``) agree on ownership.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Static description of the block-row distribution.
+
+    Attributes:
+      m:        global problem size M (rows).
+      n_nodes:  number of nodes N.
+      bm:       tile height used by the Block-ELL storage (rows per tile).
+      bn:       tile width (columns per tile). Redundancy bookkeeping runs at
+                ``bn``-column-tile granularity (TPU adaptation of the paper's
+                per-entry sets; see DESIGN.md §3).
+    """
+
+    m: int
+    n_nodes: int
+    bm: int
+    bn: int
+
+    def __post_init__(self):
+        if self.m % self.n_nodes != 0:
+            raise ValueError(f"M={self.m} not divisible by N={self.n_nodes}")
+        if self.rows_per_node % self.bm != 0:
+            raise ValueError(
+                f"rows/node={self.rows_per_node} not divisible by bm={self.bm}")
+        if self.rows_per_node % self.bn != 0:
+            raise ValueError(
+                f"rows/node={self.rows_per_node} not divisible by bn={self.bn}")
+
+    # -- sizes ------------------------------------------------------------
+    @property
+    def rows_per_node(self) -> int:
+        return self.m // self.n_nodes
+
+    @property
+    def row_tiles(self) -> int:           # global number of row tiles
+        return self.m // self.bm
+
+    @property
+    def col_tiles(self) -> int:           # global number of column tiles
+        return self.m // self.bn
+
+    @property
+    def row_tiles_per_node(self) -> int:
+        return self.rows_per_node // self.bm
+
+    @property
+    def col_tiles_per_node(self) -> int:
+        return self.rows_per_node // self.bn
+
+    # -- ownership ---------------------------------------------------------
+    def owner_of_row(self, i) -> np.ndarray:
+        return np.asarray(i) // self.rows_per_node
+
+    def owner_of_col_tile(self, t) -> np.ndarray:
+        return np.asarray(t) // self.col_tiles_per_node
+
+    def node_rows(self, s: int) -> tuple[int, int]:
+        r = self.rows_per_node
+        return s * r, (s + 1) * r
+
+    def node_col_tiles(self, s: int) -> tuple[int, int]:
+        c = self.col_tiles_per_node
+        return s * c, (s + 1) * c
+
+
+def neighbor(s: int, k: int, n_nodes: int) -> int:
+    """Designated redundancy destination ``d_{s,k}`` — Eq. (1) of the paper.
+
+    The φ nearest ring neighbours of node ``s``: +1, -1, +2, -2, ... for
+    k = 1, 2, 3, 4, ...  (k odd → s + ceil(k/2), k even → s - k/2, mod N).
+    """
+    if k < 1:
+        raise ValueError("k is 1-based")
+    if k % 2 == 1:
+        return (s + (k + 1) // 2) % n_nodes
+    return (s - k // 2) % n_nodes
+
+
+def neighbors(s: int, phi: int, n_nodes: int) -> list[int]:
+    """``[d_{s,1}, ..., d_{s,phi}]``."""
+    return [neighbor(s, k, n_nodes) for k in range(1, phi + 1)]

@@ -1,0 +1,19 @@
+"""Train step: loss -> grad -> AdamW. Pure function factory for pjit."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update
+
+
+def make_train_step(model, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state: OptState, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_opt, gnorm = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm,
+                   "step": new_opt.step}
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,82 @@
+"""Hypothesis mini-shim: used only when the real package is unavailable
+offline. API-compatible subset: @given over strategies with seeded random
+sampling (fixed example count), @settings no-op, st.integers/floats/sampled_
+from/tuples/composite. Property tests are written against the real API and
+run unchanged when hypothesis is installed.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+try:                                      # pragma: no cover
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self.sample(rng)))
+
+        def filter(self, pred):
+            def sample(rng):
+                for _ in range(1000):
+                    v = self.sample(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter failed to find a value")
+            return _Strategy(sample)
+
+    class st:  # noqa: N801
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def composite(f):
+            def builder(*args, **kw):
+                def sample(rng):
+                    draw = lambda strat: strat.sample(rng)
+                    return f(draw, *args, **kw)
+                return _Strategy(sample)
+            return builder
+
+    def given(*gstrats, **kwstrats):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xE5B)
+                n = getattr(f, "_max_examples", 25)
+                for _ in range(n):
+                    vals = [s.sample(rng) for s in gstrats]
+                    kvals = {k: s.sample(rng) for k, s in kwstrats.items()}
+                    f(*args, *vals, **kwargs, **kvals)
+            return wrapper
+        return deco
+
+    def settings(max_examples=25, **_):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco

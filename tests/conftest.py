@@ -1,0 +1,6 @@
+import jax
+
+# Solver fidelity (the paper runs double precision); explicit dtypes in the
+# LM stack are unaffected. Smoke tests must see 1 CPU device — the dry-run
+# (and only the dry-run) forces 512 host devices in its own process.
+jax.config.update("jax_enable_x64", True)

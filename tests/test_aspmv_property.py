@@ -1,0 +1,85 @@
+"""Property tests for the ASpMV redundancy plan (paper §2.2/§2.2.1).
+
+Invariant: after one augmented SpMV every input-vector tile has >= phi + 1
+copies on distinct nodes, so any <= phi simultaneous node failures leave a
+surviving copy of every tile (last paragraph of §2.2.1). Swept over random
+sparsity patterns, node counts and phi — including patterns with empty
+columns (m(i) = 0), the case where the paper's printed strict inequality
+would fail (erratum note in repro/core/aspmv.py).
+"""
+import numpy as np
+import pytest
+
+from tests._hypo import given, settings, st
+
+from repro.core.aspmv import build_plan
+from repro.sparse.blockell import BlockEll
+from repro.sparse.partition import Partition, neighbor, neighbors
+
+
+def _random_problem(seed, n_nodes, rows_per_node, density):
+    rng = np.random.default_rng(seed)
+    bm = bn = 4
+    m = n_nodes * rows_per_node
+    nnz = max(int(density * m * m), m)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, m, nnz)
+    rows = np.concatenate([rows, np.arange(m)])     # nonzero diagonal
+    cols = np.concatenate([cols, np.arange(m)])
+    vals = rng.standard_normal(rows.size)
+    a = BlockEll.from_coo(rows, cols, vals, m, bm, bn)
+    part = Partition(m=m, n_nodes=n_nodes, bm=bm, bn=bn)
+    return a, part
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_nodes=st.sampled_from([2, 3, 4, 6, 8]),
+       phi=st.integers(1, 4),
+       density=st.floats(0.0, 0.05))
+def test_phi_plus_one_copies(seed, n_nodes, phi, density):
+    if phi >= n_nodes:
+        phi = n_nodes - 1
+    a, part = _random_problem(seed, n_nodes, rows_per_node=8,
+                              density=density)
+    plan = build_plan(a, part, phi)          # .verify() runs inside
+    assert plan.holders.sum(axis=1).min() >= phi + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), phi=st.integers(1, 3),
+       start=st.integers(0, 7))
+def test_survives_any_phi_failures(seed, phi, start):
+    a, part = _random_problem(seed, 8, rows_per_node=8, density=0.01)
+    plan = build_plan(a, part, phi)
+    failed = [(start + i) % 8 for i in range(phi)]
+    assert plan.survives(np.array(failed)).all()
+
+
+def test_diagonal_matrix_forces_extra_sends():
+    """Pure-diagonal A: ordinary SpMV sends nothing (m(i) = 0 for all i);
+    the erratum condition must still create phi copies."""
+    m, bm = 32, 4
+    rows = cols = np.arange(m)
+    a = BlockEll.from_coo(rows, cols, np.ones(m), m, bm, bm)
+    part = Partition(m=m, n_nodes=4, bm=bm, bn=bm)
+    for phi in (1, 2, 3):
+        plan = build_plan(a, part, phi)
+        assert plan.natural_tiles_sent == 0
+        assert plan.holders.sum(axis=1).min() == phi + 1
+
+
+def test_neighbor_function_matches_paper_eq1():
+    # d_{s,k}: +1, -1, +2, -2, ... around the ring (Eq. 1)
+    assert neighbors(5, 4, 16) == [6, 4, 7, 3]
+    assert neighbor(0, 2, 16) == 15
+    assert neighbor(15, 1, 16) == 0
+
+
+def test_denser_matrix_needs_fewer_extra_sends():
+    """§2.2: denser matrices have lower ASpMV overhead."""
+    a1, part = _random_problem(0, 4, 8, density=0.0)
+    a2, _ = _random_problem(0, 4, 8, density=0.2)
+    p1 = build_plan(a1, part, 1)
+    p2 = build_plan(a2, part, 1)
+    assert p2.extra_tiles_sent <= p1.extra_tiles_sent

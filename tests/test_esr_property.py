@@ -1,0 +1,37 @@
+"""Property test: ESR/ESRP recovery is exact for random failure scenarios.
+
+Sweeps (T, phi, failure iteration, failed-node block) — every combination
+must converge to the reference trajectory's iteration count with the target
+residual, covering all phases of the storage cycle (first push, second push,
+plain iterations, pre-stage worst case).
+"""
+import jax
+import numpy as np
+import pytest
+
+from tests._hypo import given, settings, st
+
+from repro.core.driver import solve_resilient
+from repro.sparse.matrices import build_problem
+
+
+@pytest.fixture(scope="module")
+def setup():
+    problem = build_problem("poisson2d", n_nodes=8, nx=32, ny=32)
+    ref = solve_resilient(problem, strategy="none", rtol=1e-9)
+    return problem, ref
+
+
+@settings(max_examples=12, deadline=None)
+@given(T=st.sampled_from([1, 5, 20]), phi=st.integers(1, 3),
+       frac=st.floats(0.3, 0.9), start=st.integers(0, 7))
+def test_recovery_exact_random_scenarios(setup, T, phi, frac, start):
+    problem, ref = setup
+    fail_at = max(4, int(ref.converged_iter * frac))
+    failed = [(start + i) % 8 for i in range(phi)]
+    r = solve_resilient(problem, strategy="esrp", T=T, phi=phi, rtol=1e-9,
+                        fail_at=fail_at, failed_nodes=failed)
+    assert r.rel_residual < 1e-9
+    assert r.converged_iter == ref.converged_iter   # trajectory preserved
+    if T > 1 and r.target_iter >= 0:
+        assert 0 <= r.wasted_iters <= T + 1

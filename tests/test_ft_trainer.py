@@ -1,0 +1,157 @@
+"""ESRP-for-training: buddy-plan properties + trainer recovery identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypo import given, settings, st
+
+from repro.configs import smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.ft import checkpoint
+from repro.ft.buddy import BuddyPlan
+from repro.ft.esrp_trainer import ESRPTrainer, FTConfig
+from repro.models.lm import LM
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+
+# --------------------------------------------------------------------------- #
+# buddy plan properties
+# --------------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), n_ranks=st.sampled_from([4, 8]),
+       phi=st.integers(1, 3), start=st.integers(0, 7))
+def test_buddy_push_lose_recover_roundtrip(seed, n_ranks, phi, start):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.standard_normal((n_ranks * 4, 3))),
+            "b": jnp.asarray(rng.standard_normal((2, n_ranks * 2))),
+            "scalar": jnp.asarray(1.5)}
+    plan = BuddyPlan.build(tree, None, n_ranks, phi)
+    buddies = plan.push(tree)
+    failed = [(start + i) % n_ranks for i in range(min(phi, n_ranks - 1))]
+    # failure loses live shards AND the buffer slices hosted on failed ranks
+    lost = plan.lose(tree, failed)
+    buddies_lost = [plan.lose(b, failed) for b in buddies]
+    rec = plan.recover(lost, buddies_lost, failed)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(rec[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_buddy_too_many_failures_raise():
+    tree = {"a": jnp.zeros((8, 2))}
+    plan = BuddyPlan.build(tree, None, 8, 1)
+    with pytest.raises(RuntimeError):
+        plan.recover(tree, plan.push(tree), [0, 1])
+
+
+# --------------------------------------------------------------------------- #
+# trainer end-to-end
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("internlm2_1_8b")
+    model = LM(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    ts = make_train_step(model, AdamWConfig(warmup_steps=4))
+    pipe = TokenPipeline(cfg, global_batch=4, seq_len=32, seed=7)
+    ref = ESRPTrainer(model, ts, pipe, FTConfig(mode="none"), specs)
+    p_ref, o_ref, _ = ref.run(params, opt, n_steps=22)
+    return model, ts, pipe, specs, params, opt, p_ref
+
+
+def _max_diff(a, b):
+    return max(float(jnp.abs(x - y).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("mode,fail_at,failed", [
+    ("esrp", 13, [2]),
+    ("esrp", 17, [5, 6]),
+    ("imcr", 13, [0]),
+])
+def test_recovery_reproduces_trajectory(setup, mode, fail_at, failed):
+    model, ts, pipe, specs, params, opt, p_ref = setup
+    tr = ESRPTrainer(model, ts, pipe,
+                     FTConfig(mode=mode, T=5, phi=len(failed), n_ranks=8),
+                     specs)
+    p_ft, _, _ = tr.run(params, opt, n_steps=22, fail_at=fail_at,
+                        failed_ranks=failed)
+    assert _max_diff(p_ref, p_ft) == 0.0     # bitwise trajectory identity
+
+
+def test_esrp_pushes_less_than_imcr(setup):
+    model, ts, pipe, specs, params, opt, _ = setup
+    a = ESRPTrainer(model, ts, pipe,
+                    FTConfig(mode="esrp", T=5, phi=1, n_ranks=8), specs)
+    b = ESRPTrainer(model, ts, pipe,
+                    FTConfig(mode="imcr", T=5, phi=1, n_ranks=8), specs)
+    a.run(params, opt, n_steps=12)
+    b.run(params, opt, n_steps=12)
+    assert a.push_count == b.push_count > 0
+    assert a.push_bytes < b.push_bytes        # params ride the FSDP gather
+
+
+def test_compressed_redundancy_bounded_error(setup):
+    model, ts, pipe, specs, params, opt, p_ref = setup
+    tr = ESRPTrainer(model, ts, pipe,
+                     FTConfig(mode="esrp", T=5, phi=1, n_ranks=8,
+                              compress=True), specs)
+    p_ft, _, _ = tr.run(params, opt, n_steps=22, fail_at=13,
+                        failed_ranks=[3])
+    d = _max_diff(p_ref, p_ft)
+    assert 0 < d < 1e-2                       # bf16 moments: small, bounded
+
+
+def test_failure_before_first_stage_raises(setup):
+    model, ts, pipe, specs, params, opt, _ = setup
+    tr = ESRPTrainer(model, ts, pipe,
+                     FTConfig(mode="esrp", T=50, phi=1, n_ranks=8), specs)
+    with pytest.raises(RuntimeError):
+        tr.run(params, opt, n_steps=22, fail_at=10, failed_ranks=[1])
+
+
+# --------------------------------------------------------------------------- #
+# disk checkpointing
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip(tmp_path, setup):
+    model, ts, pipe, specs, params, opt, _ = setup
+    checkpoint.save(str(tmp_path), 7, params=params, opt=opt)
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    out = checkpoint.restore(str(tmp_path), 7,
+                             {"params": params, "opt": opt})
+    assert _max_diff(out["params"], params) == 0.0
+    assert int(out["opt"].step) == int(opt.step)
+
+
+def test_data_pipeline_deterministic_skippable():
+    cfg = smoke_config("internlm2_1_8b")
+    pipe = TokenPipeline(cfg, global_batch=2, seq_len=16, seed=3)
+    b1 = pipe.batch_at(41)
+    b2 = pipe.batch_at(41)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = pipe.batch_at(42)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_elastic_restart_different_rank_count(tmp_path, setup):
+    """Elastic scaling: checkpoint under 8 FSDP ranks, resume under 4 —
+    the state is logically global, so resharding is free and the trajectory
+    continues exactly (losses match a straight run)."""
+    model, ts, pipe, specs, params, opt, p_ref = setup
+    tr8 = ESRPTrainer(model, ts, pipe,
+                      FTConfig(mode="esrp", T=5, phi=1, n_ranks=8), specs)
+    p_mid, o_mid, _ = tr8.run(params, opt, n_steps=10)
+    checkpoint.save(str(tmp_path), 10, params=p_mid, opt=o_mid)
+
+    out = checkpoint.restore(str(tmp_path), 10,
+                             {"params": p_mid, "opt": o_mid})
+    tr4 = ESRPTrainer(model, ts, pipe,
+                      FTConfig(mode="esrp", T=5, phi=1, n_ranks=4), specs)
+    p_end, _, _ = tr4.run(out["params"], out["opt"], n_steps=22,
+                          start_step=10, fail_at=17, failed_ranks=[1])
+    assert _max_diff(p_ref, p_end) == 0.0

@@ -1,0 +1,77 @@
+"""While-aware HLO analyzer: trip counts, dot flops, collective model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_analysis import (COLLECTIVES, HloCosts, analyze,
+                                         parse_hlo)
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        c, _ = jax.lax.scan(body, x, None, length=8)
+        return c
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+    r = analyze(c.as_text())
+    expected = 2 * 128 ** 3 * 8
+    assert abs(r.flops - expected) / expected < 0.01
+    assert 8 in r.while_trips.values()
+
+
+def test_nested_scan_trips():
+    def f(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ d, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    r = analyze(c.as_text())
+    expected = 2 * 64 ** 3 * 15
+    assert abs(r.flops - expected) / expected < 0.01
+
+
+_FIXTURE = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64,128], p1: bf16[1024]) -> f32[64,128] {
+  %p0 = f32[64,128] parameter(0)
+  %p1 = bf16[1024] parameter(1)
+  %ag = bf16[2048] all-gather(%p1), replica_groups={}, dimensions={0}
+  %ar = f32[64,128] all-reduce(%p0), to_apply=%add
+  %rs = bf16[512] reduce-scatter(%p1), to_apply=%add, dimensions={0}
+  %cp = bf16[1024] collective-permute(%p1), source_target_pairs={{0,1}}
+  ROOT %out = f32[64,128] add(%ar, %ar)
+}
+"""
+
+
+def test_collective_ring_model_bytes():
+    r = analyze(_FIXTURE)
+    # all-gather: |res| = 2048*2 = 4096; all-reduce: 2*|res| = 2*32768 B
+    assert r.collectives["all-gather"] == 4096
+    assert r.collectives["all-reduce"] == 2 * 64 * 128 * 4
+    assert r.collectives["reduce-scatter"] == 1024 * 2   # operand bytes
+    assert r.collectives["collective-permute"] == 1024 * 2
+
+
+def test_parse_hlo_computations():
+    comps = parse_hlo(_FIXTURE)
+    assert "main" in comps and "add" in comps
+    kinds = {op.kind for op in comps["main"].ops}
+    assert {"all-gather", "all-reduce", "reduce-scatter",
+            "collective-permute"} <= kinds

@@ -1,0 +1,146 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypo import given, settings, st
+
+from repro.kernels.block_jacobi.ops import precond_apply
+from repro.kernels.fused_pcg.ops import pcg_update
+from repro.kernels.spmv.ops import blockell_matvec
+from repro.kernels.spmv.ref import spmv_ref
+from repro.sparse.blockell import BlockEll
+from repro.sparse.matrices import build_problem
+
+
+def _tol(dtype):
+    return dict(rtol=1e-5, atol=1e-5) if dtype == np.float32 else \
+        dict(rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("bm,bn,n_tiles", [(4, 4, 8), (8, 8, 6), (8, 16, 4)])
+def test_spmv_kernel_shapes(dtype, bm, bn, n_tiles):
+    rng = np.random.default_rng(bm * bn + n_tiles)
+    m = bm * n_tiles * 2
+    mc = (m // bn) * bn
+    m = max(m, mc)
+    nnz = 6 * m
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, (m // bn) * bn, nnz)
+    vals = rng.standard_normal(nnz).astype(dtype)
+    a = BlockEll.from_coo(rows, cols, vals, m, bm, bn, dtype=dtype)
+    x = jnp.asarray(rng.standard_normal(m).astype(dtype))
+    ref = spmv_ref(a.data, a.idx, x)
+    ker = blockell_matvec(a, x, backend="interpret")
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), kmax_extra=st.integers(0, 3))
+def test_spmv_kernel_random_patterns(seed, kmax_extra):
+    rng = np.random.default_rng(seed)
+    bm = bn = 8
+    m = 128
+    nnz = rng.integers(m, 8 * m)
+    rows = rng.integers(0, m, nnz)
+    cols = rng.integers(0, m, nnz)
+    vals = rng.standard_normal(nnz)
+    a = BlockEll.from_coo(rows, cols, vals, m, bm, bn)
+    if kmax_extra:   # padding slots must contribute exactly zero
+        a = BlockEll(
+            jnp.pad(a.data, ((0, 0), (0, kmax_extra), (0, 0), (0, 0))),
+            jnp.pad(a.idx, ((0, 0), (0, kmax_extra))), a.nblk, a.shape,
+            bm, bn)
+    x = jnp.asarray(rng.standard_normal(m))
+    np.testing.assert_allclose(
+        np.asarray(blockell_matvec(a, x, backend="interpret")),
+        np.asarray(spmv_ref(a.data, a.idx, x)), rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("m,b,rows", [(512, 8, 64), (640, 10, 160),
+                                      (1024, 4, 256)])
+def test_fused_pcg_kernel(dtype, m, b, rows):
+    rng = np.random.default_rng(m + b)
+    pinv = jnp.asarray(rng.standard_normal((m // b, b, b)).astype(dtype))
+    x, r, p, q = (jnp.asarray(rng.standard_normal(m).astype(dtype))
+                  for _ in range(4))
+    alpha = jnp.asarray(dtype(0.37))
+    ref = pcg_update(alpha, x, r, p, q, pinv, backend="jnp")
+    ker = pcg_update(alpha, x, r, p, q, pinv, backend="interpret", rows=rows)
+    for a_, b_ in zip(ref, ker):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a_),
+                                   **_tol(dtype))
+
+
+@pytest.mark.parametrize("m,b,rows", [(512, 8, 64), (800, 10, 80)])
+def test_block_jacobi_kernel(m, b, rows):
+    rng = np.random.default_rng(m)
+    pinv = jnp.asarray(rng.standard_normal((m // b, b, b)))
+    r = jnp.asarray(rng.standard_normal(m))
+    np.testing.assert_allclose(
+        np.asarray(precond_apply(pinv, r, backend="interpret", rows=rows)),
+        np.asarray(precond_apply(pinv, r, backend="jnp")),
+        rtol=1e-11, atol=1e-11)
+
+
+def test_kernel_inside_pcg_solver():
+    """The interpret-mode kernel can drive the full resilient solver."""
+    from repro.core.driver import solve_resilient
+    p = build_problem("poisson2d", n_nodes=4, nx=16, ny=16)
+    mv = lambda x: blockell_matvec(p.a, x, backend="interpret")
+    r = solve_resilient(p, strategy="esrp", T=5, phi=1, rtol=1e-8,
+                        matvec=mv, fail_at=12, failed_nodes=[2], chunk=16)
+    assert r.rel_residual < 1e-8
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 24)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_flash_attention_kernel(causal, window, dtype):
+    from repro.kernels.attention.flash import flash_attention
+    from repro.kernels.attention.ref import attention_ref
+    rng = np.random.default_rng(int(causal) + window)
+    q, k, v = (jnp.asarray(rng.standard_normal((2, 64, 16)).astype(dtype))
+               for _ in range(3))
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=16, bk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_flash_wrapper():
+    from repro.kernels.attention.ops import gqa_flash
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((2, 32, 8, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 32, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 32, 2, 16)), jnp.float32)
+    o1 = gqa_flash(q, k, v, backend="interpret", bq=16, bk=16)
+    o2 = gqa_flash(q, k, v, backend="jnp")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_mlstm_matches_recurrent():
+    from repro.models.xlstm import mlstm_chunked, mlstm_seq
+    rng = np.random.default_rng(3)
+    B, S, H, P = 2, 64, 4, 16
+    q, k, v = (jnp.asarray(rng.standard_normal((B, S, H, P)), jnp.float32)
+               for _ in range(3))
+    it = jnp.asarray(rng.standard_normal((B, S, H)) * 2.0, jnp.float32)
+    ft = jax.nn.log_sigmoid(
+        jnp.asarray(rng.standard_normal((B, S, H)) + 3.0, jnp.float32))
+    y_ref, st_ref = mlstm_seq(q, k, v, it, ft)
+    for chunk in (8, 32, 64):
+        y_c, st_c = mlstm_chunked(q, k, v, it, ft, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st_c["C"]),
+                                   np.asarray(st_ref["C"]),
+                                   rtol=1e-3, atol=1e-3)

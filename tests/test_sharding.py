@@ -1,0 +1,60 @@
+"""Sharding-context resolution: divisibility and conflict fallbacks."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@pytest.fixture
+def ctx():
+    old_mesh, old_bind = sharding._CTX.mesh, sharding._CTX.bindings
+    sharding._CTX.mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    sharding._CTX.bindings = {
+        "dp": ("pod", "data"), "fsdp": ("pod", "data"),
+        "tp": ("model",), "atp": ("model",), "sp": ("data",), "seqtp": ("model",)}
+    yield sharding._CTX
+    sharding._CTX.mesh, sharding._CTX.bindings = old_mesh, old_bind
+
+
+def test_divisible_dims_fully_sharded(ctx):
+    spec = sharding._resolve(("dp", None, "tp"), (256, 7, 4096))
+    assert spec == P(("pod", "data"), None, "model")
+
+
+def test_indivisible_dim_falls_back_to_prefix_or_replicated(ctx):
+    # batch=1 cannot shard 32 ways -> prefix "pod"? 1 % 2 != 0 -> replicated
+    spec = sharding._resolve(("dp", "sp"), (1, 524288))
+    assert spec[0] is None
+    assert spec[1] == "data"
+    # batch=16 shards over pod*data? 16 % 32 != 0 -> prefix ("pod",)=2 works
+    spec = sharding._resolve(("dp",), (16,))
+    assert spec[0] == "pod"
+
+
+def test_conflicting_axes_dropped(ctx):
+    # dp consumes "data"; sp would reuse it -> dropped
+    spec = sharding._resolve(("dp", "sp", "tp", None), (128, 32768, 16, 128))
+    assert spec == P(("pod", "data"), None, "model", None)
+
+
+def test_kv_head_deficit_replicates(ctx):
+    # kv heads = 8 on a 16-way model axis -> replicated
+    spec = sharding._resolve(("dp", None, "tp", None), (128, 1, 8, 128))
+    assert spec[2] is None
+
+
+def test_axis_size(ctx):
+    assert sharding.axis_size("tp") == 16
+    assert sharding.axis_size("dp") == 32
+    assert sharding.axis_size("unbound") == 1
+
+
+def test_no_mesh_is_noop():
+    import jax.numpy as jnp
+    x = jnp.zeros((4, 4))
+    assert sharding.constrain(x, "dp", "tp") is x
