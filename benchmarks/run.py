@@ -173,6 +173,66 @@ def bench_ft():
               f"{tr.push_bytes / max(tr.push_count, 1) / 1e6:.2f}")
 
 
+def bench_iteration(full: bool):
+    """Per-iteration hot-loop microbenchmark (us/iteration) for the three
+    execution configurations this repo's perf trajectory tracks:
+
+      jnp         seed path: unfused closure ops (einsum SpMV, separate pᵀq
+                  and rᵀz dots) + jnp.where storage bookkeeping
+      fused       SolverOps bundle (fused SpMV+dot, fused x/r/z/rz update),
+                  still where-gated
+      fused_cond  the full PR: fused bundle + lax.cond-gated queue push /
+                  star capture / residual replacement
+
+    Rows ``iteration_<config>`` use rr_every=0 (the paper's setting);
+    ``iteration_<config>_rr10`` adds residual replacement every 10 iterations
+    — the case where cond-gating removes a whole SpMV+precond from 9 of
+    every 10 iterations.
+    """
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.core import esrp
+    from repro.core.ops import make_closure_ops
+    from repro.sparse.matrices import build_problem
+
+    kind, kw = ("poisson3d", dict(nx=32)) if full else \
+        ("poisson2d", dict(nx=96))
+    p = build_problem(kind, n_nodes=16, **kw)
+    T, n_iters, reps = 20, 100, 5
+    thresh = jnp.asarray(-1.0, p.b.dtype)      # never freezes: pure hot loop
+
+    configs = (
+        ("jnp", make_closure_ops(p.a.matvec, p.apply_precond), False),
+        ("fused", p.solver_ops("jnp"), False),
+        ("fused_cond", p.solver_ops("jnp"), True),
+    )
+    out = []
+    for rr in (0, 10):
+        for name, ops, gated in configs:
+            run = lambda s: esrp.run_chunk(s, ops, T, n_iters, thresh,
+                                           rr, gated, p.b)
+            st = esrp.esrp_init(ops.matvec, ops.precond, p.b)
+            run(st)[1].block_until_ready()     # compile
+            best = float("inf")
+            for _ in range(reps):
+                st_r = esrp.esrp_init(ops.matvec, ops.precond, p.b)
+                t0 = time.perf_counter()
+                _, norms = run(st_r)
+                norms.block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            us = best / n_iters * 1e6
+            label = f"iteration_{name}" + (f"_rr{rr}" if rr else "")
+            out.append((label, us))
+            print(f"{label},{us:.1f},m={p.m};T={T};gated={int(gated)}")
+    base = dict(out)[f"iteration_jnp"]
+    winner = dict(out)[f"iteration_fused_cond"]
+    print(f"iteration_speedup,0,fused_cond_vs_jnp={base / winner:.3f}x")
+    _ensure_dir()
+    with open("artifacts/bench/iteration.csv", "w") as f:
+        f.writelines(f"{k},{v:.1f}\n" for k, v in out)
+
+
 def bench_roofline():
     """Roofline terms per dry-run cell (from artifacts/dryrun)."""
     from repro.roofline.report import summarize
@@ -186,6 +246,7 @@ ALL = {
     "table4": lambda full: bench_table4(full),
     "volume": lambda full: bench_volume(),
     "kernels": lambda full: bench_kernels(),
+    "iteration": bench_iteration,
     "ft": lambda full: bench_ft(),
     "roofline": lambda full: bench_roofline(),
 }
@@ -194,7 +255,7 @@ ALL = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, choices=list(ALL))
     args = ap.parse_args()
     names = [args.only] if args.only else list(ALL)
     for name in names:

@@ -62,6 +62,43 @@ def sharded_matvec(a: BlockEll, mesh: Mesh):
     return mv
 
 
+def sharded_solver_ops(problem: Problem, mesh: Mesh):
+    """SolverOps bundle for the distributed runtime.
+
+    The same ESRP/IMCR core from ``repro.core`` runs through this bundle
+    unchanged: the SpMV is the all-gather sharded matvec, every vector
+    produced by the fused update is constrained back to the block-row
+    placement (so XLA keeps the whole iteration SPMD-partitioned instead of
+    replicating intermediates), and the pᵀq / rᵀz dots lower to the natural
+    psum across the "nodes" axis. Cached per (problem, mesh): the jitted
+    chunk runners treat the bundle as a static argument.
+    """
+    from repro.core.ops import SolverOps
+
+    cache = getattr(problem, "_sharded_ops_cache", None)
+    if cache is None:
+        cache = {}
+        problem._sharded_ops_cache = cache
+    if mesh not in cache:
+        vec = NamedSharding(mesh, P("nodes"))
+        mv = sharded_matvec(problem.a, mesh)
+        precond = problem.apply_precond
+        constrain = lambda v: jax.lax.with_sharding_constraint(v, vec)
+
+        def matvec_dot(p):
+            q = mv(p)
+            return q, p @ q
+
+        def update(alpha, x, r, p, q):
+            x_new = constrain(x + alpha * p)
+            r_new = constrain(r - alpha * q)
+            z_new = constrain(precond(r_new))
+            return x_new, r_new, z_new, r_new @ z_new
+
+        cache[mesh] = SolverOps("sharded", mv, matvec_dot, precond, update)
+    return cache[mesh]
+
+
 # --------------------------------------------------------------------------- #
 # banded specialization: ppermute halo exchange (the paper's neighbour sends)
 # --------------------------------------------------------------------------- #

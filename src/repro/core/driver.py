@@ -6,6 +6,14 @@ nodes zero out all their dynamic data and then act as their own replacements.
 Reported quantities match the paper's tables: total runtime, reconstruction
 overhead, wasted iterations, converged iteration count, and residual drift
 (Eq. 2).
+
+The hot loop runs through a ``SolverOps`` bundle (repro.core.ops): Block-ELL
+SpMV fused with the pᵀq dot, fused vector update, cond-gated storage
+bookkeeping. Convergence uses a sync-free chunked protocol: each chunk
+carries ||r|| as a done flag and freezes the state at first convergence, so
+the driver never re-runs a chunk to land on the convergence iteration, and
+the norm-record readback of chunk i overlaps with the dispatch of chunk i+1
+instead of blocking between chunks.
 """
 from __future__ import annotations
 
@@ -20,7 +28,8 @@ import numpy as np
 from repro.core import esr, esrp, imcr
 from repro.core.aspmv import RedundancyPlan, build_plan
 from repro.core.failures import failed_row_mask, zero_failed
-from repro.core.pcg import PCGState, pcg_iterate, residual_drift
+from repro.core.ops import SolverOps, make_closure_ops
+from repro.core.pcg import PCGState, pcg_iterate_ops, residual_drift
 from repro.sparse.matrices import Problem
 
 
@@ -39,12 +48,18 @@ class SolveReport:
     drift: float                 # paper Eq. (2)
     aspmv_natural_bytes: int = 0
     aspmv_total_bytes: int = 0
+    run_calls: int = 0           # chunk dispatches (no final-chunk re-run)
 
 
 def _find_convergence(norms: np.ndarray, thresh: float) -> int:
     """Index of first iteration with ||r|| < thresh, or -1."""
     below = np.nonzero(norms < thresh)[0]
     return int(below[0]) if below.size else -1
+
+
+# module-level so the trace cache survives across solves (a fresh jit wrapper
+# per resume would recompile the same iteration every failure run)
+_resume_iterate = jax.jit(pcg_iterate_ops, static_argnums=1)
 
 
 def solve_resilient(
@@ -59,11 +74,34 @@ def solve_resilient(
     matvec: Optional[Callable] = None,
     chunk: int = 64,
     rr_every: int = 0,                 # residual replacement period (0 = off)
+    backend: str = "auto",             # SolverOps backend for the hot loop
+    ops: Optional[SolverOps] = None,   # explicit bundle (overrides backend)
+    gated: bool = True,                # cond-gated storage/rr bookkeeping
 ) -> SolveReport:
-    matvec = matvec or problem.a.matvec
-    precond = problem.apply_precond
+    if ops is None:
+        if matvec is not None:
+            # cache the closure bundle on the problem so repeated solves with
+            # the same matvec reuse the jitted chunk runners (the bundle is
+            # their static argument), without pinning the problem in a
+            # module-global cache
+            cache = getattr(problem, "_closure_ops_cache", None)
+            if cache is None:
+                cache = {}
+                problem._closure_ops_cache = cache
+            key = (matvec, problem.apply_precond)
+            if key not in cache:
+                cache[key] = make_closure_ops(*key)
+            ops = cache[key]
+        else:
+            ops = problem.solver_ops(backend)
+    matvec = ops.matvec
+    precond = ops.precond
     b = problem.b
-    thresh = rtol * float(jnp.linalg.norm(b))
+    thresh_dev = jnp.asarray(rtol * float(jnp.linalg.norm(b)), b.dtype)
+    # host-side scans must compare against the *same* value the chunk
+    # runner's freeze uses, or (in f32) a norm between the two would freeze
+    # the device state without the host ever declaring convergence
+    thresh = float(thresh_dev)
     part = problem.part
 
     plan: Optional[RedundancyPlan] = None
@@ -72,19 +110,17 @@ def solve_resilient(
 
     if strategy == "imcr":
         st = imcr.imcr_init(matvec, precond, b)
-        run = lambda s, n: imcr.run_chunk(s, matvec, precond, T, phi,
-                                          part.rows_per_node, n)
-        get_pcg = lambda s: s.pcg
+        run = lambda s, n: imcr.run_chunk(s, ops, T, phi,
+                                          part.rows_per_node, n,
+                                          thresh_dev, gated)
     elif strategy == "esrp":
         st = esrp.esrp_init(matvec, precond, b)
-        run = lambda s, n: esrp.run_chunk(s, matvec, precond, T, n,
-                                          b=b, rr_every=rr_every)
-        get_pcg = lambda s: s.pcg
+        run = lambda s, n: esrp.run_chunk(s, ops, T, n, thresh_dev,
+                                          rr_every, gated, b)
     elif strategy == "none":
         st = esrp.esrp_init(matvec, precond, b)   # T=max => never stores
-        run = lambda s, n: esrp.run_chunk(s, matvec, precond, 1 << 30, n,
-                                          b=b, rr_every=rr_every)
-        get_pcg = lambda s: s.pcg
+        run = lambda s, n: esrp.run_chunk(s, ops, 1 << 30, n, thresh_dev,
+                                          rr_every, gated, b)
     else:
         raise ValueError(strategy)
 
@@ -96,13 +132,34 @@ def solve_resilient(
 
     t0 = time.perf_counter()
     total_iters = 0
+    run_calls = 0
     resume_numeric_only = False
-    while True:
+    converged = False
+    # one chunk's norm record kept in flight: (device norms, start iteration).
+    # Readback (the host sync) happens only after the *next* chunk has been
+    # dispatched, so device compute and host bookkeeping overlap.
+    inflight: Optional[tuple[jax.Array, int]] = None
+
+    def settle(entry) -> bool:
+        """Block on one chunk's norm record; True iff it converged. The
+        chunk runner froze the state at first convergence, so on a hit the
+        live ``st`` already is the state at iteration base + hit + 1 — no
+        re-run needed, only the count is fixed up."""
+        nonlocal total_iters, converged
+        norms, base = entry
+        hit = _find_convergence(np.asarray(norms), thresh)
+        if hit >= 0:
+            total_iters = base + hit + 1
+            converged = True
+        return converged
+
+    while not converged:
         if resume_numeric_only:
             # post-recovery: re-run the reconstruction-point iteration without
             # its storage prelude (its push already happened pre-failure).
-            pcg = get_pcg(st)
-            pcg = pcg_iterate(pcg, matvec(pcg.p), precond)
+            # Jitted so the jnp backend fuses exactly like inside run_chunk —
+            # keeps the cross-backend trajectory bit-identity through recovery.
+            pcg = _resume_iterate(st.pcg, ops)
             st = st._replace(pcg=pcg)
             total_iters = int(pcg.j)
             resume_numeric_only = False
@@ -113,21 +170,30 @@ def solve_resilient(
         n = chunk
         if pending_fail:
             n = min(n, fail_at - total_iters)
+        entry = None
         if n > 0:
-            prev = st
-            st, norms = run(st, n)
-            norms = np.asarray(norms)
-            hit = _find_convergence(norms, thresh)
-            if hit >= 0:
-                # rerun the tail precisely up to convergence
-                st, _ = run(prev, hit + 1)
-                total_iters += hit + 1
-                break
+            st, norms = run(st, n)               # async dispatch
+            run_calls += 1
+            entry = (norms, total_iters)
             total_iters += n
+
+        if inflight is not None:
+            prev, inflight = inflight, None
+            if settle(prev):
+                break                            # entry (if any) discarded:
+                #                                  the state is frozen past
+                #                                  convergence by construction
+        at_fail = pending_fail and total_iters == fail_at
+        if entry is not None:
+            if at_fail or total_iters >= max_iters:
+                if settle(entry):
+                    break
+            else:
+                inflight = entry                 # overlap with next dispatch
         if total_iters >= max_iters:
             break
 
-        if pending_fail and total_iters == fail_at:
+        if at_fail:
             pending_fail = False
             failed = sorted(failed_nodes or [0])
             if strategy == "imcr":
@@ -137,11 +203,11 @@ def solve_resilient(
                 st, wasted, target, inner_rel, rec_t = _esrp_failure(
                     problem, plan, st, failed, T, matvec)
             recovery_s += rec_t
-            total_iters = int(get_pcg(st).j)
+            total_iters = int(st.pcg.j)
             resume_numeric_only = target >= 0
     runtime = time.perf_counter() - t0
 
-    pcg = get_pcg(st)
+    pcg = st.pcg
     jax.block_until_ready(pcg.x)
     drift = float(residual_drift(matvec, b, pcg.x, pcg.r))
     rel = float(jnp.linalg.norm(pcg.r)) / float(jnp.linalg.norm(b))
@@ -152,7 +218,8 @@ def solve_resilient(
         strategy=strategy, T=T, phi=phi, converged_iter=total_iters,
         rel_residual=rel, runtime_s=runtime, recovery_s=recovery_s,
         wasted_iters=wasted, target_iter=target, inner_rel=inner_rel,
-        drift=drift, aspmv_natural_bytes=nat_bytes, aspmv_total_bytes=tot_bytes)
+        drift=drift, aspmv_natural_bytes=nat_bytes,
+        aspmv_total_bytes=tot_bytes, run_calls=run_calls)
 
 
 # --------------------------------------------------------------------------- #
@@ -163,7 +230,7 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     reconstruct (Alg. 2) and rebuild a consistent post-stage ESRP state."""
     part = problem.part
     J = int(st.pcg.j)
-    st = jax.jit(esrp.esrp_prelude, static_argnums=1)(st, T)
+    st = jax.jit(esrp.esrp_prelude, static_argnums=(1, 2))(st, T, True)
 
     # --- the failure: all dynamic data on failed nodes is lost -------------
     mask = failed_row_mask(part, failed)
@@ -191,9 +258,14 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
         # surviving r, x and the replicated scalar β^(J-1) (paper §2.3)
         r_surv, x_surv, z_surv, p_surv = pcg.r, pcg.x, pcg.z, pcg.p
         beta_prev = pcg.beta
+        rz = pcg.rz          # replicated scalar — survives the failure
     else:
         r_surv, x_surv, z_surv, p_surv = st.r_s, st.x_s, st.z_s, st.p_s
         beta_prev = st.beta_s
+        # r*ᵀz* was captured with the stars precisely so the rollback needs
+        # no recompute from the (partly reconstructed) vectors: the stored
+        # scalar is the exact value of the uncorrupted trajectory.
+        rz = st.rz_s
 
     # static-data reload (excluded from the recovery timing, paper §4) —
     # cached per (problem, failed-set) so repeated benchmark runs also reuse
@@ -221,7 +293,6 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     r = r_surv.at[f_rows].set(r_f)
     z = z_surv.at[f_rows].set(z_f)
     p = p_surv.at[f_rows].set(st.q[curr_slot][f_rows])
-    rz = r @ z
     jax.block_until_ready(x)
     rec_t = time.perf_counter() - t0
 

@@ -12,6 +12,12 @@ Implementation notes (vs. the paper listing):
     traffic. We therefore always compute q = A·p once and gate only the
     bookkeeping on the schedule — the failure-free trajectory is bit-identical
     to plain PCG (the paper's trajectory-identity property, tested).
+  * Storage bookkeeping is ``jax.lax.cond``-gated: the (3, M) redundancy
+    queue rotation and the starred-locals duplication execute *only* on
+    storage iterations. (The seed's ``jnp.where`` over the whole state tree
+    copied the queue every iteration — pure overhead on the T-2 non-storage
+    iterations of each period. ``gated=False`` keeps that path for the
+    before/after microbenchmark in benchmarks/run.py.)
   * β capture: the paper stages β through β** (line 6) and commits at line 10.
     Entering the *second* storage iteration j₀+1, the live β variable already
     holds β^(j₀) — exactly the value Alg. 2 needs to reconstruct iteration
@@ -26,12 +32,14 @@ Implementation notes (vs. the paper listing):
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.pcg import PCGState, pcg_init, pcg_iterate
+from repro.core.ops import SolverOps
+from repro.core.pcg import (PCGState, pcg_init, pcg_iterate_ops,
+                            scan_with_convergence_freeze)
 
 
 class ESRPState(NamedTuple):
@@ -47,7 +55,7 @@ class ESRPState(NamedTuple):
     star_tag: jax.Array   # j*, -1 = none
 
 
-def esrp_init(matvec: Callable, precond: Callable, b: jax.Array,
+def esrp_init(matvec, precond, b: jax.Array,
               x0: jax.Array | None = None) -> ESRPState:
     pcg = pcg_init(matvec, precond, b, x0)
     z = jnp.zeros_like(b)
@@ -87,22 +95,33 @@ def capture_stars(st: ESRPState, tag: jax.Array) -> ESRPState:
                        beta_s=p.beta, rz_s=p.rz, star_tag=tag)
 
 
-def esrp_prelude(st: ESRPState, T: int) -> ESRPState:
+def esrp_prelude(st: ESRPState, T: int, gated: bool = True) -> ESRPState:
     """The storage bookkeeping of iteration j (everything that happens at the
     (A)SpMV point, *before* the numeric update). Split out so the failure
-    driver can inject a failure exactly mid-iteration, after the push."""
+    driver can inject a failure exactly mid-iteration, after the push.
+
+    gated=True executes the push/star branches under ``lax.cond`` — on the
+    non-storage iterations of the period nothing is copied. gated=False is
+    the seed's ``jnp.where``-over-the-state-tree (copies the queue every
+    iteration; kept for the microbenchmark comparison).
+    """
     j = st.pcg.j
     push, star = storage_flags(j, T)
-    st = jax.tree.map(
-        lambda a, b: jnp.where(push, a, b), push_queue(st, j), st)
-    st = jax.tree.map(
-        lambda a, b: jnp.where(star, a, b), capture_stars(st, j), st)
+    if gated:
+        st = jax.lax.cond(push, lambda s: push_queue(s, j), lambda s: s, st)
+        st = jax.lax.cond(star, lambda s: capture_stars(s, j), lambda s: s,
+                          st)
+    else:
+        st = jax.tree.map(
+            lambda a, b: jnp.where(push, a, b), push_queue(st, j), st)
+        st = jax.tree.map(
+            lambda a, b: jnp.where(star, a, b), capture_stars(st, j), st)
     return st
 
 
-def esrp_step(st: ESRPState, matvec: Callable, precond: Callable,
-              T: int, b: jax.Array | None = None,
-              rr_every: int = 0) -> ESRPState:
+def esrp_step(st: ESRPState, ops: SolverOps, T: int,
+              b: jax.Array | None = None, rr_every: int = 0,
+              gated: bool = True) -> ESRPState:
     """One full ESRP iteration: bookkeeping + the PCG update (Alg. 3 body).
 
     rr_every > 0 enables *residual replacement* [van der Vorst & Ye '00 —
@@ -111,31 +130,50 @@ def esrp_step(st: ESRPState, matvec: Callable, precond: Callable,
     z, rz, p's conjugation base refresh accordingly), keeping the Eq. 2
     drift near zero at the cost of one extra SpMV per period. Extension
     beyond the paper (its §"Accuracy of the experiments" discusses but does
-    not implement replacement)."""
-    st = esrp_prelude(st, T)
-    q_vec = matvec(st.pcg.p)
-    pcg = pcg_iterate(st.pcg, q_vec, precond)
+    not implement replacement). With gated=True the replacement SpMV +
+    precond run under ``lax.cond`` — no extra SpMV executes on the other
+    rr_every - 1 iterations of each period.
+    """
+    st = esrp_prelude(st, T, gated)
+    pcg = pcg_iterate_ops(st.pcg, ops)
     if rr_every > 0 and b is not None:
         do = (pcg.j % rr_every == 0) & (pcg.j > 0)
-        r_true = b - matvec(pcg.x)
-        z_true = precond(r_true)
-        rz_true = r_true @ z_true
-        pcg_rr = pcg._replace(r=r_true, z=z_true, rz=rz_true)
-        pcg = jax.tree.map(lambda a_, b_: jnp.where(do, a_, b_), pcg_rr, pcg)
+
+        def replace(s: PCGState) -> PCGState:
+            r_true = b - ops.matvec(s.x)
+            z_true = ops.precond(r_true)
+            return s._replace(r=r_true, z=z_true, rz=r_true @ z_true)
+
+        if gated:
+            pcg = jax.lax.cond(do, replace, lambda s: s, pcg)
+        else:
+            pcg = jax.tree.map(lambda a_, b_: jnp.where(do, a_, b_),
+                               replace(pcg), pcg)
     return st._replace(pcg=pcg)
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 6))
-def run_chunk(st: ESRPState, matvec: Callable, precond: Callable, T: int,
-              n_iters: int, b: jax.Array | None = None, rr_every: int = 0):
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6))
+def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
+              thresh: jax.Array | None = None,
+              rr_every: int = 0, gated: bool = True,
+              b: jax.Array | None = None):
     """Run n_iters ESRP iterations, recording ||r|| after each (the paper
-    checks convergence every iteration; the driver scans the record)."""
+    checks convergence every iteration; the driver scans the record).
 
-    def body(s, _):
-        s = esrp_step(s, matvec, precond, T, b=b, rr_every=rr_every)
-        return s, jnp.linalg.norm(s.pcg.r)
+    ``thresh`` (dynamic) arms the sync-free convergence protocol (see
+    ``pcg.scan_with_convergence_freeze``): the driver never has to re-run a
+    chunk to land exactly on the convergence iteration — the returned state
+    *is* the state at first convergence — and can overlap the norm-record
+    readback of one chunk with the dispatch of the next. thresh=None runs
+    all n_iters unconditionally.
+    """
 
-    return jax.lax.scan(body, st, None, length=n_iters)
+    def step(s):
+        s2 = esrp_step(s, ops, T, b=b, rr_every=rr_every, gated=gated)
+        return s2, jnp.linalg.norm(s2.pcg.r)
+
+    return scan_with_convergence_freeze(
+        st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh)
 
 
 def recovery_point(st: ESRPState, T: int):

@@ -7,16 +7,23 @@ fetch their parts from a buddy; survivors roll back to their own local copy.
 Unlike ESR/ESRP this introduces a brand-new round of communication per
 checkpoint (4 full local vectors × φ buddies) instead of piggybacking on the
 SpMV — the communication-volume asymmetry the paper highlights.
+
+The checkpoint copy (4 full vectors + scalars) is ``lax.cond``-gated on the
+schedule, like ESRP's queue push: on the T-1 non-checkpoint iterations of
+each period nothing is copied, and the numeric update runs through the same
+``SolverOps`` bundle as ESRP/plain PCG.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.pcg import PCGState, pcg_init, pcg_step
+from repro.core.ops import SolverOps
+from repro.core.pcg import (PCGState, pcg_init, pcg_iterate_ops,
+                            scan_with_convergence_freeze)
 
 
 class IMCRState(NamedTuple):
@@ -34,7 +41,7 @@ class IMCRState(NamedTuple):
     traffic: jax.Array
 
 
-def imcr_init(matvec: Callable, precond: Callable, b: jax.Array,
+def imcr_init(matvec, precond, b: jax.Array,
               x0: jax.Array | None = None) -> IMCRState:
     pcg = pcg_init(matvec, precond, b, x0)
     z = jnp.zeros_like(b)
@@ -57,23 +64,36 @@ def checkpoint(st: IMCRState, phi: int, rows_per_node: int) -> IMCRState:
                        traffic=traffic)
 
 
-def imcr_step(st: IMCRState, matvec: Callable, precond: Callable, T: int,
-              phi: int, rows_per_node: int) -> IMCRState:
+def imcr_step(st: IMCRState, ops: SolverOps, T: int, phi: int,
+              rows_per_node: int, gated: bool = True) -> IMCRState:
     j = st.pcg.j
     do_ck = (j % T == 0) & (j > 2)
-    st = jax.tree.map(lambda a, b: jnp.where(do_ck, a, b),
-                      checkpoint(st, phi, rows_per_node), st)
-    return st._replace(pcg=pcg_step(st.pcg, matvec, precond))
+    if gated:
+        st = jax.lax.cond(do_ck,
+                          lambda s: checkpoint(s, phi, rows_per_node),
+                          lambda s: s, st)
+    else:
+        st = jax.tree.map(lambda a, b: jnp.where(do_ck, a, b),
+                          checkpoint(st, phi, rows_per_node), st)
+    return st._replace(pcg=pcg_iterate_ops(st.pcg, ops))
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6))
-def run_chunk(st: IMCRState, matvec: Callable, precond: Callable, T: int,
-              phi: int, rows_per_node: int, n_iters: int):
-    def body(s, _):
-        s = imcr_step(s, matvec, precond, T, phi, rows_per_node)
-        return s, jnp.linalg.norm(s.pcg.r)
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 7))
+def run_chunk(st: IMCRState, ops: SolverOps, T: int, phi: int,
+              rows_per_node: int, n_iters: int,
+              thresh: jax.Array | None = None, gated: bool = True):
+    """Run n_iters IMCR iterations, recording ||r|| after each. Same
+    convergence-freeze protocol as esrp.run_chunk (shared via
+    ``pcg.scan_with_convergence_freeze``): once the carried ||r|| drops
+    below ``thresh`` the remaining iterations pass the state through, so
+    the driver never re-runs the final chunk."""
 
-    return jax.lax.scan(body, st, None, length=n_iters)
+    def step(s):
+        s2 = imcr_step(s, ops, T, phi, rows_per_node, gated)
+        return s2, jnp.linalg.norm(s2.pcg.r)
+
+    return scan_with_convergence_freeze(
+        st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh)
 
 
 def recover(st: IMCRState) -> PCGState:

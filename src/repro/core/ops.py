@@ -1,0 +1,119 @@
+"""SolverOps — the execution layer of the PCG/ESRP/IMCR hot loop.
+
+The paper's resilience argument (and Levonyak et al.'s scaling argument for
+resilient PCG) only holds if the failure-free iteration runs as fast as the
+hardware allows; constant-factor slack in the hot loop gets misread as
+resilience overhead. ``SolverOps`` bundles the four operations one PCG
+iteration needs —
+
+  * ``matvec``      q = A·p                       (Block-ELL SpMV)
+  * ``matvec_dot``  (q, pᵀq) in one pass          (α needs no 2nd read of p/q)
+  * ``precond``     z = P r                       (block-Jacobi apply)
+  * ``update``      (x', r', z', rz') fused       (Alg. 1 lines 4-7, one pass)
+
+— so the solver core is written once against the bundle and the backend
+decides how each op executes:
+
+  * ``jnp``       reference backend: pure-jnp ops *structured like the
+                  kernels* (sequential k accumulation, per-block partial
+                  dots), so its f64 trajectory is bit-identical to the
+                  Pallas one — the cross-backend trajectory-identity
+                  property tested in tests/test_solver_ops.py.
+  * ``pallas``    the TPU kernels (kernels/spmv, kernels/fused_pcg).
+  * ``interpret`` the same kernels in Pallas interpret mode (CI validation).
+  * closures      arbitrary (matvec, precond) pairs — dense test operators,
+                  the sharded runtime, reconstruction inner solves — via
+                  ``make_closure_ops``; numerics identical to the seed path.
+
+Ops bundles are cached per (problem, backend) so the jitted chunk runners,
+which treat the bundle as a static argument, compile once per backend
+instead of once per ``solve_resilient`` call.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+
+class SolverOps(NamedTuple):
+    """Execution backend for one PCG iteration. Hashable (functions compare
+    by identity) so jitted chunk runners can take it as a static argument."""
+    backend: str
+    matvec: Callable            # p -> q = A p
+    matvec_dot: Callable        # p -> (q, p @ q)
+    precond: Callable           # r -> z = P r
+    update: Callable            # (alpha, x, r, p, q) -> (x', r', z', rz')
+
+
+def make_closure_ops(matvec: Callable, precond: Callable) -> SolverOps:
+    """Wrap arbitrary (matvec, precond) closures. The update is the seed's
+    unfused op sequence, so trajectories through this bundle are bit-identical
+    to the pre-SolverOps code path. Callers that solve repeatedly should hold
+    on to the returned bundle (the driver caches it on the Problem): the
+    jitted chunk runners key their compile cache on it."""
+
+    def matvec_dot(p):
+        q = matvec(p)
+        return q, p @ q
+
+    def update(alpha, x, r, p, q):
+        x_new = x + alpha * p
+        r_new = r - alpha * q
+        z_new = precond(r_new)
+        return x_new, r_new, z_new, r_new @ z_new
+
+    return SolverOps("closure", matvec, matvec_dot, precond, update)
+
+
+def pick_rows(m: int, block: int, target: int = 512) -> int:
+    """Per-grid-step row-block length for the fused update: the largest
+    multiple of the preconditioner block that divides M and is <= target
+    (TPU wants a multiple of the lane width; the divisibility constraint
+    dominates on the padded test grids)."""
+    if m % block:
+        raise ValueError(f"M={m} not divisible by precond block {block}")
+    best = block
+    for d in range(1, m // block + 1):
+        rows = block * d
+        if m % rows == 0 and rows <= target:
+            best = rows
+    return best
+
+
+def make_problem_ops(problem, backend: str) -> SolverOps:
+    """SolverOps over a ``Problem``'s Block-ELL matrix and block-Jacobi
+    preconditioner. backend: "jnp" | "pallas" | "interpret"."""
+    from repro.kernels.fused_pcg.fused_pcg import fused_pcg_update
+    from repro.kernels.fused_pcg.ref import fused_pcg_update_ref
+    from repro.kernels.spmv.ref import spmv_dot_ref, spmv_seq_ref
+    from repro.kernels.spmv.spmv import spmv, spmv_dot
+
+    a = problem.a
+    pinv = problem.pinv_blocks
+    rows = pick_rows(problem.m, problem.precond_block)
+    precond = problem.apply_precond
+
+    if backend == "jnp":
+        def matvec(x):
+            return spmv_seq_ref(a.data, a.idx, x)
+
+        def matvec_dot(x):
+            return spmv_dot_ref(a.data, a.idx, x)
+
+        def update(alpha, x, r, p, q):
+            return fused_pcg_update_ref(alpha, x, r, p, q, pinv, rows=rows)
+    elif backend in ("pallas", "interpret"):
+        interp = backend == "interpret"
+
+        def matvec(x):
+            return spmv(a.data, a.idx, x, interpret=interp)
+
+        def matvec_dot(x):
+            return spmv_dot(a.data, a.idx, x, interpret=interp)
+
+        def update(alpha, x, r, p, q):
+            return fused_pcg_update(alpha, x, r, p, q, pinv, rows=rows,
+                                    interpret=interp)
+    else:
+        raise ValueError(f"unknown SolverOps backend {backend!r}")
+
+    return SolverOps(backend, matvec, matvec_dot, precond, update)

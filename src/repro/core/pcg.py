@@ -1,9 +1,12 @@
 """Preconditioned conjugate gradient (paper Alg. 1, [Saad'03 Alg. 9.1]).
 
-Operator-based and fully jittable: ``matvec`` and ``precond`` are closures
-(Block-ELL SpMV / block-Jacobi apply in production, dense ops in tests). The
-same routine powers the outer solver and the *inner* reconstruction solves of
-Alg. 2 (lines 6/8), which the paper runs to rtol 1e-14.
+Operator-based and fully jittable. The hot path runs through a ``SolverOps``
+bundle (repro.core.ops): the SpMV and the pᵀq dot fuse into one pass, and
+lines 4-7 of Alg. 1 fuse into a single vector pass (kernels/fused_pcg), with
+a pure-jnp reference backend that is bit-identical in f64. The closure-based
+entry points (``pcg_step``, ``run_pcg``) wrap arbitrary (matvec, precond)
+pairs — they power the dense test operators and the *inner* reconstruction
+solves of Alg. 2 (lines 6/8), which the paper runs to rtol 1e-14.
 """
 from __future__ import annotations
 
@@ -12,6 +15,8 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.ops import SolverOps, make_closure_ops
 
 
 class PCGState(NamedTuple):
@@ -38,15 +43,27 @@ def pcg_init(matvec: Callable, precond: Callable, b: jax.Array,
                     beta=jnp.zeros((), b.dtype), j=jnp.zeros((), jnp.int32))
 
 
+def pcg_iterate_ops(state: PCGState, ops: SolverOps) -> PCGState:
+    """One PCG iteration through the SolverOps bundle (Alg. 1 lines 3-8).
+
+    The SpMV produces pᵀq in the same pass (α without re-reading p, q) and
+    the x/r/z/rz updates run as one fused sweep. ESRP's storage bookkeeping
+    happens *before* this call (Alg. 3 swaps SpMV ↔ ASpMV without touching
+    the numerics), so the failure-free trajectory is bit-identical to plain
+    PCG — the paper's trajectory-identity property.
+    """
+    q, pq = ops.matvec_dot(state.p)
+    alpha = state.rz / pq
+    x, r, z, rz = ops.update(alpha, state.x, state.r, state.p, q)
+    beta = rz / state.rz
+    p = z + beta * state.p
+    return PCGState(x=x, r=r, z=z, p=p, rz=rz, beta=beta, j=state.j + 1)
+
+
 def pcg_iterate(state: PCGState, q: jax.Array,
                 precond: Callable) -> PCGState:
-    """One PCG iteration *given* q = A·p^(j) (lines 3-8 of Alg. 1).
-
-    The SpMV is split out so ESRP can swap SpMV ↔ ASpMV (Alg. 3) without
-    touching the numerics — the failure-free trajectory is bit-identical to
-    plain PCG by construction, which is the paper's trajectory-identity
-    property.
-    """
+    """One PCG iteration *given* q = A·p^(j) — the unfused reference form
+    (kept for callers that computed q themselves)."""
     alpha = state.rz / (state.p @ q)
     x = state.x + alpha * state.p
     r = state.r - alpha * q
@@ -59,30 +76,62 @@ def pcg_iterate(state: PCGState, q: jax.Array,
 
 def pcg_step(state: PCGState, matvec: Callable,
              precond: Callable) -> PCGState:
-    return pcg_iterate(state, matvec(state.p), precond)
+    return pcg_iterate_ops(state, make_closure_ops(matvec, precond))
+
+
+def scan_with_convergence_freeze(st, step: Callable, rnorm0: jax.Array,
+                                 n_iters: int,
+                                 thresh: jax.Array | None):
+    """Scan ``n_iters`` of ``step`` (state -> (state, ||r||)), recording
+    ||r|| after each iteration — the chunked-convergence protocol shared by
+    the ESRP and IMCR chunk runners.
+
+    With ``thresh`` set (dynamic), the carried ||r|| doubles as a done flag:
+    once it drops below thresh the remaining iterations pass the state
+    through untouched (``lax.cond``), so the caller's returned state *is*
+    the state at first convergence and no chunk ever needs re-running.
+    thresh=None runs all n_iters unconditionally.
+    """
+
+    def body(carry, _):
+        s, rnorm = carry
+        if thresh is None:
+            s, rnorm = step(s)
+        else:
+            s, rnorm = jax.lax.cond(
+                rnorm < thresh, lambda s: (s, rnorm), step, s)
+        return (s, rnorm), rnorm
+
+    (st, _), norms = jax.lax.scan(body, (st, rnorm0), None, length=n_iters)
+    return st, norms
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 3, 4))
 def run_pcg(matvec: Callable, precond: Callable, b: jax.Array,
             rtol: float = 1e-8, max_iters: int = 100_000,
             x0: jax.Array | None = None) -> tuple[PCGState, jax.Array]:
-    """Solve to ||r||/||b|| < rtol. Returns (state, relative residual)."""
+    """Solve to ||r||/||b|| < rtol. Returns (state, relative residual).
+
+    ||r|| is carried in the loop state: computed once per iteration (in the
+    body, after the step) instead of once in ``cond`` and again in ``body``.
+    """
+    ops = make_closure_ops(matvec, precond)
     state = pcg_init(matvec, precond, b, x0)
     bnorm = jnp.linalg.norm(b)
     thresh = rtol * bnorm
 
     def cond(carry):
-        s, _ = carry
-        return (jnp.linalg.norm(s.r) >= thresh) & (s.j < max_iters)
+        s, rnorm = carry
+        return (rnorm >= thresh) & (s.j < max_iters)
 
     def body(carry):
         s, _ = carry
-        s = pcg_step(s, matvec, precond)
-        return s, jnp.linalg.norm(s.r) / bnorm
+        s = pcg_iterate_ops(s, ops)
+        return s, jnp.linalg.norm(s.r)
 
-    state, rel = jax.lax.while_loop(
-        cond, body, (state, jnp.linalg.norm(state.r) / bnorm))
-    return state, rel
+    state, rnorm = jax.lax.while_loop(
+        cond, body, (state, jnp.linalg.norm(state.r)))
+    return state, rnorm / bnorm
 
 
 def residual_drift(matvec: Callable, b: jax.Array, x_end: jax.Array,

@@ -1,14 +1,30 @@
-"""Pure-jnp oracle for the fused PCG update."""
+"""Pure-jnp oracle for the fused PCG update.
+
+With ``rows`` set, the r'.z' reduction is computed as per-``rows``-block
+partial sums followed by a (grid,) reduction — the exact association order of
+the Pallas kernel's (grid,) partial output — so the jnp SolverOps backend is
+bit-comparable (f64) to the kernel-backed one. ``rows=None`` keeps the plain
+full-vector dot (the seed behaviour, used by the kernel validation sweeps,
+which compare with tolerances anyway).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def fused_pcg_update_ref(alpha, x, r, p, q, pinv_blocks):
+def fused_pcg_update_ref(alpha, x, r, p, q, pinv_blocks, rows: int | None = None):
     x_new = x + alpha * p
     r_new = r - alpha * q
     nb, b, _ = pinv_blocks.shape
     z_new = jnp.einsum("nij,nj->ni", pinv_blocks,
                        r_new.reshape(nb, b)).reshape(-1)
-    return x_new, r_new, z_new, r_new @ z_new
+    if rows is None:
+        rz = r_new @ z_new
+    else:
+        partial = jnp.sum((r_new * z_new).reshape(-1, rows), axis=1)
+        # pin the partial -> final association (XLA would otherwise collapse
+        # the two reduces into one flat sum and break kernel bit-identity)
+        partial = jax.lax.optimization_barrier(partial)
+        rz = jnp.sum(partial)
+    return x_new, r_new, z_new, rz

@@ -1,5 +1,5 @@
-"""Jit'd dispatch wrapper: Pallas kernel on TPU, interpret-mode kernel for
-validation, jnp oracle as the default CPU path."""
+"""Jit'd dispatch wrappers: Pallas kernels on TPU, interpret-mode kernels for
+validation, jnp oracles as the default CPU path."""
 from __future__ import annotations
 
 import jax
@@ -11,7 +11,8 @@ from repro.sparse.blockell import BlockEll
 
 def blockell_matvec(a: BlockEll, x: jax.Array, *, backend: str = "auto"):
     """backend: "auto" (pallas on TPU else jnp), "pallas", "interpret",
-    "jnp"."""
+    "jnp". (The fused SpMV+dot variant is routed by repro.core.ops, which
+    owns the solver-side backend dispatch.)"""
     if backend == "auto":
         backend = ("pallas" if jax.default_backend() == "tpu" else "jnp")
     if backend == "jnp":

@@ -1,4 +1,12 @@
-"""Pure-jnp oracle for the Block-ELL SpMV kernel."""
+"""Pure-jnp oracles for the Block-ELL SpMV kernels.
+
+``spmv_ref`` is the free-form einsum oracle used by the kernel validation
+sweeps. ``spmv_seq_ref`` / ``spmv_dot_ref`` mirror the Pallas kernels'
+*reduction structure* (sequential accumulation over the k slots, per-row-tile
+dot partials): on the same inputs they produce bit-identical f64 results to
+the kernels, which is what lets the trajectory-identity property be asserted
+exactly across the jnp and Pallas ``SolverOps`` backends.
+"""
 from __future__ import annotations
 
 import jax
@@ -12,3 +20,32 @@ def spmv_ref(data: jax.Array, idx: jax.Array, x: jax.Array) -> jax.Array:
     gathered = xb[idx]                                    # (rt, kmax, bn)
     out = jnp.einsum("rkij,rkj->ri", data, gathered)
     return out.reshape(rt * bm)
+
+
+def spmv_seq_ref(data: jax.Array, idx: jax.Array, x: jax.Array) -> jax.Array:
+    """SpMV with the kernel's accumulation order: acc += data[:, k] @ x_k,
+    k ascending — one (bm, bn) @ (bn,) product per slot, summed sequentially
+    exactly like the Pallas grid's inner dimension."""
+    rt, kmax, bm, bn = data.shape
+    xb = x.reshape(-1, bn)
+    acc = jnp.zeros((rt, bm), data.dtype)
+    for k in range(kmax):
+        acc = acc + jnp.einsum("rij,rj->ri", data[:, k], xb[idx[:, k]])
+    return acc.reshape(rt * bm)
+
+
+def spmv_dot_ref(data: jax.Array, idx: jax.Array,
+                 x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused y = A @ x and xᵀy, mirroring ``spmv_dot``'s per-row-tile
+    partial-sum order. Returns (y, xᵀy)."""
+    rt, kmax, bm, bn = data.shape
+    xb = x.reshape(-1, bn)
+    acc = jnp.zeros((rt, bm), data.dtype)
+    for k in range(kmax):
+        acc = acc + jnp.einsum("rij,rj->ri", data[:, k], xb[idx[:, k]])
+    partial = jnp.sum(acc * x.reshape(rt, bm), axis=1)    # (rt,)
+    # keep the (per-row-tile partials -> final sum) association: without the
+    # barrier XLA collapses the two reduces into one flat sum, breaking the
+    # bit-identity with the kernel's (rt,) partial output.
+    partial = jax.lax.optimization_barrier(partial)
+    return acc.reshape(rt * bm), jnp.sum(partial)

@@ -40,6 +40,26 @@ def _spmv_kernel(idx_ref, data_ref, x_ref, o_ref, acc_ref):
         o_ref[0] = acc_ref[...]
 
 
+def _spmv_dot_kernel(idx_ref, data_ref, x_ref, xrow_ref, o_ref, dot_ref,
+                     acc_ref):
+    """SpMV plus the partial dot xᵀ(Ax): at the flush slot the freshly
+    accumulated y row tile is still in VMEM, so the per-row-tile dot costs
+    one extra (bm,) read of x instead of a full second pass over y and x."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(data_ref[0, 0], x_ref[0],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...]
+        dot_ref[0] = jnp.sum(acc_ref[...] * xrow_ref[0])
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def spmv(data: jax.Array, idx: jax.Array, x: jax.Array,
          *, interpret: bool = False) -> jax.Array:
@@ -65,3 +85,42 @@ def spmv(data: jax.Array, idx: jax.Array, x: jax.Array,
         interpret=interpret,
     )(idx, data, xb)
     return out.reshape(rt * bm)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_dot(data: jax.Array, idx: jax.Array, x: jax.Array,
+             *, interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Fused y = A @ x and xᵀy in one kernel pass.
+
+    The PCG step needs q = A·p and then α = rz / pᵀq; unfused that is a full
+    second read of p and q from HBM. Here the pᵀq partial for each row tile
+    is formed while the y tile is still in VMEM (the x row tile rides along
+    as one extra (bm,) input), and only a (rt,) partial vector goes back to
+    HBM — the caller reduces it in deterministic row-tile order.
+
+    data: (rt, kmax, bm, bn); idx: (rt, kmax) int32; x: (ct*bn,) with
+    rt*bm == ct*bn (square A). Returns (y, xᵀy)."""
+    rt, kmax, bm, bn = data.shape
+    xb = x.reshape(-1, bn)
+    xr = x.reshape(rt, bm)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(rt, kmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bn), lambda r, k, idx: (r, k, 0, 0)),
+            pl.BlockSpec((1, bn), lambda r, k, idx: (idx[r, k], 0)),
+            pl.BlockSpec((1, bm), lambda r, k, idx: (r, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, bm), lambda r, k, idx: (r, 0)),
+                   pl.BlockSpec((1,), lambda r, k, idx: (r,))),
+        scratch_shapes=[pltpu.VMEM((bm,), data.dtype)],
+    )
+    out, partial = pl.pallas_call(
+        _spmv_dot_kernel,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((rt, bm), data.dtype),
+                   jax.ShapeDtypeStruct((rt,), data.dtype)),
+        interpret=interpret,
+    )(idx, data, xb, xr)
+    return out.reshape(rt * bm), jnp.sum(partial)

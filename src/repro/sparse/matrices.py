@@ -139,6 +139,25 @@ class Problem:
         rb = r.reshape(-1, self.precond_block)
         return jnp.einsum("nij,nj->ni", self.pinv_blocks, rb).reshape(-1)
 
+    def solver_ops(self, backend: str = "auto"):
+        """The SolverOps execution bundle for this problem (see
+        repro.core.ops). Cached per backend: the jitted chunk runners treat
+        the bundle as a static argument, so reusing the same object across
+        solves reuses their compiled code instead of re-tracing.
+
+        backend: "auto" (pallas on TPU, jnp elsewhere) | "jnp" | "pallas" |
+        "interpret"."""
+        from repro.core.ops import make_problem_ops
+        if backend == "auto":
+            backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        cache = getattr(self, "_ops_cache", None)
+        if cache is None:
+            cache = {}
+            self._ops_cache = cache
+        if backend not in cache:
+            cache[backend] = make_problem_ops(self, backend)
+        return cache[backend]
+
     def submatrix_coo(self, row_lo: int, row_hi: int, col_lo: int, col_hi: int):
         """COO of A[row_lo:row_hi, col_lo:col_hi] (for A_ff / inner solves)."""
         rows, cols, vals = self.coo

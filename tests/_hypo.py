@@ -7,6 +7,7 @@ run unchanged when hypothesis is installed.
 from __future__ import annotations
 
 import functools
+import inspect
 import random
 
 try:                                      # pragma: no cover
@@ -72,6 +73,16 @@ except ImportError:
                     vals = [s.sample(rng) for s in gstrats]
                     kvals = {k: s.sample(rng) for k, s in kwstrats.items()}
                     f(*args, *vals, **kwargs, **kvals)
+            # pytest resolves fixtures from the *visible* signature. Hide the
+            # strategy-drawn parameters (like real hypothesis does) so only
+            # genuine fixture params remain; otherwise every @given test
+            # errors with "fixture '<param>' not found".
+            params = list(inspect.signature(f).parameters.values())
+            if gstrats:          # positional strategies consume from the end
+                params = params[:-len(gstrats)]
+            params = [p for p in params if p.name not in kwstrats]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature(params)
             return wrapper
         return deco
 

@@ -15,7 +15,7 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np, jax.numpy as jnp
 
 from repro.comm.shard import (nodes_mesh, place_problem, ring_halo_matvec,
-                              sharded_matvec)
+                              sharded_solver_ops)
 from repro.core.driver import solve_resilient
 from repro.sparse.matrices import build_problem
 
@@ -25,10 +25,10 @@ mesh = nodes_mesh(8)
 placed = place_problem(problem, mesh)
 
 with mesh:
-    mv = sharded_matvec(placed.a, mesh)
+    ops = sharded_solver_ops(placed, mesh)
     ref = solve_resilient(problem, strategy="none", rtol=1e-10)
     r = solve_resilient(placed, strategy="esrp", T=20, phi=1, rtol=1e-10,
-                        matvec=mv, fail_at=ref.converged_iter // 2,
+                        ops=ops, fail_at=ref.converged_iter // 2,
                         failed_nodes=[3])
 assert r.rel_residual < 1e-10, r.rel_residual
 assert r.converged_iter == ref.converged_iter, (r.converged_iter,
