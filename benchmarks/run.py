@@ -3,8 +3,9 @@
 ``python -m benchmarks.run``            reduced grid (CI-sized, ~10 min)
 ``python -m benchmarks.run --full``     the paper's full T x phi x location
                                         grid, 5 repetitions (~1 h on 1 core)
-``python -m benchmarks.run --only X``   table2|table3|table4|volume|kernels|
-                                        ft|roofline
+``python -m benchmarks.run --only X``   X in {only_choices}
+                                        (derived from ``ALL`` below — add a
+                                        benchmark there and this list follows)
 
 Output: CSV blocks ``name,us_per_call,derived`` per the harness convention,
 plus the full tables to artifacts/bench/.
@@ -240,6 +241,71 @@ def bench_roofline():
         print(line)
 
 
+def bench_precond(full):
+    """Preconditioner x T x failure-location sweep — the experiment the
+    paper's conclusion proposes ("more appropriate preconditioners") but
+    never runs: iterations-to-converge, per-iteration cost, and recovery
+    overhead for block-Jacobi vs SSOR vs Chebyshev vs IC(0), including the
+    anisotropic poisson3d regime where block-Jacobi struggles."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.driver import solve_resilient
+    from repro.sparse.matrices import build_problem
+
+    problems = [("poisson2d", "poisson2d", dict(nx=64 if full else 48)),
+                ("poisson3d_aniso", "poisson3d",
+                 dict(nx=16 if full else 12, eps=0.25))]
+    preconds = ("jacobi", "ssor", "chebyshev", "ic0")
+    Ts = (10, 20, 50) if full else (10, 20)
+    lines = ["problem,precond,T,scenario,iters,us_per_iter,recovery_ms,"
+             "wasted,rel_residual"]
+    iters_aniso = {}
+    for pname, kind, kw in problems:
+        for name in preconds:
+            p = build_problem(kind, n_nodes=8, precond=name, **kw)
+            solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)  # warmup
+            ref = solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)
+            C = ref.converged_iter
+            us = 1e6 * ref.runtime_s / max(C, 1)
+            if pname == "poisson3d_aniso":
+                iters_aniso[name] = C
+            lines.append(f"{pname},{name},-,failure-free,{C},{us:.1f},-,-,"
+                         f"{ref.rel_residual:.2e}")
+            print(f"precond_{pname}_{name},{us:.1f},iters={C}")
+            # warm the recovery path once (jitted reconstruction closures,
+            # scatter kernels) so recovery_ms rows measure reconstruction,
+            # not one-off compiles
+            if 2 * Ts[0] < C:
+                solve_resilient(p, strategy="esrp", T=Ts[0], phi=1,
+                                rtol=1e-8, chunk=32, fail_at=2 * Ts[0],
+                                failed_nodes=[1])
+            for T in Ts:
+                scens = {"early": 2 * T, "mid": (C // 2 // T) * T}
+                if scens["mid"] <= scens["early"]:
+                    del scens["mid"]       # would duplicate the early config
+                for scen, fail_at in scens.items():
+                    if fail_at >= C:
+                        continue
+                    r = solve_resilient(p, strategy="esrp", T=T, phi=1,
+                                        rtol=1e-8, chunk=32,
+                                        fail_at=fail_at, failed_nodes=[1])
+                    # us_per_iter only for failure-free rows: failed runs
+                    # pay one-off jit compiles for the post-failure chunk
+                    # tails, which would misread as per-iteration cost
+                    lines.append(
+                        f"{pname},{name},{T},{scen}@{fail_at},"
+                        f"{r.converged_iter},-,"
+                        f"{1e3 * r.recovery_s:.2f},{r.wasted_iters},"
+                        f"{r.rel_residual:.2e}")
+    best = min((n for n in preconds if n != "jacobi"),
+               key=lambda n: iters_aniso[n])
+    print(f"precond_best_aniso,0,winner={best};iters={iters_aniso[best]};"
+          f"jacobi_iters={iters_aniso['jacobi']}")
+    _ensure_dir()
+    with open("artifacts/bench/precond.csv", "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
 ALL = {
     "table2": lambda full: bench_paper_table("table2", full),
     "table3": lambda full: bench_paper_table("table3", full),
@@ -247,13 +313,20 @@ ALL = {
     "volume": lambda full: bench_volume(),
     "kernels": lambda full: bench_kernels(),
     "iteration": bench_iteration,
+    "precond": bench_precond,
     "ft": lambda full: bench_ft(),
     "roofline": lambda full: bench_roofline(),
 }
 
+# the --only list in the module docstring is derived from ALL so it cannot
+# drift when benchmarks are added (it omitted "iteration" once already)
+__doc__ = __doc__.replace("{only_choices}", "|".join(ALL))
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, choices=list(ALL))
     args = ap.parse_args()

@@ -2,10 +2,14 @@
 
 Solves a 2-D Poisson system on 8 simulated nodes with ESRP (T=20, phi=2),
 kills nodes 2 and 3 mid-solve, reconstructs exactly (Alg. 2), and converges
-in the same number of iterations as an undisturbed run.
+in the same number of iterations as an undisturbed run. ``--precond``
+swaps the preconditioner (block-Jacobi, SSOR, Chebyshev, IC(0)) — the
+non-block-diagonal ones exercise the recovery-aware P_{f,I\\f} / P_ff path.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--precond ssor]
 """
+import argparse
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
@@ -15,8 +19,15 @@ from repro.sparse.matrices import build_problem
 
 
 def main():
-    problem = build_problem("poisson2d", n_nodes=8, nx=64, ny=64)
-    print(f"problem: M={problem.m}, 8 nodes, block-Jacobi({problem.precond_block})")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--precond", default="jacobi",
+                    choices=["jacobi", "ssor", "chebyshev", "ic0"])
+    args = ap.parse_args()
+
+    problem = build_problem("poisson2d", n_nodes=8, nx=64, ny=64,
+                            precond=args.precond)
+    print(f"problem: M={problem.m}, 8 nodes, "
+          f"{args.precond}({problem.precond_block})")
 
     ref = solve_resilient(problem, strategy="none", rtol=1e-8)
     print(f"reference:       {ref.converged_iter} iters, "

@@ -5,7 +5,7 @@ with worst-case failure injection (2 iterations before the storage stage
 containing iteration C/2), and prints the Table-2-style overhead report.
 
     PYTHONPATH=src python examples/solve_poisson_resilient.py \
-        --kind poisson3d --nx 32 --nodes 16 --T 20 --phi 3
+        --kind poisson3d --nx 32 --nodes 16 --T 20 --phi 3 --precond ssor
 """
 import argparse
 
@@ -26,12 +26,16 @@ def main():
     ap.add_argument("--T", type=int, default=20)
     ap.add_argument("--phi", type=int, default=3)
     ap.add_argument("--rtol", type=float, default=1e-8)
+    ap.add_argument("--precond", default="jacobi",
+                    choices=["jacobi", "ssor", "chebyshev", "ic0"])
     args = ap.parse_args()
 
     kw = dict(nx=args.nx) if args.kind != "banded" else dict(
         n=args.nx ** 3, bandwidth=16)
-    problem = build_problem(args.kind, n_nodes=args.nodes, **kw)
-    print(f"{args.kind} M={problem.m} on {args.nodes} nodes")
+    problem = build_problem(args.kind, n_nodes=args.nodes,
+                            precond=args.precond, **kw)
+    print(f"{args.kind} M={problem.m} on {args.nodes} nodes, "
+          f"precond={args.precond}")
 
     ref = solve_resilient(problem, strategy="none", rtol=args.rtol)
     t0 = ref.runtime_s

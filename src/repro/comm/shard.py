@@ -75,6 +75,14 @@ def sharded_solver_ops(problem: Problem, mesh: Mesh):
     """
     from repro.core.ops import SolverOps
 
+    if problem.precond is not None and problem.precond.name != "jacobi":
+        # the sequential SSOR/IC(0) sweeps and the Chebyshev apply are not
+        # sharded yet (their static arrays are not re-placed and the sweep
+        # scan would serialize the iteration) — see ROADMAP "node-local
+        # block variants" before wiring them through here
+        raise NotImplementedError(
+            f"sharded runtime supports the block-Jacobi preconditioner "
+            f"only, got {problem.precond.name!r}")
     cache = getattr(problem, "_sharded_ops_cache", None)
     if cache is None:
         cache = {}

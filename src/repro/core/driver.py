@@ -201,7 +201,7 @@ def solve_resilient(
                     st, part, failed, phi, matvec, precond, b)
             else:
                 st, wasted, target, inner_rel, rec_t = _esrp_failure(
-                    problem, plan, st, failed, T, matvec)
+                    problem, plan, st, failed, T, matvec, precond)
             recovery_s += rec_t
             total_iters = int(st.pcg.j)
             resume_numeric_only = target >= 0
@@ -224,7 +224,7 @@ def solve_resilient(
 
 # --------------------------------------------------------------------------- #
 def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
-                  failed: list[int], T: int, matvec):
+                  failed: list[int], T: int, matvec, precond):
     """Failure strikes during iteration J right after its (A)SpMV: run the
     iteration-J storage prelude, zero the failed nodes' dynamic data, then
     reconstruct (Alg. 2) and rebuild a consistent post-stage ESRP state."""
@@ -250,7 +250,7 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     target, prev_slot, curr_slot = esrp.recovery_point(st, T)
     if target < 0:
         # before the first completed storage stage: restart from scratch
-        st2 = esrp.esrp_init(matvec, problem.apply_precond, problem.b)
+        st2 = esrp.esrp_init(matvec, precond, problem.b)
         return st2, J, -1, float("nan"), 0.0
 
     if T == 1:

@@ -5,14 +5,25 @@ replicated scalar β^(j-1), and the surviving parts of r^(j), x^(j), rebuild
 the failed nodes' entries of z, r, x *exactly* (up to fp perturbation):
 
   line 4:  z_f = p_f^(j) − β^(j-1) p_f^(j-1)
-  line 5:  v  = z_f − P_{f,I\f} r_{I\f}          (block-Jacobi ⇒ P offdiag = 0)
-  line 6:  solve P_ff r_f = v                     (block-diagonal ⇒ r_f = A_bb v)
+  line 5:  v  = z_f − P_{f,I\f} r_{I\f}
+  line 6:  solve P_ff r_f = v
   line 7:  w  = b_f − r_f − A_{f,I\f} x_{I\f}
   line 8:  solve A_ff x_f = w                     (inner PCG @ rtol 1e-14,
                                                    block-Jacobi precond — §5)
 
-Static data (A rows, P blocks, b entries of the failed nodes) is rebuilt from
-the problem's host-side COO — the paper's "retrieve from safe storage".
+Lines 5-6 are *preconditioner-aware* (repro.precond): block-Jacobi keeps the
+seed's exact closed forms (P offdiag ≡ 0 so v = z_f; P_ff⁻¹ = the raw
+diagonal blocks so line 6 is a block matvec), while preconditioners with
+genuine off-diagonal coupling (SSOR, Chebyshev, IC(0)) route through the
+operators their class supplies: line 5 applies the actual P row strip to the
+masked survivors, line 6 runs a real local P_ff solve whose operator
+applications execute the preconditioner's kernels (triangular sweeps /
+polynomial recurrence). The line-8 inner solve always uses block-Jacobi on
+A_ff — a reconstruction-internal choice, independent of the hot-loop P.
+
+Static data (A rows, P static state, b entries of the failed nodes) is
+rebuilt from the problem's host-side COO — the paper's "retrieve from safe
+storage".
 """
 from __future__ import annotations
 
@@ -48,6 +59,10 @@ class ReconstructionOps:
     b_f: jax.Array
     precond_f: object = None         # stable closure: jitted inner solves
     #                                  must see the same callable each call
+    p_offdiag: object = None         # line 5: r_surv -> P_{f,I\f} r_{I\f}
+    #                                  (None = exactly zero, block-Jacobi)
+    p_solve: object = None           # line 6: v -> r_f solving P_ff r_f = v
+    #                                  (None = seed diag-block matvec)
 
     @staticmethod
     def build(problem: Problem, failed: list[int]) -> "ReconstructionOps":
@@ -83,12 +98,21 @@ class ReconstructionOps:
             return jnp.einsum("nij,nj->ni", _pinv,
                               r.reshape(-1, _b)).reshape(-1)
 
+        # recovery-aware lines 5-6: preconditioners with off-diagonal
+        # coupling supply their own local operators; block-Jacobi (or a
+        # legacy Problem without a precond object) keeps the seed shortcut
+        pc = problem.precond
+        p_offdiag = p_solve = None
+        if pc is not None and pc.name != "jacobi":
+            p_offdiag, p_solve = pc.local_ops(mask, f_rows)
+
         return ReconstructionOps(
             problem=problem, failed=failed, mask=mask, f_rows=f_rows,
             a_rows_f=a_rows_f, a_ff=a_ff,
             diag_f=problem.diag_blocks[blk_ids],
             pinv_f=pinv_f,
-            b_f=problem.b[f_rows], precond_f=precond_f)
+            b_f=problem.b[f_rows], precond_f=precond_f,
+            p_offdiag=p_offdiag, p_solve=p_solve)
 
 
 def reconstruct(ops: ReconstructionOps, *, p_prev: jax.Array, p_curr: jax.Array,
@@ -105,9 +129,17 @@ def reconstruct(ops: ReconstructionOps, *, p_prev: jax.Array, p_curr: jax.Array,
     p_prev_f = p_prev[f_rows]
     p_curr_f = p_curr[f_rows]
     z_f = p_curr_f - beta_prev * p_prev_f                       # line 4
-    v = z_f                                                     # line 5
-    r_f = jnp.einsum("nij,nj->ni", ops.diag_f,
-                     v.reshape(-1, b)).reshape(-1)               # line 6
+    if ops.p_solve is None:
+        # block-Jacobi closed forms: P_{f,I\f} == 0 and P_ff^{-1} = A_bb
+        v = z_f                                                 # line 5
+        r_f = jnp.einsum("nij,nj->ni", ops.diag_f,
+                         v.reshape(-1, b)).reshape(-1)           # line 6
+    else:
+        # genuine off-diagonal coupling: apply the real P row strip to the
+        # surviving entries (the closure masks I_f), then run a real local
+        # P_ff solve through the preconditioner's kernels
+        v = z_f - ops.p_offdiag(r_surv)                         # line 5
+        r_f = ops.p_solve(v, inner_rtol, inner_max_iters)       # line 6
 
     x_masked = jnp.where(mask, jnp.zeros_like(x_surv), x_surv)  # x_{I\f} only
     w = ops.b_f - r_f - ops.a_rows_f.matvec(x_masked)           # line 7

@@ -80,8 +80,16 @@ def pick_rows(m: int, block: int, target: int = 512) -> int:
 
 
 def make_problem_ops(problem, backend: str) -> SolverOps:
-    """SolverOps over a ``Problem``'s Block-ELL matrix and block-Jacobi
-    preconditioner. backend: "jnp" | "pallas" | "interpret"."""
+    """SolverOps over a ``Problem``'s Block-ELL matrix and its registered
+    preconditioner. backend: "jnp" | "pallas" | "interpret".
+
+    Block-Jacobi (the default) keeps the fully fused update path — the
+    preconditioner apply happens *inside* ``kernels/fused_pcg`` while r' is
+    still in VMEM. Other preconditioners (SSOR, Chebyshev, IC(0)) cannot fuse
+    into that kernel: the update is the x/r axpy pair + the preconditioner's
+    own backend-routed apply + a plain rᵀz dot, written once in shared jnp so
+    cross-backend bit-identity reduces to the apply's bit-identity (tested
+    per preconditioner in tests/test_precond.py)."""
     from repro.kernels.fused_pcg.fused_pcg import fused_pcg_update
     from repro.kernels.fused_pcg.ref import fused_pcg_update_ref
     from repro.kernels.spmv.ref import spmv_dot_ref, spmv_seq_ref
@@ -90,7 +98,7 @@ def make_problem_ops(problem, backend: str) -> SolverOps:
     a = problem.a
     pinv = problem.pinv_blocks
     rows = pick_rows(problem.m, problem.precond_block)
-    precond = problem.apply_precond
+    jacobi = problem.precond is None or problem.precond.name == "jacobi"
 
     if backend == "jnp":
         def matvec(x):
@@ -99,8 +107,10 @@ def make_problem_ops(problem, backend: str) -> SolverOps:
         def matvec_dot(x):
             return spmv_dot_ref(a.data, a.idx, x)
 
-        def update(alpha, x, r, p, q):
-            return fused_pcg_update_ref(alpha, x, r, p, q, pinv, rows=rows)
+        if jacobi:
+            def update(alpha, x, r, p, q):
+                return fused_pcg_update_ref(alpha, x, r, p, q, pinv,
+                                            rows=rows)
     elif backend in ("pallas", "interpret"):
         interp = backend == "interpret"
 
@@ -110,10 +120,31 @@ def make_problem_ops(problem, backend: str) -> SolverOps:
         def matvec_dot(x):
             return spmv_dot(a.data, a.idx, x, interpret=interp)
 
-        def update(alpha, x, r, p, q):
-            return fused_pcg_update(alpha, x, r, p, q, pinv, rows=rows,
-                                    interpret=interp)
+        if jacobi:
+            def update(alpha, x, r, p, q):
+                return fused_pcg_update(alpha, x, r, p, q, pinv, rows=rows,
+                                        interpret=interp)
     else:
         raise ValueError(f"unknown SolverOps backend {backend!r}")
+
+    if jacobi:
+        # seed behaviour: the bundle's standalone precond is the jnp einsum
+        # for every backend (used only off the hot path: esrp_init, residual
+        # replacement) — keeps cross-backend trajectories bit-identical.
+        precond = problem.apply_precond
+    else:
+        precond = problem.precond.make_apply(backend)
+
+        def update(alpha, x, r, p, q, _precond=precond):
+            import jax
+
+            x_new = x + alpha * p
+            # barriers: materialize r' before the apply and z' after it, so
+            # XLA cannot fuse the axpy / the rᵀz dot into the jnp backend's
+            # apply internals (fusions the opaque Pallas calls never get) —
+            # keeps the backends bit-identical in f64
+            r_new = jax.lax.optimization_barrier(r - alpha * q)
+            z_new = jax.lax.optimization_barrier(_precond(r_new))
+            return x_new, r_new, z_new, r_new @ z_new
 
     return SolverOps(backend, matvec, matvec_dot, precond, update)

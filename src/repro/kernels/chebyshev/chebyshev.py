@@ -1,0 +1,74 @@
+"""Chebyshev polynomial preconditioner apply — Pallas path.
+
+  z = p_d(A) r,  p_d ≈ A⁻¹ on [lo, hi]  (matrix-free: d Block-ELL SpMVs)
+
+The classic Chebyshev semi-iteration for A z = r from z₀ = 0 run a *fixed*
+number of steps: the result is a fixed polynomial in A applied to r, hence a
+linear, symmetric operator, and SPD because λ p_d(λ) = 1 − T_d((θ−λ)/δ) /
+T_d(θ/δ) > 0 for all λ ∈ (0, hi]. The eigenvalue bounds come from Gershgorin
+discs (host-side, see ``repro.precond.chebyshev``).
+
+All vector algebra is plain jnp, shared verbatim with the reference backend;
+only the SpMV differs (Pallas kernel vs ``spmv_seq_ref``), and those two are
+bit-identical in f64 — so the whole apply is.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmv.spmv import spmv
+
+
+def cheb_coefficients(lo: float, hi: float, degree: int):
+    """Host-side (a_k, b_k) pairs of the semi-iteration: dz ← a dz + b (r−Az).
+
+    ρ-recurrence: ρ₁ = δ/θ, ρ_{k} = 1/(2θ/δ − ρ_{k−1}); a_k = ρ_k ρ_{k−1},
+    b_k = 2ρ_k/δ."""
+    theta = (hi + lo) / 2.0
+    delta = (hi - lo) / 2.0
+    sigma = theta / delta
+    rho = 1.0 / sigma
+    out = []
+    for _ in range(degree - 1):
+        rho_new = 1.0 / (2.0 * sigma - rho)
+        out.append((rho_new * rho, 2.0 * rho_new / delta))
+        rho = rho_new
+    return out
+
+
+def cheb_recurrence(matvec, r, *, lo: float, hi: float, degree: int):
+    """z = p_d(A) r via the Chebyshev semi-iteration (d = degree ≥ 1).
+
+    The correction steps run under ``lax.scan`` with the SpMV result behind
+    an ``optimization_barrier``: the scan materializes the carried (z, dz)
+    pair at every step and the barrier pins the SpMV output, so XLA cannot
+    fuse the jnp reference's einsum chain into the surrounding axpys (FMA
+    formations the opaque Pallas call never gets) — which is what makes the
+    two backends bit-identical in f64."""
+    theta = (hi + lo) / 2.0
+    z = r / theta
+    if degree == 1:
+        return z
+    coefs = jnp.asarray(cheb_coefficients(lo, hi, degree), r.dtype)
+
+    def body(carry, c):
+        z, dz = carry
+        q = jax.lax.optimization_barrier(matvec(z))
+        dz = c[0] * dz + c[1] * (r - q)
+        return (z + dz, dz), ()
+
+    (z, _), _ = jax.lax.scan(body, (z, z), coefs)
+    return z
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lo", "hi", "degree", "interpret"))
+def chebyshev_apply(data: jax.Array, idx: jax.Array, r: jax.Array,
+                    *, lo: float, hi: float, degree: int,
+                    interpret: bool = False) -> jax.Array:
+    """data/idx: the Block-ELL matrix; r: (M,). Returns z = p_d(A) r."""
+    mv = lambda v: spmv(data, idx, v, interpret=interpret)
+    return cheb_recurrence(mv, r, lo=lo, hi=hi, degree=degree)

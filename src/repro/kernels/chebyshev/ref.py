@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the Chebyshev apply — the identical recurrence over
+the kernel-mirrored sequential SpMV reference (bit-identical in f64)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.chebyshev.chebyshev import cheb_recurrence
+from repro.kernels.spmv.ref import spmv_seq_ref
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "degree"))
+def chebyshev_apply_ref(data: jax.Array, idx: jax.Array, r: jax.Array,
+                        *, lo: float, hi: float, degree: int) -> jax.Array:
+    mv = lambda v: spmv_seq_ref(data, idx, v)
+    return cheb_recurrence(mv, r, lo=lo, hi=hi, degree=degree)

@@ -1,0 +1,29 @@
+"""IC(0) incomplete-Cholesky preconditioner apply — Pallas path.
+
+  z = (L Lᵀ)⁻¹ r   via   L y = r  (forward sweep),  Lᵀ z = y  (backward),
+
+where L is the level-0-fill blocked incomplete Cholesky factor of A
+(computed host-side in ``repro.precond.ic0`` — static data). Both solves are
+blocked substitutions through ``kernels/trisweep``:
+
+  * forward:  ``lo_*`` holds the strictly-lower L blocks, ``dinv_f`` the
+    precomputed L_ii⁻¹ blocks (each diagonal solve is a dense matvec);
+  * backward: ``up_*`` holds Lᵀ's strictly-upper blocks (= L_jiᵀ),
+    ``dinv_b`` the L_ii⁻ᵀ blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.trisweep.trisweep import block_sweep
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ic0_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv_f, dinv_b,
+              r, *, interpret: bool = False):
+    y = block_sweep(lo_idx, lo_n, lo_data, dinv_f, r, reverse=False,
+                    interpret=interpret)
+    return block_sweep(up_idx, up_n, up_data, dinv_b, y, reverse=True,
+                       interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the IC(0) apply — the bit-identical sweep reference
+composed in the same order as the kernel path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.trisweep.ref import block_sweep_ref
+
+
+@functools.partial(jax.jit)
+def ic0_apply_ref(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv_f,
+                  dinv_b, r):
+    y = block_sweep_ref(lo_idx, lo_n, lo_data, dinv_f, r, reverse=False)
+    return block_sweep_ref(up_idx, up_n, up_data, dinv_b, y, reverse=True)

@@ -1,0 +1,20 @@
+"""Dispatch wrapper for the SSOR apply."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssor.ref import ssor_apply_ref
+from repro.kernels.ssor.ssor import ssor_apply
+
+
+def ssor_precond_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv,
+                       mid_blocks, r, *, backend: str = "auto",
+                       rows: int = 256):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return ssor_apply_ref(lo_idx, lo_n, lo_data, up_idx, up_n, up_data,
+                              dinv, mid_blocks, r)
+    return ssor_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv,
+                      mid_blocks, r, rows=rows,
+                      interpret=(backend == "interpret"))

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the SSOR apply — composes the bit-identical sweep and
+block-Jacobi references in the same order as the kernel path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.block_jacobi.ref import block_jacobi_apply_ref
+from repro.kernels.trisweep.ref import block_sweep_ref
+
+
+@functools.partial(jax.jit)
+def ssor_apply_ref(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv,
+                   mid_blocks, r):
+    y = block_sweep_ref(lo_idx, lo_n, lo_data, dinv, r, reverse=False)
+    w = block_jacobi_apply_ref(mid_blocks, y)
+    return block_sweep_ref(up_idx, up_n, up_data, dinv, w, reverse=True)

@@ -1,0 +1,17 @@
+"""Dispatch wrapper for the blocked triangular sweep."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.trisweep.ref import block_sweep_ref
+from repro.kernels.trisweep.trisweep import block_sweep
+
+
+def sweep(idx, n, data, dinv, r, *, reverse: bool = False,
+          backend: str = "auto"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return block_sweep_ref(idx, n, data, dinv, r, reverse=reverse)
+    return block_sweep(idx, n, data, dinv, r, reverse=reverse,
+                       interpret=(backend == "interpret"))

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the blocked triangular sweep.
+
+Mirrors the kernel's evaluation order exactly — row-sequential substitution,
+sequential k-slot accumulation, the same masked gather and ``jnp.dot`` calls
+— so in f64 it is bit-identical to the Pallas kernel (the cross-backend
+trajectory-identity property the SolverOps layer relies on).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("reverse",))
+def block_sweep_ref(idx: jax.Array, n: jax.Array, data: jax.Array,
+                    dinv: jax.Array, r: jax.Array,
+                    *, reverse: bool = False) -> jax.Array:
+    nbr, kmax, b, _ = data.shape
+
+    def row(t, y):
+        i = (nbr - 1 - t) if reverse else t
+        acc = jax.lax.dynamic_slice(r, (i * b,), (b,))
+
+        def slot(k, acc):
+            j = idx[i, k]
+            yj = jax.lax.dynamic_slice(y, (j * b,), (b,))
+            yj = jnp.where(k < n[i], yj, jnp.zeros_like(yj))
+            return acc - jnp.dot(data[i, k], yj,
+                                 preferred_element_type=acc.dtype)
+
+        acc = jax.lax.fori_loop(0, kmax, slot, acc)
+        yi = jnp.dot(dinv[i], acc, preferred_element_type=acc.dtype)
+        return jax.lax.dynamic_update_slice(y, yi, (i * b,))
+
+    return jax.lax.fori_loop(0, nbr, row, jnp.zeros_like(r))

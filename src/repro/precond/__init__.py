@@ -1,0 +1,15 @@
+"""Pluggable preconditioner subsystem (registry + four implementations).
+
+Importing this package registers: jacobi, ssor, chebyshev, ic0. See
+``repro.precond.base`` for the protocol (hot-loop apply per SolverOps
+backend, recovery-aware Alg. 2 local operators, serializable static data).
+"""
+from repro.precond.base import Preconditioner, available, build, register
+from repro.precond import chebyshev, ic0, jacobi, ssor  # noqa: F401 (register)
+from repro.precond.chebyshev import Chebyshev
+from repro.precond.ic0 import IC0
+from repro.precond.jacobi import BlockJacobi
+from repro.precond.ssor import SSOR
+
+__all__ = ["Preconditioner", "available", "build", "register",
+           "BlockJacobi", "SSOR", "Chebyshev", "IC0"]

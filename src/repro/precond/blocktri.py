@@ -1,0 +1,96 @@
+"""Host-side block-triangular structure extraction (static data).
+
+Splits a COO matrix into its block-diagonal / strictly-block-lower /
+strictly-block-upper parts at the preconditioner block granularity b, stored
+ELL-style (padded per-row slot arrays) so the triangular-sweep kernels
+(``repro.kernels.trisweep``) can substitute through them with static shapes.
+Like the Block-ELL matrix itself, everything here is "static data in safe
+storage" in the paper's sense: replacement nodes can rebuild it from the COO
+after a failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TriPart:
+    """One strictly-triangular part in padded ELL form.
+
+    idx:  (nbr, kmax) int32 — column-block ids, 0-padded
+    n:    (nbr,) int32      — valid slots per block row
+    data: (nbr, kmax, b, b) — dense block values (zero-padded)
+    """
+
+    idx: np.ndarray
+    n: np.ndarray
+    data: np.ndarray
+
+
+def _ell_pack(br: np.ndarray, bc: np.ndarray, blocks: np.ndarray,
+              nbr: int, b: int, dtype) -> TriPart:
+    """Pack (block-row, block-col, value-block) triples into padded ELL.
+
+    ``br``/``bc`` must already be unique pairs sorted by (br, bc) — the
+    substitution order the sweeps assume (ascending column within a row)."""
+    counts = np.bincount(br, minlength=nbr)
+    kmax = max(int(counts.max()) if counts.size else 0, 1)
+    idx = np.zeros((nbr, kmax), np.int32)
+    data = np.zeros((nbr, kmax, b, b), dtype)
+    starts = np.zeros(nbr + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    slot = np.arange(br.size) - starts[br]
+    idx[br, slot] = bc.astype(np.int32)
+    data[br, slot] = blocks
+    return TriPart(idx=idx, n=counts.astype(np.int32), data=data)
+
+
+def block_split(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                m: int, b: int, dtype=np.float64):
+    """Split COO into (diag, lower, upper) at block granularity b.
+
+    Returns (diag_blocks (nbr, b, b), lower: TriPart, upper: TriPart)."""
+    if m % b:
+        raise ValueError(f"M={m} not divisible by block {b}")
+    nbr = m // b
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals, dtype)
+    br, bc = rows // b, cols // b
+    key = br * nbr + bc
+    uniq, inv = np.unique(key, return_inverse=True)
+    ubr, ubc = uniq // nbr, uniq % nbr
+    blocks = np.zeros((uniq.size, b, b), dtype)
+    np.add.at(blocks, (inv, rows % b, cols % b), vals)
+
+    diag = np.zeros((nbr, b, b), dtype)
+    on = ubr == ubc
+    diag[ubr[on]] = blocks[on]
+    lo = ubc < ubr
+    up = ubc > ubr
+    lower = _ell_pack(ubr[lo], ubc[lo], blocks[lo], nbr, b, dtype)
+    upper = _ell_pack(ubr[up], ubc[up], blocks[up], nbr, b, dtype)
+    return diag, lower, upper
+
+
+def transpose_tripart(part: TriPart, nbr: int) -> TriPart:
+    """ELL of Tᵀ from the ELL of T (block (i,j) -> blockᵀ at (j,i))."""
+    b = part.data.shape[-1]
+    br_l, bc_l, blk_l = [], [], []
+    for i in range(nbr):
+        for k in range(int(part.n[i])):
+            br_l.append(int(part.idx[i, k]))
+            bc_l.append(i)
+            blk_l.append(part.data[i, k].T)
+    if not br_l:
+        return _ell_pack(np.empty(0, np.int64), np.empty(0, np.int64),
+                         np.empty((0, b, b), part.data.dtype), nbr, b,
+                         part.data.dtype)
+    br = np.asarray(br_l, np.int64)
+    bc = np.asarray(bc_l, np.int64)
+    blk = np.stack(blk_l)
+    order = np.lexsort((bc, br))
+    return _ell_pack(br[order], bc[order], blk[order], nbr, b,
+                     part.data.dtype)

@@ -3,9 +3,11 @@ problems of the same regime — elliptic-PDE discretizations and banded SPD).
 
 All generators return COO triples (host numpy). ``build_problem`` packages a
 generator output into the distributed ``Problem`` used by the solvers: the
-Block-ELL matrix, the partition, the right-hand side, the block-Jacobi
-preconditioner, and the raw COO (the "static data in safe storage" that the
-paper assumes replacement nodes can reload after a failure — Alg. 2 line 1).
+Block-ELL matrix, the partition, the right-hand side, a registered
+preconditioner from ``repro.precond`` (block-Jacobi by default; SSOR /
+Chebyshev / IC(0) via ``precond=...``), and the raw COO (the "static data in
+safe storage" that the paper assumes replacement nodes can reload after a
+failure — Alg. 2 line 1).
 """
 from __future__ import annotations
 
@@ -90,24 +92,12 @@ def banded_spd(n: int, bandwidth: int, density: float = 0.5, seed: int = 0,
 
 
 # --------------------------------------------------------------------------- #
-# block-Jacobi preconditioner (paper §5: uniform blocks, max block size 10,
-# blocks never straddling node boundaries)
+# preconditioners live in repro.precond (registry + jacobi/ssor/chebyshev/
+# ic0); the block-Jacobi block extraction and Cholesky-based inverse are
+# re-exported here for backward compatibility with the seed API.
 # --------------------------------------------------------------------------- #
-def block_jacobi_blocks(rows, cols, vals, m: int, b: int,
-                        dtype=np.float64) -> np.ndarray:
-    """Extract the (m/b, b, b) diagonal blocks of A (host-side, static)."""
-    if m % b:
-        raise ValueError(f"M={m} not divisible by precond block {b}")
-    blk_r, blk_c = rows // b, cols // b
-    on = blk_r == blk_c
-    out = np.zeros((m // b, b, b), dtype)
-    np.add.at(out, (blk_r[on], rows[on] % b, cols[on] % b), vals[on])
-    return out
-
-
-def invert_blocks(blocks: np.ndarray) -> np.ndarray:
-    """P = blockdiag(A_bb)^{-1}; batched inverse of SPD blocks."""
-    return np.linalg.inv(blocks)
+from repro.precond.jacobi import (block_jacobi_blocks,   # noqa: F401, E402
+                                  invert_blocks)
 
 
 # --------------------------------------------------------------------------- #
@@ -129,15 +119,28 @@ class Problem:
     diag_blocks: jax.Array        # (M/b, b, b) raw A diagonal blocks (= P^-1)
     precond_block: int
     coo: tuple[np.ndarray, np.ndarray, np.ndarray]
+    precond: object = None        # repro.precond.Preconditioner (None/"jacobi"
+    #                               keeps the seed block-Jacobi fast paths)
 
     @property
     def m(self) -> int:
         return self.part.m
 
+    @property
+    def precond_name(self) -> str:
+        return "jacobi" if self.precond is None else self.precond.name
+
     def apply_precond(self, r: jax.Array) -> jax.Array:
-        """z = P r with P = blockdiag(A_bb)^{-1} (batched block matvec)."""
-        rb = r.reshape(-1, self.precond_block)
-        return jnp.einsum("nij,nj->ni", self.pinv_blocks, rb).reshape(-1)
+        """z = P r (jnp reference backend).
+
+        Block-Jacobi keeps the seed's einsum over ``self.pinv_blocks`` —
+        bit-identical to the pre-subsystem path and sharding-aware (the
+        arrays are re-placed by ``comm.shard.place_problem``); other
+        preconditioners delegate to their registered apply."""
+        if self.precond is None or self.precond.name == "jacobi":
+            rb = r.reshape(-1, self.precond_block)
+            return jnp.einsum("nij,nj->ni", self.pinv_blocks, rb).reshape(-1)
+        return self.precond.apply(r, backend="jnp")
 
     def solver_ops(self, backend: str = "auto"):
         """The SolverOps execution bundle for this problem (see
@@ -167,11 +170,18 @@ class Problem:
 
 def build_problem(kind: str, n_nodes: int, *, bm: int = 8, bn: int = 8,
                   precond_block: int = 10, dtype=np.float64, seed: int = 0,
+                  precond: str = "jacobi", precond_opts: dict | None = None,
                   **kw) -> Problem:
     """Build a distributed SPD problem.
 
     kind: "poisson2d" (nx[, ny]) | "poisson3d" (nx[, ny, nz]) |
           "banded" (n, bandwidth[, density]).
+
+    ``precond`` selects a registered preconditioner ("jacobi" | "ssor" |
+    "chebyshev" | "ic0"); ``precond_opts`` passes options through to its
+    builder (e.g. omega=1.2 for SSOR, degree=6 for Chebyshev). The
+    block-Jacobi diagonal/inverse blocks are always built — they also serve
+    as the Alg. 2 line-8 inner-solve preconditioner.
 
     The problem size is padded (with identity rows) up to
     lcm(n_nodes*bm, n_nodes*bn, n_nodes*precond_block) multiples so that the
@@ -200,10 +210,16 @@ def build_problem(kind: str, n_nodes: int, *, bm: int = 8, bn: int = 8,
     a = BlockEll.from_coo(rows, cols, vals, m_pad, bm, bn, dtype=dtype)
     diag = block_jacobi_blocks(rows, cols, vals, m_pad, precond_block, dtype)
     pinv = invert_blocks(diag)
+    from repro import precond as precond_pkg
+    pc = precond_pkg.build(precond, coo=(rows, cols, vals), m=m_pad,
+                           block=precond_block, dtype=dtype, a=a,
+                           diag_blocks=diag, pinv_blocks=pinv,
+                           **(precond_opts or {}))
     rng = np.random.default_rng(seed + 1)
     b = rng.standard_normal(m_pad).astype(dtype)
     if m_pad != m:
         b[m:] = 0.0
     return Problem(a=a, part=part, b=jnp.asarray(b),
                    pinv_blocks=jnp.asarray(pinv), diag_blocks=jnp.asarray(diag),
-                   precond_block=precond_block, coo=(rows, cols, vals))
+                   precond_block=precond_block, coo=(rows, cols, vals),
+                   precond=pc)

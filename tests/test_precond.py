@@ -1,0 +1,338 @@
+"""Pluggable preconditioner subsystem: per-preconditioner SPD/symmetry
+properties, dense-algebra oracles, cross-backend bit-identity, failure-free
+trajectory identity, and Alg. 2 reconstruction exactness through the
+non-block-diagonal P_{f,I\\f} path (SSOR/Chebyshev/IC(0)).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import precond as pp
+from repro.core import esrp, failures
+from repro.core.driver import solve_resilient
+from repro.precond.jacobi import invert_blocks
+from repro.sparse.matrices import build_problem
+
+ALL_PRECONDS = ("jacobi", "ssor", "chebyshev", "ic0")
+
+
+@pytest.fixture(scope="module")
+def small_problems():
+    """m=80 poisson2d per preconditioner (dense checks stay cheap)."""
+    return {name: build_problem("poisson2d", n_nodes=2, nx=8, precond=name)
+            for name in ALL_PRECONDS}
+
+
+@pytest.fixture(scope="module")
+def p3d_problems():
+    """poisson3d (block pattern wider than tridiagonal: IC(0) drops real
+    fill, SSOR couples across nodes) per preconditioner."""
+    return {name: build_problem("poisson3d", n_nodes=4, nx=8, precond=name)
+            for name in ALL_PRECONDS}
+
+
+def _dense_P(problem):
+    # column-by-column (vmap has no batching rule for the optimization
+    # barriers that pin the applies' cross-backend bit-identity)
+    apply_ = problem.precond.make_apply("jnp")
+    eye = np.eye(problem.m)
+    return np.stack([np.asarray(apply_(jnp.asarray(eye[:, i])))
+                     for i in range(problem.m)], axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------------- #
+def test_registry_lists_all_four():
+    assert pp.available() == ["chebyshev", "ic0", "jacobi", "ssor"]
+
+
+def test_registry_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown preconditioner"):
+        pp.build("nope", coo=None, m=0, block=1, dtype=np.float64)
+
+
+# --------------------------------------------------------------------------- #
+# operator properties: symmetry + positive definiteness
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ALL_PRECONDS)
+def test_spd_and_symmetric(small_problems, name):
+    p = small_problems[name]
+    P = _dense_P(p)
+    np.testing.assert_allclose(P, P.T, atol=1e-13)
+    ev = np.linalg.eigvalsh((P + P.T) / 2)
+    assert ev.min() > 0, f"{name}: min eig {ev.min()}"
+
+
+# --------------------------------------------------------------------------- #
+# dense-algebra oracles
+# --------------------------------------------------------------------------- #
+def test_ssor_matches_dense_formula(small_problems):
+    p = small_problems["ssor"]
+    A = p.a.to_dense()
+    b = p.precond_block
+    nb = p.m // b
+    D = np.zeros_like(A)
+    Lb = np.zeros_like(A)
+    for i in range(nb):
+        D[i * b:(i + 1) * b, i * b:(i + 1) * b] = \
+            A[i * b:(i + 1) * b, i * b:(i + 1) * b]
+        for j in range(i):
+            Lb[i * b:(i + 1) * b, j * b:(j + 1) * b] = \
+                A[i * b:(i + 1) * b, j * b:(j + 1) * b]
+    M = (D + Lb) @ np.linalg.inv(D) @ (D + Lb.T)          # omega = 1
+    rng = np.random.default_rng(3)
+    r = rng.standard_normal(p.m)
+    z = np.asarray(p.precond.apply(jnp.asarray(r)))
+    np.testing.assert_allclose(z, np.linalg.solve(M, r), rtol=1e-12,
+                               atol=1e-13)
+
+
+def test_ic0_matches_factor_solve(small_problems):
+    """On a block-tridiagonal pattern IC(0) has no dropped fill, so
+    (L Lᵀ)⁻¹ r from the packed factors must equal the sweeps' output — and
+    L Lᵀ must equal A itself (exact factorization)."""
+    p = small_problems["ic0"]
+    pc = p.precond
+    b = p.precond_block
+    nb = p.m // b
+    L = np.zeros((p.m, p.m))
+    lo_idx, lo_n, lo_data, dinv_f = map(
+        np.asarray, (pc.lo_idx, pc.lo_n, pc.lo_data, pc.dinv_f))
+    for i in range(nb):
+        L[i * b:(i + 1) * b, i * b:(i + 1) * b] = np.linalg.inv(dinv_f[i])
+        for k in range(lo_n[i]):
+            j = lo_idx[i, k]
+            L[i * b:(i + 1) * b, j * b:(j + 1) * b] = lo_data[i, k]
+    rng = np.random.default_rng(4)
+    r = rng.standard_normal(p.m)
+    z = np.asarray(pc.apply(jnp.asarray(r)))
+    np.testing.assert_allclose(z, np.linalg.solve(L @ L.T, r), rtol=1e-12,
+                               atol=1e-13)
+    np.testing.assert_allclose(L @ L.T, p.a.to_dense(), atol=1e-10)
+
+
+def test_chebyshev_matches_dense_recurrence(small_problems):
+    p = small_problems["chebyshev"]
+    pc = p.precond
+    A = p.a.to_dense()
+    rng = np.random.default_rng(5)
+    r = rng.standard_normal(p.m)
+    from repro.kernels.chebyshev.chebyshev import cheb_coefficients
+    theta = (pc.hi + pc.lo) / 2.0
+    z, dz = r / theta, r / theta
+    for a_c, b_c in cheb_coefficients(pc.lo, pc.hi, pc.degree):
+        dz = a_c * dz + b_c * (r - A @ z)
+        z = z + dz
+    np.testing.assert_allclose(np.asarray(pc.apply(jnp.asarray(r))), z,
+                               rtol=1e-12, atol=1e-13)
+
+
+def test_chebyshev_gershgorin_brackets_spectrum(small_problems):
+    p = small_problems["chebyshev"]
+    ev = np.linalg.eigvalsh(p.a.to_dense())
+    assert p.precond.hi >= ev.max() - 1e-12
+    assert p.precond.lo > 0
+
+
+# --------------------------------------------------------------------------- #
+# cross-backend bit-identity (pallas/interpret vs jnp)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ALL_PRECONDS)
+def test_apply_bit_identical_across_backends(p3d_problems, name):
+    p = p3d_problems[name]
+    rng = np.random.default_rng(6)
+    for _ in range(3):
+        r = jnp.asarray(rng.standard_normal(p.m))
+        z_jnp = p.precond.apply(r, backend="jnp")
+        z_int = p.precond.apply(r, backend="interpret")
+        np.testing.assert_array_equal(np.asarray(z_jnp), np.asarray(z_int))
+
+
+@pytest.mark.parametrize("name", ("ssor", "chebyshev", "ic0"))
+def test_trajectory_bit_identical_across_backends(p3d_problems, name):
+    """The full ESRP hot loop (fused matvec_dot + the preconditioner's own
+    update path) through the interpret bundle must reproduce the jnp bundle
+    bit-for-bit, iteration by iteration, through storage stages."""
+    p = p3d_problems[name]
+    ops_j = p.solver_ops("jnp")
+    ops_i = p.solver_ops("interpret")
+    thresh = jnp.asarray(0.0, p.b.dtype)
+    s_j = esrp.esrp_init(ops_j.matvec, ops_j.precond, p.b)
+    s_i = esrp.esrp_init(ops_i.matvec, ops_i.precond, p.b)
+    s_j, norms_j = esrp.run_chunk(s_j, ops_j, 5, 15, thresh)
+    s_i, norms_i = esrp.run_chunk(s_i, ops_i, 5, 15, thresh)
+    np.testing.assert_array_equal(np.asarray(norms_j), np.asarray(norms_i))
+    for a, b in zip(jax.tree.leaves(s_j), jax.tree.leaves(s_i)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------- #
+# convergence on every problem family
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ALL_PRECONDS)
+@pytest.mark.parametrize("kind,kw", (
+    ("poisson2d", dict(nx=12)),
+    ("poisson3d", dict(nx=6)),
+    ("banded", dict(n=300, bandwidth=12)),
+))
+def test_converges_on_all_problem_families(name, kind, kw):
+    p = build_problem(kind, n_nodes=2, precond=name, **kw)
+    rep = solve_resilient(p, strategy="none", rtol=1e-8)
+    assert rep.rel_residual < 1e-8, (name, kind, rep.rel_residual)
+
+
+def test_ssor_and_ic0_beat_jacobi_on_anisotropic_poisson3d():
+    """The paper-proposed experiment in miniature: stronger preconditioners
+    cut iterations-to-converge in the anisotropic regime where block-Jacobi
+    struggles."""
+    iters = {}
+    for name in ("jacobi", "ssor", "ic0"):
+        p = build_problem("poisson3d", n_nodes=2, nx=8, eps=0.25,
+                          precond=name)
+        iters[name] = solve_resilient(p, strategy="none",
+                                      rtol=1e-8).converged_iter
+    assert iters["ssor"] < iters["jacobi"]
+    assert iters["ic0"] < iters["jacobi"]
+
+
+# --------------------------------------------------------------------------- #
+# Alg. 2 lines 5-6: the non-block-diagonal P_{f,I\f} path
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ("ssor", "chebyshev", "ic0"))
+def test_line56_recovers_r_f_exactly(p3d_problems, name):
+    """Given z = P r and the surviving r entries, the local operators must
+    recover the failed entries of r: r_f = P_ff⁻¹ (z_f − P_{f,I\\f} r_{I\\f})
+    to fp accuracy — the algebra Alg. 2 lines 5-6 rely on."""
+    p = p3d_problems[name]
+    failed = [1]
+    mask = failures.failed_row_mask(p.part, failed)
+    f_rows = failures.failed_rows(p.part, failed)
+    rng = np.random.default_rng(7)
+    r_full = jnp.asarray(rng.standard_normal(p.m))
+    z_full = p.precond.apply(r_full)
+
+    offdiag, pff_solve = p.precond.local_ops(mask, f_rows)
+    assert offdiag is not None         # genuine off-diagonal coupling
+    r_surv = jnp.where(jnp.asarray(mask), 0.0, r_full)   # failed data lost
+    v = z_full[jnp.asarray(f_rows)] - offdiag(r_surv)
+    r_f = pff_solve(v)
+    np.testing.assert_allclose(np.asarray(r_f),
+                               np.asarray(r_full)[f_rows],
+                               rtol=1e-9, atol=1e-11)
+
+
+def test_jacobi_local_ops_exact_closed_form(small_problems):
+    p = small_problems["jacobi"]
+    failed = [0]
+    mask = failures.failed_row_mask(p.part, failed)
+    f_rows = failures.failed_rows(p.part, failed)
+    offdiag, pff_solve = p.precond.local_ops(mask, f_rows)
+    assert offdiag is None             # P offdiag is exactly zero
+    rng = np.random.default_rng(8)
+    r_full = jnp.asarray(rng.standard_normal(p.m))
+    z_full = p.precond.apply(r_full)
+    r_f = pff_solve(z_full[jnp.asarray(f_rows)])
+    np.testing.assert_allclose(np.asarray(r_f), np.asarray(r_full)[f_rows],
+                               rtol=1e-12, atol=1e-13)
+
+
+@pytest.mark.parametrize("name", ("ssor", "chebyshev", "ic0"))
+def test_esrp_midstage_failure_exact_reconstruction(p3d_problems, name):
+    """Mid-stage node failure + Alg. 2 through the preconditioner-aware
+    lines 5-6: the solver must converge in exactly the failure-free
+    iteration count (the paper's exact-reconstruction criterion)."""
+    p = p3d_problems[name]
+    ref = solve_resilient(p, strategy="none", rtol=1e-9, chunk=16)
+    C = ref.converged_iter
+    assert C > 8, f"{name} converged too fast for a mid-solve failure ({C})"
+    T = 3
+    # right after a stage's *first* push (the hard mid-stage case), with at
+    # least one complete earlier stage to roll back to
+    fail_at = max(2 * T, (C // 2 // T) * T)
+    assert fail_at < C
+    r = solve_resilient(p, strategy="esrp", T=T, phi=1, rtol=1e-9, chunk=16,
+                        fail_at=fail_at, failed_nodes=[2])
+    assert r.converged_iter == C
+    assert r.rel_residual < 1e-9
+    assert r.target_iter >= 0 and r.wasted_iters == fail_at - r.target_iter
+
+
+def test_esrp_failure_recovery_bit_identical_nonlocal(p3d_problems):
+    """SSOR (non-local P) failure + recovery must leave the jnp and
+    interpret backends on identical reports — recovery routes both through
+    the same jnp reconstruction closures."""
+    p = p3d_problems["ssor"]
+    ref = solve_resilient(p, strategy="none", rtol=1e-9, backend="jnp")
+    reports = {}
+    for backend in ("jnp", "interpret"):
+        reports[backend] = solve_resilient(
+            p, strategy="esrp", T=5, phi=1, rtol=1e-9, chunk=16,
+            fail_at=10, failed_nodes=[2], backend=backend)
+    rj, ri = reports["jnp"], reports["interpret"]
+    assert rj.converged_iter == ri.converged_iter == ref.converged_iter
+    assert rj.rel_residual == ri.rel_residual
+    assert rj.target_iter == ri.target_iter
+
+
+def test_pff_solve_threads_tolerances(p3d_problems):
+    """reconstruct()'s inner_rtol/inner_max_iters must reach the line-6
+    P_ff inner CG: a single-iteration budget gives a visibly worse solve
+    than the default 1e-14 target."""
+    p = p3d_problems["ssor"]
+    failed = [1]
+    mask = failures.failed_row_mask(p.part, failed)
+    f_rows = failures.failed_rows(p.part, failed)
+    _, pff_solve = p.precond.local_ops(mask, f_rows)
+    rng = np.random.default_rng(11)
+    r_full = jnp.asarray(rng.standard_normal(p.m))
+    v = p.precond.apply(r_full)[jnp.asarray(f_rows)]  # pretend offdiag = 0
+    tight = np.asarray(pff_solve(v))
+    loose = np.asarray(pff_solve(v, 1e-1, 1))
+    assert not np.allclose(tight, loose, rtol=1e-10, atol=1e-12)
+
+
+def test_sharded_runtime_rejects_non_jacobi(p3d_problems):
+    from repro.comm import shard
+
+    mesh = shard.nodes_mesh(1)
+    with pytest.raises(NotImplementedError, match="block-Jacobi"):
+        shard.sharded_solver_ops(p3d_problems["ssor"], mesh)
+
+
+# --------------------------------------------------------------------------- #
+# serializable static data (safe storage round-trip)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ALL_PRECONDS)
+def test_static_state_roundtrip(small_problems, tmp_path, name):
+    p = small_problems[name]
+    state = p.precond.static_state()
+    path = tmp_path / f"{name}.npz"
+    np.savez(path, **state)
+    loaded = dict(np.load(path))
+    cls = type(p.precond)
+    rebuilt = cls.from_static(loaded, m=p.m, dtype=p.b.dtype, a=p.a)
+    rng = np.random.default_rng(9)
+    r = jnp.asarray(rng.standard_normal(p.m))
+    np.testing.assert_array_equal(np.asarray(p.precond.apply(r)),
+                                  np.asarray(rebuilt.apply(r)))
+
+
+# --------------------------------------------------------------------------- #
+# satellite: Cholesky-based invert_blocks
+# --------------------------------------------------------------------------- #
+def test_invert_blocks_matches_inv_and_is_symmetric():
+    rng = np.random.default_rng(10)
+    g = rng.standard_normal((7, 6, 6))
+    spd = g @ np.swapaxes(g, -1, -2) + 6 * np.eye(6)
+    out = invert_blocks(spd)
+    np.testing.assert_allclose(out, np.linalg.inv(spd), rtol=1e-9,
+                               atol=1e-11)
+    np.testing.assert_array_equal(out, np.swapaxes(out, -1, -2))
+
+
+def test_invert_blocks_rejects_non_spd():
+    blocks = np.stack([np.eye(4), -np.eye(4)])
+    with pytest.raises(np.linalg.LinAlgError, match="not SPD"):
+        invert_blocks(blocks)
