@@ -306,6 +306,122 @@ def bench_precond(full):
         f.write("\n".join(lines) + "\n")
 
 
+def bench_failures(full):
+    """Failure-scenario sweep: simultaneous vs staggered vs burst × φ × T
+    for ESRP and IMCR — the multi-failure experiment of Pachajoa et al.
+    (arXiv:1907.13077) on top of the paper's protocol.
+
+      simultaneous  one event, φ nodes at once (worst case two iterations
+                    before a storage stage completes)
+      staggered     φ events of one node each, spaced a full period apart
+                    (failure → recover → fail again)
+      burst         two events one iteration apart: the second strikes the
+                    re-run before the next storage stage completes, forcing
+                    a rollback to the SAME reconstruction point again
+
+    Writes artifacts/bench/failures.csv (per-row sweep) and a
+    machine-readable BENCH_failures.json next to it so the recovery-cost
+    trajectory is trackable across PRs.
+    """
+    import json
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.driver import solve_resilient
+    from repro.core.failures import FailureEvent
+    from repro.sparse.matrices import build_problem
+
+    n_nodes = 8
+    kind, kw = "poisson2d", dict(nx=96 if full else 48)
+    p = build_problem(kind, n_nodes=n_nodes, **kw)
+    solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)        # warmup
+    ref = solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)
+    C, t0 = ref.converged_iter, ref.runtime_s
+    Ts = (10, 20, 50) if full else (10, 20)
+    phis = (1, 2, 4) if full else (1, 2)
+
+    def scenarios(T, phi):
+        J1 = (C // 2 // T) * T + T - 2          # two before a stage completes
+        spread = [(1 + 2 * i) % n_nodes for i in range(phi)]  # buddy-safe
+        out = {"simultaneous": [FailureEvent(J1, tuple(spread))],
+               "burst": [FailureEvent(J1, (1,)), FailureEvent(J1 + 1, (3,))]}
+        if phi > 1:
+            out["staggered"] = [FailureEvent(J1 + k * T, (spread[k],))
+                                for k in range(phi)]
+        return {name: evs for name, evs in out.items()
+                if all(ev.iter < C for ev in evs)}
+
+    header = ("strategy,T,phi,scenario,n_events,converged_iter,wasted_iters,"
+              "recovery_ms,runtime_s,overhead_pct,rel_residual,drift,targets")
+    lines = [header]
+    rows = []
+    for strategy in ("esrp", "imcr"):
+        for T in Ts:
+            for phi in phis:
+                for scen, events in scenarios(T, phi).items():
+                    # first run pays the one-off jit compiles of the
+                    # post-failure chunk tails + reconstruction closures;
+                    # report the warm second run (same policy as precond's
+                    # us_per_iter note — compile time is not recovery cost)
+                    solve_resilient(p, strategy=strategy, T=T, phi=phi,
+                                    rtol=1e-8, chunk=32, scenario=events)
+                    r = solve_resilient(p, strategy=strategy, T=T, phi=phi,
+                                        rtol=1e-8, chunk=32, scenario=events)
+                    row = dict(
+                        strategy=strategy, T=T, phi=phi, scenario=scen,
+                        n_events=len(events),
+                        event_iters=[e.iter for e in events],
+                        converged_iter=r.converged_iter,
+                        wasted_iters=r.wasted_iters,
+                        recovery_ms=1e3 * r.recovery_s,
+                        runtime_s=r.runtime_s,
+                        overhead_pct=100 * (r.runtime_s - t0) / t0,
+                        rel_residual=r.rel_residual, drift=r.drift,
+                        targets=[e.target_iter for e in r.events],
+                        per_event_wasted=[e.wasted_iters for e in r.events])
+                    rows.append(row)
+                    lines.append(
+                        f"{strategy},{T},{phi},{scen},{len(events)},"
+                        f"{r.converged_iter},{r.wasted_iters},"
+                        f"{1e3 * r.recovery_s:.2f},{r.runtime_s:.3f},"
+                        f"{row['overhead_pct']:.1f},{r.rel_residual:.2e},"
+                        f"{r.drift:.2e},"
+                        f"{'|'.join(str(t) for t in row['targets'])}")
+    # harness CSV: the headline multi-failure settings at T=20
+    for row in rows:
+        if row["T"] == 20 and (row["phi"] == max(phis) or
+                               row["scenario"] == "burst"):
+            print(f"failures_{row['strategy']}_{row['scenario']}"
+                  f"_T{row['T']}_phi{row['phi']},"
+                  f"{1e6 * row['runtime_s']:.0f},"
+                  f"wasted={row['wasted_iters']};"
+                  f"recovery_ms={row['recovery_ms']:.2f};"
+                  f"overhead_pct={row['overhead_pct']:.1f}")
+    exact = sum(r_["converged_iter"] == C for r_ in rows)
+    print(f"failures_exact_rejoin,0,rejoined={exact}/{len(rows)};ref_C={C}")
+    _ensure_dir()
+    with open("artifacts/bench/failures.csv", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    summary = dict(
+        problem=dict(kind=kind, n_nodes=n_nodes, m=p.m, **kw),
+        reference=dict(converged_iter=C, runtime_s=t0,
+                       rel_residual=ref.rel_residual, drift=ref.drift),
+        sweep=dict(Ts=list(Ts), phis=list(phis),
+                   strategies=["esrp", "imcr"]),
+        rows=rows,
+        aggregate=dict(
+            n_rows=len(rows),
+            exact_rejoin=exact,
+            max_wasted_iters=max(r_["wasted_iters"] for r_ in rows),
+            max_recovery_ms=max(r_["recovery_ms"] for r_ in rows),
+            median_overhead_pct=float(np.median(
+                [r_["overhead_pct"] for r_ in rows]))))
+    with open("artifacts/bench/BENCH_failures.json", "w") as f:
+        json.dump(summary, f, indent=1, default=float)
+    print(f"# wrote artifacts/bench/failures.csv + BENCH_failures.json "
+          f"({len(rows)} rows)")
+
+
 ALL = {
     "table2": lambda full: bench_paper_table("table2", full),
     "table3": lambda full: bench_paper_table("table3", full),
@@ -314,6 +430,7 @@ ALL = {
     "kernels": lambda full: bench_kernels(),
     "iteration": bench_iteration,
     "precond": bench_precond,
+    "failures": bench_failures,
     "ft": lambda full: bench_ft(),
     "roofline": lambda full: bench_roofline(),
 }

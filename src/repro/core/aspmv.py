@@ -73,6 +73,26 @@ class RedundancyPlan:
         alive[np.asarray(failed)] = False
         return (self.holders & alive[None, :]).any(axis=1)
 
+    def check_event(self, failed: list[int]) -> None:
+        """Per-event φ-copy survival analysis: every tile owned by a failed
+        node must keep at least one copy on a survivor, or the event is
+        unrecoverable (Alg. 2 has no p^(j-1)/p^(j) to read).
+
+        The φ+1-copies invariant guarantees this for |failed| ≤ φ; larger
+        failed sets may *still* survive when the holders happen to be spread
+        out (arXiv:1907.13077 §4's observation) — so the check is against
+        the actual holder topology, not the count.
+        """
+        tiles = np.unique(np.concatenate(
+            [np.arange(*self.part.node_col_tiles(s)) for s in failed]))
+        alive = self.survives(np.asarray(failed))[tiles]
+        if not alive.all():
+            lost = tiles[~alive]
+            raise RuntimeError(
+                f"{len(failed)} simultaneous failures {sorted(failed)} "
+                f"exceed the phi={self.phi} redundancy: "
+                f"{lost.size} tile(s) lost all copies (first: {lost[:4]})")
+
 
 def build_plan(a: BlockEll, part: Partition, phi: int) -> RedundancyPlan:
     if phi >= part.n_nodes:

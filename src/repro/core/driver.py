@@ -1,11 +1,20 @@
-"""Resilient-solve orchestration: run → (inject failure) → recover → converge.
+"""Resilient-solve orchestration: run → (inject failures) → recover → converge.
 
-Mirrors the paper's experimental protocol (§4-§5): one node-failure event per
-run, injected at a marked iteration (the driver lands exactly on it), failed
-nodes zero out all their dynamic data and then act as their own replacements.
-Reported quantities match the paper's tables: total runtime, reconstruction
-overhead, wasted iterations, converged iteration count, and residual drift
-(Eq. 2).
+Generalizes the paper's experimental protocol (§4-§5) from one node-failure
+event per run to a *failure scenario*: a list of ``FailureEvent(iter, nodes)``
+entries, each injected at a marked iteration (the driver lands exactly on
+it). An event may strike several nodes simultaneously (the multi-node case of
+Pachajoa et al., arXiv:1907.13077), and events may be staggered — failure →
+recover → fail again, including a second event landing before the next
+completed storage stage, which rolls back to the *same* reconstruction point
+again (or restarts when none exists). Rollback rewinds the iteration counter
+below already-consumed events without re-arming them; validation (strictly
+increasing event iterations) keeps every pending event ahead of the rewound
+counter, so each fires exactly once. Failed nodes zero out all their dynamic
+data and then act as their own replacements. Reported quantities match the
+paper's tables — total runtime, reconstruction overhead, wasted iterations,
+converged iteration count, residual drift (Eq. 2) — plus a per-event
+breakdown (``SolveReport.events``).
 
 The hot loop runs through a ``SolverOps`` bundle (repro.core.ops): Block-ELL
 SpMV fused with the pᵀq dot, fused vector update, cond-gated storage
@@ -27,10 +36,22 @@ import numpy as np
 
 from repro.core import esr, esrp, imcr
 from repro.core.aspmv import RedundancyPlan, build_plan
-from repro.core.failures import failed_row_mask, zero_failed
+from repro.core.failures import (FailureEvent, failed_row_mask,
+                                 normalize_scenario, zero_failed)
 from repro.core.ops import SolverOps, make_closure_ops
-from repro.core.pcg import PCGState, pcg_iterate_ops, residual_drift
+from repro.core.pcg import PCGState, residual_drift
 from repro.sparse.matrices import Problem
+
+
+@dataclasses.dataclass
+class EventReport:
+    """Per-event recovery accounting (one entry per fired FailureEvent)."""
+    iter: int                    # iteration J the event struck
+    nodes: tuple[int, ...]
+    target_iter: int             # reconstruction point (-1 = restart)
+    wasted_iters: int            # rollback distance of this event
+    recovery_s: float            # reconstruction ops only
+    inner_rel: float             # Alg.2 line-8 inner solve (nan: imcr/none)
 
 
 @dataclasses.dataclass
@@ -41,14 +62,15 @@ class SolveReport:
     converged_iter: int
     rel_residual: float
     runtime_s: float
-    recovery_s: float            # reconstruction ops only (paper's metric)
-    wasted_iters: int            # rollback distance
-    target_iter: int             # reconstruction point (-1 = restart)
-    inner_rel: float             # Alg.2 line-8 inner-solve relative residual
+    recovery_s: float            # reconstruction ops only, summed over events
+    wasted_iters: int            # rollback distance, summed over events
+    target_iter: int             # last event's reconstruction point (-1 = restart)
+    inner_rel: float             # last event's Alg.2 line-8 inner-solve residual
     drift: float                 # paper Eq. (2)
     aspmv_natural_bytes: int = 0
     aspmv_total_bytes: int = 0
     run_calls: int = 0           # chunk dispatches (no final-chunk re-run)
+    events: list[EventReport] = dataclasses.field(default_factory=list)
 
 
 def _find_convergence(norms: np.ndarray, thresh: float) -> int:
@@ -58,8 +80,12 @@ def _find_convergence(norms: np.ndarray, thresh: float) -> int:
 
 
 # module-level so the trace cache survives across solves (a fresh jit wrapper
-# per resume would recompile the same iteration every failure run)
-_resume_iterate = jax.jit(pcg_iterate_ops, static_argnums=1)
+# per resume would recompile the same iteration every failure run).
+# esrp.numeric_step (not bare pcg_iterate_ops): the resume iteration must run
+# the same rr_every residual-replacement gate as the chunk runner, or a
+# replacement landing on the reconstruction point would be silently skipped
+# and the post-recovery trajectory would fork off the failure-free one.
+_resume_step = jax.jit(esrp.numeric_step, static_argnums=(1, 3, 4))
 
 
 def solve_resilient(
@@ -69,8 +95,9 @@ def solve_resilient(
     phi: int = 1,
     rtol: float = 1e-8,
     max_iters: int = 100_000,
-    fail_at: Optional[int] = None,     # iteration J struck by the failure
+    fail_at: Optional[int] = None,     # legacy one-event shorthand
     failed_nodes: Optional[list[int]] = None,
+    scenario: Optional[list[FailureEvent]] = None,   # multi-event scenario
     matvec: Optional[Callable] = None,
     chunk: int = 64,
     rr_every: int = 0,                 # residual replacement period (0 = off)
@@ -124,11 +151,16 @@ def solve_resilient(
     else:
         raise ValueError(strategy)
 
+    pending = normalize_scenario(scenario, fail_at, failed_nodes,
+                                 part.n_nodes)
+    event_reports: list[EventReport] = []
     recovery_s = 0.0
     wasted = 0
     target = -2
     inner_rel = float("nan")
-    pending_fail = fail_at is not None
+    # rr gating applies to the esrp/none runners only; imcr's chunk runner
+    # has no replacement gate, so its resume must not add one either
+    resume_rr = rr_every if strategy != "imcr" else 0
 
     t0 = time.perf_counter()
     total_iters = 0
@@ -156,10 +188,11 @@ def solve_resilient(
     while not converged:
         if resume_numeric_only:
             # post-recovery: re-run the reconstruction-point iteration without
-            # its storage prelude (its push already happened pre-failure).
-            # Jitted so the jnp backend fuses exactly like inside run_chunk —
-            # keeps the cross-backend trajectory bit-identity through recovery.
-            pcg = _resume_iterate(st.pcg, ops)
+            # its storage prelude (its push already happened pre-failure) but
+            # WITH the rr_every replacement gate (see _resume_step). Jitted so
+            # the jnp backend fuses exactly like inside run_chunk — keeps the
+            # cross-backend trajectory bit-identity through recovery.
+            pcg = _resume_step(st.pcg, ops, b, resume_rr, gated)
             st = st._replace(pcg=pcg)
             total_iters = int(pcg.j)
             resume_numeric_only = False
@@ -168,8 +201,8 @@ def solve_resilient(
             continue
 
         n = chunk
-        if pending_fail:
-            n = min(n, fail_at - total_iters)
+        if pending:
+            n = min(n, pending[0].iter - total_iters)
         entry = None
         if n > 0:
             st, norms = run(st, n)               # async dispatch
@@ -183,7 +216,7 @@ def solve_resilient(
                 break                            # entry (if any) discarded:
                 #                                  the state is frozen past
                 #                                  convergence by construction
-        at_fail = pending_fail and total_iters == fail_at
+        at_fail = bool(pending) and total_iters == pending[0].iter
         if entry is not None:
             if at_fail or total_iters >= max_iters:
                 if settle(entry):
@@ -194,15 +227,27 @@ def solve_resilient(
             break
 
         if at_fail:
-            pending_fail = False
-            failed = sorted(failed_nodes or [0])
+            ev = pending.pop(0)
+            failed = list(ev.nodes)
+            ev_inner = float("nan")
             if strategy == "imcr":
-                st, wasted, target, rec_t = _imcr_failure(
+                st, ev_wasted, target, rec_t = _imcr_failure(
                     st, part, failed, phi, matvec, precond, b)
+            elif strategy == "none":
+                # no redundancy of any kind: nothing can rebuild the lost
+                # entries — cleanly restart from scratch, counting the work
+                st, ev_wasted, target, rec_t = _none_failure(
+                    st, matvec, precond, b)
             else:
-                st, wasted, target, inner_rel, rec_t = _esrp_failure(
+                st, ev_wasted, target, ev_inner, rec_t = _esrp_failure(
                     problem, plan, st, failed, T, matvec, precond)
+                inner_rel = ev_inner
             recovery_s += rec_t
+            wasted += ev_wasted
+            event_reports.append(EventReport(
+                iter=ev.iter, nodes=ev.nodes, target_iter=target,
+                wasted_iters=ev_wasted, recovery_s=rec_t,
+                inner_rel=ev_inner))
             total_iters = int(st.pcg.j)
             resume_numeric_only = target >= 0
     runtime = time.perf_counter() - t0
@@ -219,7 +264,16 @@ def solve_resilient(
         rel_residual=rel, runtime_s=runtime, recovery_s=recovery_s,
         wasted_iters=wasted, target_iter=target, inner_rel=inner_rel,
         drift=drift, aspmv_natural_bytes=nat_bytes,
-        aspmv_total_bytes=tot_bytes, run_calls=run_calls)
+        aspmv_total_bytes=tot_bytes, run_calls=run_calls,
+        events=event_reports)
+
+
+# --------------------------------------------------------------------------- #
+def _none_failure(st: esrp.ESRPState, matvec, precond, b):
+    """strategy="none": no redundant copies, no checkpoints — every failure
+    is a full restart with target_iter = -1 and J wasted iterations."""
+    J = int(st.pcg.j)
+    return esrp.esrp_init(matvec, precond, b), J, -1, 0.0
 
 
 # --------------------------------------------------------------------------- #
@@ -240,12 +294,10 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     st = st._replace(pcg=pcg, x_s=lose(st.x_s), r_s=lose(st.r_s),
                      z_s=lose(st.z_s), p_s=lose(st.p_s))
 
-    # redundant copies survive iff a holder outlives the failure
-    col_tiles = np.unique(np.concatenate(
-        [np.arange(*part.node_col_tiles(s)) for s in failed]))
-    if not plan.survives(np.array(failed))[col_tiles].all():
-        raise RuntimeError(
-            f"{len(failed)} simultaneous failures exceed phi={plan.phi}")
+    # per-event φ-copy survival analysis: a redundant copy of every failed
+    # tile must outlive this event's failed set (topology-aware, so a lucky
+    # |failed| > φ set can still pass — see RedundancyPlan.check_event)
+    plan.check_event(failed)
 
     target, prev_slot, curr_slot = esrp.recovery_point(st, T)
     if target < 0:
@@ -311,10 +363,16 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
 def _imcr_failure(st: imcr.IMCRState, part, failed: list[int], phi: int,
                   matvec, precond, b):
     """IMCR: zero the failed nodes' live data, then everyone rolls back to the
-    last checkpoint (replacements fetch their parts from surviving buddies)."""
+    last checkpoint (replacements fetch their parts from surviving buddies).
+
+    The checkpoint state (``ck_*``, ``ck_tag``) is left untouched by
+    recovery: it still holds the rolled-back-to iteration, so a *second*
+    event striking before the next scheduled checkpoint finds a valid
+    anchor and rolls back to the same tag again."""
     J = int(st.pcg.j)
-    if len(failed) > phi:
-        raise RuntimeError(f"{len(failed)} failures exceed phi={phi}")
+    # per-event buddy-survival analysis (|failed| ≤ φ always passes; a
+    # spread-out larger set may too — see imcr.check_survivable)
+    imcr.check_survivable(failed, phi, part.n_nodes)
     mask = failed_row_mask(part, failed)
     lose = lambda v: zero_failed(v, mask)
     st = st._replace(pcg=st.pcg._replace(

@@ -24,6 +24,12 @@ A_ff — a reconstruction-internal choice, independent of the hot-loop P.
 Static data (A rows, P static state, b entries of the failed nodes) is
 rebuilt from the problem's host-side COO — the paper's "retrieve from safe
 storage".
+
+The failed set may span several (non-contiguous) nodes — one simultaneous
+multi-node event of the scenario engine resolves to ONE reconstruction over
+the union I_f of all its failed rows (arXiv:1907.13077's simultaneous case);
+the inner solves are zero-RHS-safe (``run_pcg`` returns x = 0, rel = 0.0
+instead of NaN when a strip of v or w is exactly zero).
 """
 from __future__ import annotations
 
@@ -67,10 +73,18 @@ class ReconstructionOps:
     @staticmethod
     def build(problem: Problem, failed: list[int]) -> "ReconstructionOps":
         part = problem.part
-        failed = sorted(failed)
+        failed = sorted(set(failed))
         mask = failures.failed_row_mask(part, failed)
         f_rows = failures.failed_rows(part, failed)
         to_compact = failures.compact_map(part, failed)
+        # the compact strip is re-blocked at bm granularity below (rt = nf//bm
+        # truncates); a misaligned union of failed rows would silently drop
+        # rows instead of failing loudly — scenario events are validated
+        # upstream, but ReconstructionOps is also a public entry point
+        if f_rows.size % part.bm != 0:
+            raise ValueError(
+                f"failed-row union ({f_rows.size} rows) is not a multiple of "
+                f"the block size bm={part.bm}")
 
         rows, cols, vals = problem.coo
         in_f_rows = mask[rows]

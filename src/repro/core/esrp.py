@@ -119,10 +119,11 @@ def esrp_prelude(st: ESRPState, T: int, gated: bool = True) -> ESRPState:
     return st
 
 
-def esrp_step(st: ESRPState, ops: SolverOps, T: int,
-              b: jax.Array | None = None, rr_every: int = 0,
-              gated: bool = True) -> ESRPState:
-    """One full ESRP iteration: bookkeeping + the PCG update (Alg. 3 body).
+def numeric_step(pcg: PCGState, ops: SolverOps,
+                 b: jax.Array | None = None, rr_every: int = 0,
+                 gated: bool = True) -> PCGState:
+    """The PCG update plus the residual-replacement gate — everything of an
+    ESRP iteration *except* the storage prelude.
 
     rr_every > 0 enables *residual replacement* [van der Vorst & Ye '00 —
     the drift mechanism the paper's Eq. 2 measures]: every rr_every
@@ -133,9 +134,15 @@ def esrp_step(st: ESRPState, ops: SolverOps, T: int,
     not implement replacement). With gated=True the replacement SpMV +
     precond run under ``lax.cond`` — no extra SpMV executes on the other
     rr_every - 1 iterations of each period.
+
+    This is also the driver's post-recovery resume step: re-running the
+    reconstruction-point iteration must skip its storage prelude (the push
+    already happened pre-failure) but NOT the replacement gate — a bare
+    ``pcg_iterate_ops`` would silently drop a replacement landing on the
+    resume iteration and fork the post-recovery trajectory off the
+    failure-free one.
     """
-    st = esrp_prelude(st, T, gated)
-    pcg = pcg_iterate_ops(st.pcg, ops)
+    pcg = pcg_iterate_ops(pcg, ops)
     if rr_every > 0 and b is not None:
         do = (pcg.j % rr_every == 0) & (pcg.j > 0)
 
@@ -149,7 +156,16 @@ def esrp_step(st: ESRPState, ops: SolverOps, T: int,
         else:
             pcg = jax.tree.map(lambda a_, b_: jnp.where(do, a_, b_),
                                replace(pcg), pcg)
-    return st._replace(pcg=pcg)
+    return pcg
+
+
+def esrp_step(st: ESRPState, ops: SolverOps, T: int,
+              b: jax.Array | None = None, rr_every: int = 0,
+              gated: bool = True) -> ESRPState:
+    """One full ESRP iteration: bookkeeping + the PCG update (Alg. 3 body).
+    See ``numeric_step`` for the residual-replacement semantics."""
+    st = esrp_prelude(st, T, gated)
+    return st._replace(pcg=numeric_step(st.pcg, ops, b, rr_every, gated))
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6))

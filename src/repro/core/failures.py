@@ -1,4 +1,4 @@
-"""Node-failure simulation (paper §4).
+"""Node-failure simulation (paper §4) and failure scenarios.
 
 A node failure zeroes *all dynamic data* owned by the failed nodes (their
 entries of x, r, z, p, the starred locals, and their replicated scalars) —
@@ -6,13 +6,88 @@ exactly the paper's simulation protocol: "the nodes set to fail zero-out all
 their vector entries, as well as the scalars they contain". Static data
 (matrix, preconditioner, b) is reloadable from safe storage and is never
 touched. The failed nodes also act as their own replacements (paper §4).
+
+A *scenario* generalizes the paper's single injected event to a list of
+``FailureEvent(iter, nodes)`` entries — simultaneous multi-node failures
+(several nodes in one event, the case Pachajoa et al. arXiv:1907.13077
+study systematically) and staggered multi-event runs (failure → recover →
+fail again, including a second event striking before the next completed
+storage stage). Events fire once each, when the driver's iteration counter
+first reaches ``iter`` after all earlier events fired; rollback rewinds the
+counter but never re-arms a consumed event.
 """
 from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.sparse.partition import Partition
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """One failure event: ``nodes`` fail simultaneously at iteration ``iter``
+    (struck right after the (A)SpMV of that iteration, the paper's injection
+    point)."""
+
+    iter: int
+    nodes: tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "nodes",
+                           tuple(sorted(int(n) for n in self.nodes)))
+        object.__setattr__(self, "iter", int(self.iter))
+
+
+def normalize_scenario(
+        scenario: Optional[Sequence["FailureEvent"]],
+        fail_at: Optional[int],
+        failed_nodes: Optional[Sequence[int]],
+        n_nodes: int) -> list["FailureEvent"]:
+    """Merge the legacy single-event API into the scenario form and validate.
+
+    ``fail_at``/``failed_nodes`` remain the one-event shorthand; passing both
+    a scenario and ``fail_at`` is ambiguous and rejected. Validation enforces
+    the semantics the driver's scenario loop relies on: strictly increasing
+    event iterations (each rollback target is below its own event, so later
+    events always stay ahead of the rewound counter and fire exactly once),
+    at least one surviving node per event, and in-range node ids.
+    """
+    if scenario is not None and (fail_at is not None
+                                 or failed_nodes is not None):
+        raise ValueError(
+            "pass either scenario=... or fail_at=.../failed_nodes=..., "
+            "not both")
+    if scenario is None:
+        if fail_at is None:
+            return []
+        scenario = [FailureEvent(fail_at, tuple(failed_nodes or [0]))]
+    events = [ev if isinstance(ev, FailureEvent) else FailureEvent(*ev)
+              for ev in scenario]
+    prev = 0
+    for ev in events:
+        if ev.iter <= prev:
+            raise ValueError(
+                f"event iterations must be strictly increasing and > 0, "
+                f"got {[e.iter for e in events]}")
+        prev = ev.iter
+        if not ev.nodes:
+            raise ValueError(f"event at iter {ev.iter} has no failed nodes")
+        if len(set(ev.nodes)) != len(ev.nodes):
+            raise ValueError(
+                f"event at iter {ev.iter} repeats nodes: {ev.nodes}")
+        if any(n < 0 or n >= n_nodes for n in ev.nodes):
+            raise ValueError(
+                f"event at iter {ev.iter} names nodes outside "
+                f"[0, {n_nodes}): {ev.nodes}")
+        if len(ev.nodes) >= n_nodes:
+            raise ValueError(
+                f"event at iter {ev.iter} fails all {n_nodes} nodes — "
+                f"no survivors to reconstruct from")
+    return events
 
 
 def failed_row_mask(part: Partition, failed: list[int]) -> np.ndarray:

@@ -96,6 +96,28 @@ def run_chunk(st: IMCRState, ops: SolverOps, T: int, phi: int,
         st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh)
 
 
+def check_survivable(failed: list[int], phi: int, n_nodes: int) -> None:
+    """Per-event recoverability check (buddy-copy survival analysis).
+
+    Each node ships its checkpoint to its φ ring buddies (Eq. 1 neighbour
+    function), so a failed node is recoverable iff at least one of its φ
+    buddies survives. For |failed| ≤ φ that is automatic: killing node s
+    *and* all φ of its buddies takes φ+1 failures. |failed| > φ may still
+    be survivable for a lucky (spread-out) failed set — mirrored on the
+    ESRP side by ``RedundancyPlan.survives`` — so the check walks the
+    actual buddy sets instead of hard-failing on the count.
+    """
+    from repro.sparse.partition import neighbors
+
+    failed_set = set(failed)
+    for s in failed:
+        if not set(neighbors(s, phi, n_nodes)) - failed_set:
+            raise RuntimeError(
+                f"node {s} and all phi={phi} of its checkpoint buddies "
+                f"failed together ({sorted(failed_set)}) — no surviving "
+                f"copy to fetch from")
+
+
 def recover(st: IMCRState) -> PCGState:
     """Roll everyone back to the checkpoint (replacements fetch from buddies,
     survivors restore their own copy — in the simulator both are the stored

@@ -114,15 +114,23 @@ def run_pcg(matvec: Callable, precond: Callable, b: jax.Array,
 
     ||r|| is carried in the loop state: computed once per iteration (in the
     body, after the step) instead of once in ``cond`` and again in ``body``.
+
+    b = 0 returns x = 0 with relative residual 0.0 exactly: without the
+    guard, thresh = rtol·||b|| = 0 never beats ||r|| = 0 (the ≥ keeps
+    looping), α = rz/pᵀq = 0/0 poisons the state with NaN, and rel =
+    0/0 = NaN — which the Alg. 2 line-6/8 inner solves would then scatter
+    into a reconstructed state (a zero RHS there is a legal input: e.g. a
+    failed block whose residual strip is exactly zero).
     """
     ops = make_closure_ops(matvec, precond)
     state = pcg_init(matvec, precond, b, x0)
     bnorm = jnp.linalg.norm(b)
     thresh = rtol * bnorm
+    nonzero = bnorm > 0
 
     def cond(carry):
         s, rnorm = carry
-        return (rnorm >= thresh) & (s.j < max_iters)
+        return (rnorm >= thresh) & (s.j < max_iters) & nonzero
 
     def body(carry):
         s, _ = carry
@@ -131,7 +139,12 @@ def run_pcg(matvec: Callable, precond: Callable, b: jax.Array,
 
     state, rnorm = jax.lax.while_loop(
         cond, body, (state, jnp.linalg.norm(state.r)))
-    return state, rnorm / bnorm
+    # b = 0 ⇒ the exact solution is x = 0 whatever x0 was; rebuild the
+    # consistent state rather than handing back the untouched initial guess
+    state = jax.tree.map(
+        lambda a: jnp.where(nonzero, a, jnp.zeros_like(a)), state)
+    return state, jnp.where(nonzero, rnorm / jnp.where(nonzero, bnorm, 1.0),
+                            jnp.zeros_like(rnorm))
 
 
 def residual_drift(matvec: Callable, b: jax.Array, x_end: jax.Array,

@@ -1,0 +1,248 @@
+"""Failure-scenario engine: multi-event / multi-node failures + the three
+confirmed crash-path regressions.
+
+Scenario semantics under test (driver.solve_resilient(scenario=...)):
+  * simultaneous multi-node events reconstruct exactly — the trajectory
+    rejoins the failure-free run (same converged iteration);
+  * staggered multi-event runs (failure → recover → fail again) for both
+    ESRP and IMCR, with per-event accounting in SolveReport.events;
+  * a second event before the next completed storage stage rolls back to
+    the SAME reconstruction point again (or restarts when none exists);
+  * validation rejects malformed scenarios.
+
+Regression coverage (confirmed crash paths):
+  * strategy="none" with an injected failure used to crash with
+    AttributeError (plan is None) — must cleanly restart (target_iter=-1);
+  * run_pcg with b = 0 used to return rel = NaN (0/0) — must return x = 0,
+    rel = 0.0 (protects the Alg. 2 line-6/8 inner solves);
+  * the post-recovery resume used to run a bare pcg_iterate_ops, skipping a
+    residual replacement landing on the resume iteration.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import esrp
+from repro.core.driver import solve_resilient
+from repro.core.failures import FailureEvent, normalize_scenario
+from repro.core.pcg import run_pcg
+from repro.sparse.matrices import build_problem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return build_problem("poisson2d", n_nodes=8, nx=40, ny=40)
+
+
+@pytest.fixture(scope="module")
+def reference(problem):
+    return solve_resilient(problem, strategy="none", rtol=1e-10)
+
+
+# --------------------------------------------------------------------------- #
+# scenario engine
+# --------------------------------------------------------------------------- #
+def test_simultaneous_two_node_phi2_exact(problem, reference):
+    """φ=2 simultaneous 2-node failure reconstructs exactly: the trajectory
+    rejoins the failure-free run (same total iteration count)."""
+    J = reference.converged_iter // 2
+    r = solve_resilient(problem, strategy="esrp", T=20, phi=2, rtol=1e-10,
+                        scenario=[FailureEvent(J, (2, 5))])
+    assert r.rel_residual < 1e-10
+    assert r.converged_iter == reference.converged_iter
+    assert len(r.events) == 1
+    assert r.events[0].nodes == (2, 5)
+    assert r.inner_rel < 1e-13
+
+
+def test_staggered_two_event_esrp(problem, reference):
+    r = solve_resilient(
+        problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+        scenario=[FailureEvent(45, (2,)), FailureEvent(70, (5,))])
+    assert r.rel_residual < 1e-10
+    assert r.converged_iter == reference.converged_iter
+    assert [e.iter for e in r.events] == [45, 70]
+    # each event rolled back to its own stage's reconstruction point
+    assert r.events[0].target_iter == 41
+    assert r.events[1].target_iter == 61
+    # aggregate accounting is the per-event sum; scalars mirror the last event
+    assert r.wasted_iters == sum(e.wasted_iters for e in r.events)
+    assert r.recovery_s == pytest.approx(
+        sum(e.recovery_s for e in r.events))
+    assert r.target_iter == r.events[-1].target_iter
+
+
+def test_staggered_two_event_imcr(problem, reference):
+    r = solve_resilient(
+        problem, strategy="imcr", T=20, phi=2, rtol=1e-10,
+        scenario=[FailureEvent(45, (5, 6)), FailureEvent(70, (1,))])
+    assert r.rel_residual < 1e-10
+    assert r.converged_iter == reference.converged_iter
+    assert [e.target_iter for e in r.events] == [40, 60]
+    assert r.wasted_iters == sum(e.wasted_iters for e in r.events)
+
+
+def test_second_failure_before_next_stage_rolls_back_further(problem,
+                                                             reference):
+    """Event 2 strikes the re-run before the next storage stage (60, 61)
+    completes: the queue still holds only the (40, 41) pair, so recovery
+    rolls back to 41 AGAIN — the staggered worst case."""
+    r = solve_resilient(
+        problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+        scenario=[FailureEvent(58, (2,)), FailureEvent(59, (5,))])
+    assert r.rel_residual < 1e-10
+    assert r.converged_iter == reference.converged_iter
+    assert [e.target_iter for e in r.events] == [41, 41]
+    assert [e.wasted_iters for e in r.events] == [17, 18]
+
+
+def test_second_failure_before_first_stage_restarts(problem, reference):
+    """Both events land before any storage stage has completed: restart from
+    scratch twice and still converge."""
+    r = solve_resilient(
+        problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+        scenario=[FailureEvent(5, (1,)), FailureEvent(10, (3,))])
+    assert r.rel_residual < 1e-10
+    assert [e.target_iter for e in r.events] == [-1, -1]
+    assert [e.wasted_iters for e in r.events] == [5, 10]
+    assert r.converged_iter == reference.converged_iter
+
+
+def test_imcr_second_event_before_next_checkpoint(problem, reference):
+    """IMCR keeps the checkpoint anchor valid through recovery: a second
+    event before the next scheduled checkpoint rolls back to the same tag."""
+    r = solve_resilient(
+        problem, strategy="imcr", T=20, phi=1, rtol=1e-10,
+        scenario=[FailureEvent(45, (2,)), FailureEvent(50, (5,))])
+    assert r.rel_residual < 1e-10
+    assert [e.target_iter for e in r.events] == [40, 40]
+    assert r.converged_iter == reference.converged_iter
+
+
+def test_non_jacobi_multi_node_simultaneous():
+    """Multi-node ReconstructionOps over the union of failed rows, with a
+    preconditioner that has genuine off-diagonal coupling (real P_{f,I\\f}
+    strip + local P_ff solve over a non-contiguous union)."""
+    p = build_problem("poisson2d", n_nodes=8, nx=32, precond="ssor")
+    ref = solve_resilient(p, strategy="none", rtol=1e-9)
+    T = 10        # SSOR converges fast — keep the stage inside the run
+    J = (ref.converged_iter // 2 // T) * T + T - 2
+    r = solve_resilient(p, strategy="esrp", T=T, phi=2, rtol=1e-9,
+                        scenario=[FailureEvent(J, (2, 5))])
+    assert r.target_iter > 0          # real rollback, not a restart
+    assert r.rel_residual < 1e-9
+    assert r.converged_iter == ref.converged_iter
+    assert r.inner_rel < 1e-13
+
+
+def test_unsurvivable_event_raises(problem):
+    """phi=1 cannot cover two adjacent failed nodes (all copies lost)."""
+    with pytest.raises(RuntimeError):
+        solve_resilient(problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+                        scenario=[FailureEvent(45, (0, 1))])
+
+
+def test_imcr_survival_is_topology_aware(problem, reference):
+    """IMCR's per-event check walks the buddy topology: spread-out failures
+    beyond the φ count survive (every failed node keeps a live buddy),
+    adjacent ones that orphan a node do not."""
+    r = solve_resilient(problem, strategy="imcr", T=20, phi=1, rtol=1e-10,
+                        scenario=[FailureEvent(45, (2, 6))])
+    assert r.rel_residual < 1e-10
+    assert r.converged_iter == reference.converged_iter
+    with pytest.raises(RuntimeError):
+        # node 5's only (phi=1) buddy is node 6 — both failed
+        solve_resilient(problem, strategy="imcr", T=20, phi=1, rtol=1e-10,
+                        scenario=[FailureEvent(45, (5, 6))])
+
+
+def test_scenario_validation():
+    n = 8
+    ok = normalize_scenario([FailureEvent(10, (1,)), (20, (2, 3))], None,
+                            None, n)
+    assert [e.iter for e in ok] == [10, 20]
+    assert ok[1].nodes == (2, 3)
+    # legacy shorthand still builds a one-event scenario
+    assert normalize_scenario(None, 30, [4], n) == [FailureEvent(30, (4,))]
+    assert normalize_scenario(None, None, None, n) == []
+    with pytest.raises(ValueError):   # both APIs at once
+        normalize_scenario([FailureEvent(10, (1,))], 10, [1], n)
+    with pytest.raises(ValueError):   # scenario + stray failed_nodes:
+        # silently dropping [3] would run a different experiment
+        normalize_scenario([FailureEvent(10, (1,))], None, [3], n)
+    with pytest.raises(ValueError):   # non-increasing iterations
+        normalize_scenario([FailureEvent(20, (1,)), FailureEvent(10, (2,))],
+                           None, None, n)
+    with pytest.raises(ValueError):   # duplicate event iteration
+        normalize_scenario([FailureEvent(10, (1,)), FailureEvent(10, (2,))],
+                           None, None, n)
+    with pytest.raises(ValueError):   # node out of range
+        normalize_scenario([FailureEvent(10, (8,))], None, None, n)
+    with pytest.raises(ValueError):   # repeated node within an event
+        normalize_scenario([FailureEvent(10, (1, 1))], None, None, n)
+    with pytest.raises(ValueError):   # no survivors
+        normalize_scenario([FailureEvent(10, tuple(range(n)))], None, None, n)
+    with pytest.raises(ValueError):   # empty event
+        normalize_scenario([FailureEvent(10, ())], None, None, n)
+
+
+# --------------------------------------------------------------------------- #
+# regression: the three confirmed crash paths
+# --------------------------------------------------------------------------- #
+def test_none_strategy_failure_restarts(problem, reference):
+    """strategy="none" + fail_at used to crash (AttributeError on the None
+    RedundancyPlan); a failure without redundancy must restart cleanly."""
+    r = solve_resilient(problem, strategy="none", rtol=1e-10,
+                        fail_at=30, failed_nodes=[1])
+    assert r.target_iter == -1
+    assert r.wasted_iters == 30
+    assert r.rel_residual < 1e-10
+    assert r.converged_iter == reference.converged_iter
+
+
+def test_run_pcg_zero_rhs_returns_zero(problem):
+    """b = 0 used to loop to max_iters on NaN and return rel = 0/0 = NaN."""
+    mv = problem.a.matvec
+    b0 = jnp.zeros_like(problem.b)
+    st, rel = run_pcg(mv, problem.apply_precond, b0)
+    assert float(rel) == 0.0
+    assert not np.isnan(np.asarray(st.x)).any()
+    np.testing.assert_array_equal(np.asarray(st.x), 0.0)
+    # a nonzero initial guess must not leak through: the solution of b=0 is 0
+    st, rel = run_pcg(mv, problem.apply_precond, b0,
+                      x0=jnp.ones_like(problem.b))
+    assert float(rel) == 0.0
+    np.testing.assert_array_equal(np.asarray(st.x), 0.0)
+
+
+def test_resume_step_applies_residual_replacement(problem):
+    """The post-recovery resume runs the same rr gate as the chunk runner:
+    when the resume iteration is a replacement iteration, r comes back as
+    the TRUE residual b - A x, even from a perturbed recursive residual
+    (which the old bare pcg_iterate_ops resume would have propagated)."""
+    ops = problem.solver_ops("jnp")
+    b = problem.b
+    st = esrp.esrp_init(ops.matvec, ops.precond, b)
+    st, _ = esrp.run_chunk(st, ops, 20, 41, None)       # land on j = 41
+    pert = st.pcg._replace(r=st.pcg.r * (1.0 + 1e-6))   # recursive != true
+    out = esrp.numeric_step(pert, ops, b, rr_every=7, gated=True)  # j -> 42
+    assert int(out.j) == 42 and 42 % 7 == 0
+    true_r = np.asarray(b - ops.matvec(out.x))
+    np.testing.assert_allclose(np.asarray(out.r), true_r, rtol=0, atol=1e-12)
+    # off-schedule resume keeps the recursive residual (no spurious SpMV)
+    out2 = esrp.numeric_step(pert, ops, b, rr_every=9, gated=True)
+    assert float(jnp.linalg.norm(out2.r - (b - ops.matvec(out2.x)))) > 0
+
+
+def test_rr_recovery_rejoins_failure_free_trajectory(problem):
+    """Integration: failure at 58 rolls back to 41; the resume re-runs
+    iteration 41 whose successor j=42 is a replacement iteration
+    (rr_every=7). With the gate routed through the resume, the run rejoins
+    the failure-free rr trajectory."""
+    ref = solve_resilient(problem, strategy="none", rtol=1e-10, rr_every=7)
+    r = solve_resilient(problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+                        rr_every=7, fail_at=58, failed_nodes=[2])
+    assert r.target_iter == 41
+    assert r.rel_residual < 1e-10
+    assert r.converged_iter == ref.converged_iter
