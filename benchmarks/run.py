@@ -244,9 +244,15 @@ def bench_roofline():
 def bench_precond(full):
     """Preconditioner x T x failure-location sweep — the experiment the
     paper's conclusion proposes ("more appropriate preconditioners") but
-    never runs: iterations-to-converge, per-iteration cost, and recovery
-    overhead for block-Jacobi vs SSOR vs Chebyshev vs IC(0), including the
-    anisotropic poisson3d regime where block-Jacobi struggles."""
+    never runs: iterations-to-converge, per-iteration cost, wall-clock, and
+    recovery overhead for block-Jacobi vs SSOR vs Chebyshev vs IC(0),
+    including the anisotropic poisson3d regime where block-Jacobi struggles
+    and the denser banded family (audikw_1 regime). Emits a wall-clock
+    winner per problem (meaningful now that the sweeps route through the
+    wavefront kernels when the elimination DAG allows) and a
+    machine-readable BENCH_precond.json next to the CSV."""
+    import json
+
     import jax
     jax.config.update("jax_enable_x64", True)
     from repro.core.driver import solve_resilient
@@ -254,24 +260,45 @@ def bench_precond(full):
 
     problems = [("poisson2d", "poisson2d", dict(nx=64 if full else 48)),
                 ("poisson3d_aniso", "poisson3d",
-                 dict(nx=16 if full else 12, eps=0.25))]
+                 dict(nx=16 if full else 12, eps=0.25)),
+                ("banded", "banded",
+                 dict(n=2400 if full else 1600, bandwidth=16, density=0.4))]
     preconds = ("jacobi", "ssor", "chebyshev", "ic0")
     Ts = (10, 20, 50) if full else (10, 20)
-    lines = ["problem,precond,T,scenario,iters,us_per_iter,recovery_ms,"
-             "wasted,rel_residual"]
+    lines = ["problem,precond,T,scenario,iters,us_per_iter,runtime_ms,sweep,"
+             "recovery_ms,wasted,rel_residual"]
     iters_aniso = {}
+    wall: dict[str, dict[str, float]] = {}
+    rows_json = []
     for pname, kind, kw in problems:
+        wall[pname] = {}
         for name in preconds:
             p = build_problem(kind, n_nodes=8, precond=name, **kw)
+            # the timed run resolves backend "auto" to jnp on this CPU host,
+            # which executes the sequential sweep; "(wavefront-ready)" marks
+            # structures whose kernel backends would take the level grid
+            sweep_kind = "-"
+            if name in ("ssor", "ic0"):
+                sweep_kind = ("sequential(wavefront-ready)"
+                              if p.precond.lo_wf is not None
+                              else "sequential")
             solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)  # warmup
             ref = solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)
             C = ref.converged_iter
             us = 1e6 * ref.runtime_s / max(C, 1)
+            wall[pname][name] = ref.runtime_s
             if pname == "poisson3d_aniso":
                 iters_aniso[name] = C
-            lines.append(f"{pname},{name},-,failure-free,{C},{us:.1f},-,-,"
+            lines.append(f"{pname},{name},-,failure-free,{C},{us:.1f},"
+                         f"{1e3 * ref.runtime_s:.1f},{sweep_kind},-,-,"
                          f"{ref.rel_residual:.2e}")
-            print(f"precond_{pname}_{name},{us:.1f},iters={C}")
+            rows_json.append(dict(problem=pname, precond=name, iters=C,
+                                  us_per_iter=us,
+                                  runtime_ms=1e3 * ref.runtime_s,
+                                  sweep=sweep_kind,
+                                  rel_residual=ref.rel_residual))
+            print(f"precond_{pname}_{name},{us:.1f},iters={C};"
+                  f"sweep={sweep_kind}")
             # warm the recovery path once (jitted reconstruction closures,
             # scatter kernels) so recovery_ms rows measure reconstruction,
             # not one-off compiles
@@ -294,16 +321,108 @@ def bench_precond(full):
                     # tails, which would misread as per-iteration cost
                     lines.append(
                         f"{pname},{name},{T},{scen}@{fail_at},"
-                        f"{r.converged_iter},-,"
+                        f"{r.converged_iter},-,-,-,"
                         f"{1e3 * r.recovery_s:.2f},{r.wasted_iters},"
                         f"{r.rel_residual:.2e}")
     best = min((n for n in preconds if n != "jacobi"),
                key=lambda n: iters_aniso[n])
     print(f"precond_best_aniso,0,winner={best};iters={iters_aniso[best]};"
           f"jacobi_iters={iters_aniso['jacobi']}")
+    winners = {}
+    for pname in wall:
+        w = min(wall[pname], key=wall[pname].get)
+        winners[pname] = dict(winner=w, runtime_ms=1e3 * wall[pname][w])
+        print(f"precond_wallclock_{pname},{1e6 * wall[pname][w]:.0f},"
+              f"winner={w}")
     _ensure_dir()
     with open("artifacts/bench/precond.csv", "w") as f:
         f.write("\n".join(lines) + "\n")
+    with open("artifacts/bench/BENCH_precond.json", "w") as f:
+        json.dump(dict(problems={n: kw for n, _, kw in problems},
+                       rows=rows_json, wallclock_winners=winners,
+                       aniso_iter_winner=dict(
+                           winner=best, iters=iters_aniso[best],
+                           jacobi_iters=iters_aniso["jacobi"])),
+                  f, indent=1, default=float)
+    print("# wrote artifacts/bench/precond.csv + BENCH_precond.json")
+
+
+def bench_recovery(full):
+    """Alg. 2 reconstruction microbench per preconditioner: recovery
+    wall-clock and line-6 inner-CG iteration count with the unpreconditioned
+    (historical) vs preconditioned P_ff solve — the recovery cost Pachajoa
+    et al. (arXiv:1907.13077) find dominated by the preconditioner-shaped
+    inner solves. Warm runs (reconstruction closures jitted by a throwaway
+    first run, same policy as the precond sweep); every row must rejoin the
+    failure-free trajectory exactly. Writes artifacts/bench/recovery.csv +
+    BENCH_recovery.json.
+    """
+    import json
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.driver import solve_resilient
+    from repro.sparse.matrices import build_problem
+
+    # ic0 runs on the anisotropic poisson3d grid: on poisson2d its block
+    # pattern is tridiagonal, the factorization is exact (P = A⁻¹ to fp),
+    # and the whole convergence tail is rounding-driven — no stable rejoin
+    # point exists for a recovery experiment there
+    configs = [("poisson2d", dict(nx=64 if full else 48),
+                ("jacobi", "ssor", "chebyshev")),
+               ("poisson3d", dict(nx=16 if full else 12, eps=0.25),
+                ("ic0",))]
+    lines = ["problem,precond,pff_precond,T,fail_at,iters,recovery_ms,"
+             "pff_iters,inner_rel,exact_rejoin"]
+    rows = []
+    runs = [(kind, kw, name) for kind, kw, preconds in configs
+            for name in preconds]
+    for kind, kw, name in runs:
+        p = build_problem(kind, n_nodes=8, precond=name, **kw)
+        ref = solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)
+        C = ref.converged_iter
+        # one completed storage stage before the failure, failure well
+        # before convergence — adapt T to each preconditioner's C
+        T = max(2, min(10, C // 3))
+        fail_at = 2 * T
+        for pp in (False, True):
+            common = dict(strategy="esrp", T=T, phi=1, rtol=1e-8, chunk=32,
+                          fail_at=fail_at, failed_nodes=[1], pff_precond=pp)
+            solve_resilient(p, **common)             # warm the jit caches
+            r = solve_resilient(p, **common)
+            ev = r.events[0]
+            row = dict(problem=kind, precond=name, pff_precond=pp, T=T,
+                       fail_at=fail_at, iters=r.converged_iter,
+                       recovery_ms=1e3 * r.recovery_s,
+                       pff_iters=ev.pff_iters, inner_rel=r.inner_rel,
+                       exact_rejoin=r.converged_iter == C)
+            rows.append(row)
+            lines.append(f"{kind},{name},{int(pp)},{T},{fail_at},"
+                         f"{r.converged_iter},{row['recovery_ms']:.2f},"
+                         f"{ev.pff_iters},{r.inner_rel:.2e},"
+                         f"{int(row['exact_rejoin'])}")
+            tag = "pff" if pp else "nopff"
+            print(f"recovery_{name}_{tag},{1e3 * row['recovery_ms']:.0f},"
+                  f"pff_iters={ev.pff_iters};"
+                  f"exact={int(row['exact_rejoin'])}")
+    for _, _, name in runs:
+        sel = {r_["pff_precond"]: r_ for r_ in rows if r_["precond"] == name}
+        if sel[False]["pff_iters"] > 0:
+            speed = sel[False]["recovery_ms"] / max(sel[True]["recovery_ms"],
+                                                    1e-9)
+            it_cut = sel[False]["pff_iters"] / max(sel[True]["pff_iters"], 1)
+            print(f"recovery_speedup_{name},0,"
+                  f"wallclock={speed:.2f}x;pff_iter_cut={it_cut:.2f}x")
+    assert all(r_["exact_rejoin"] for r_ in rows), "recovery lost exactness"
+    _ensure_dir()
+    with open("artifacts/bench/recovery.csv", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with open("artifacts/bench/BENCH_recovery.json", "w") as f:
+        json.dump(dict(configs=[dict(kind=k, preconds=list(ps), **kw_)
+                                for k, kw_, ps in configs],
+                       n_nodes=8, rows=rows), f, indent=1, default=float)
+    print(f"# wrote artifacts/bench/recovery.csv + BENCH_recovery.json "
+          f"({len(rows)} rows)")
 
 
 def bench_failures(full):
@@ -430,6 +549,7 @@ ALL = {
     "kernels": lambda full: bench_kernels(),
     "iteration": bench_iteration,
     "precond": bench_precond,
+    "recovery": bench_recovery,
     "failures": bench_failures,
     "ft": lambda full: bench_ft(),
     "roofline": lambda full: bench_roofline(),

@@ -62,6 +62,104 @@ def sharded_matvec(a: BlockEll, mesh: Mesh):
     return mv
 
 
+def _sharded_sweep_precond(problem: Problem, mesh: Mesh):
+    """Node-local SSOR/IC(0) apply for the sharded runtime.
+
+    The sweeps run under ``shard_map`` with every static strip placed
+    block-row-wise: each device substitutes through *its own* diagonal slab
+    only — the additive-Schwarz variant, embarrassingly parallel over the
+    "nodes" axis (a global sequential sweep would serialize the whole
+    distributed iteration). If the problem's preconditioner still carries
+    cross-slab coupling, its node-local twin is built from the COO in safe
+    storage and **adopted as ``problem.precond``** so that Alg. 2 recovery
+    reconstructs against the same operator the hot loop applies.
+    Per-row arithmetic matches the single-device node-local reference
+    (``build_problem(..., precond_opts={"node_local": True})``) exactly.
+    """
+    from functools import partial
+
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels.block_jacobi.ref import block_jacobi_apply_ref
+    from repro.kernels.trisweep.ref import block_sweep_ref
+    from repro.precond import local as plocal
+
+    n = mesh.shape["nodes"]
+    if n != problem.part.n_nodes:
+        # the slab restriction, the twin, and the shard_map index shift all
+        # assume one partition slab per mesh device; a mismatched mesh would
+        # silently clamp cross-shard loads to wrong blocks
+        raise ValueError(
+            f"node-local sweeps need one partition slab per mesh device: "
+            f"mesh has {n} nodes, partition has {problem.part.n_nodes}")
+    pc = problem.precond
+    if plocal.precond_is_node_local(pc, n):
+        variant = f"node-local {pc.name}"
+    else:
+        pc = plocal.node_local_twin(problem)
+        problem.precond = pc
+        # closures cached against the replaced global-sweep operator must
+        # not survive the adoption (reconstruction would otherwise rebuild
+        # against a different P than the hot loop applies)
+        for attr in ("_recon_cache", "_ops_cache", "_closure_ops_cache"):
+            if hasattr(problem, attr):
+                delattr(problem, attr)
+        variant = f"node-local {pc.name} (auto twin)"
+        assert plocal.precond_is_node_local(pc, n)
+    per = (pc.m // pc.block) // n
+    put = lambda a: jax.device_put(a, NamedSharding(mesh, P("nodes")))
+
+    if pc.name == "ssor":
+        statics = tuple(map(put, (pc.lo_idx, pc.lo_n, pc.lo_data, pc.up_idx,
+                                  pc.up_n, pc.up_data, pc.dinv,
+                                  pc.mid_blocks)))
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("nodes"),) * 9,
+                 out_specs=P("nodes"), check_rep=False)
+        def apply_local(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv,
+                        mid, r):
+            base = jax.lax.axis_index("nodes") * per     # global -> slab ids
+            y = block_sweep_ref(lo_idx - base, lo_n, lo_data, dinv, r,
+                                reverse=False)
+            w = block_jacobi_apply_ref(mid, y)
+            return block_sweep_ref(up_idx - base, up_n, up_data, dinv, w,
+                                   reverse=True)
+    else:                                                # ic0
+        statics = tuple(map(put, (pc.lo_idx, pc.lo_n, pc.lo_data, pc.up_idx,
+                                  pc.up_n, pc.up_data, pc.dinv_f,
+                                  pc.dinv_b)))
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("nodes"),) * 9,
+                 out_specs=P("nodes"), check_rep=False)
+        def apply_local(lo_idx, lo_n, lo_data, up_idx, up_n, up_data,
+                        dinv_f, dinv_b, r):
+            base = jax.lax.axis_index("nodes") * per
+            y = block_sweep_ref(lo_idx - base, lo_n, lo_data, dinv_f, r,
+                                reverse=False)
+            return block_sweep_ref(up_idx - base, up_n, up_data, dinv_b, y,
+                                   reverse=True)
+
+    return (lambda r: apply_local(*statics, r)), variant
+
+
+def _sharded_chebyshev_precond(problem: Problem, mesh: Mesh):
+    """Chebyshev apply for the sharded runtime: the polynomial recurrence
+    over the all-gather sharded SpMV — no node-local approximation needed
+    (the operator is d distributed matvecs, identical algebra to the
+    single-device apply)."""
+    from repro.kernels.chebyshev.chebyshev import cheb_recurrence
+
+    pc = problem.precond
+    mv = sharded_matvec(problem.a, mesh)
+    vec = NamedSharding(mesh, P("nodes"))
+
+    def apply_(r):
+        z = cheb_recurrence(mv, r, lo=pc.lo, hi=pc.hi, degree=pc.degree)
+        return jax.lax.with_sharding_constraint(z, vec)
+
+    return apply_, "spmv-distributed chebyshev"
+
+
 def sharded_solver_ops(problem: Problem, mesh: Mesh):
     """SolverOps bundle for the distributed runtime.
 
@@ -72,17 +170,18 @@ def sharded_solver_ops(problem: Problem, mesh: Mesh):
     replicating intermediates), and the pᵀq / rᵀz dots lower to the natural
     psum across the "nodes" axis. Cached per (problem, mesh): the jitted
     chunk runners treat the bundle as a static argument.
+
+    Every registered preconditioner is accepted: block-Jacobi keeps the
+    seed's einsum over re-placed blocks, SSOR/IC(0) run their node-local
+    (additive-Schwarz) sweeps under ``shard_map`` (building and adopting
+    the twin when the instance still has cross-slab coupling — see
+    ``_sharded_sweep_precond``), and Chebyshev distributes through the
+    sharded SpMV. ``SolveReport.precond_variant`` records which variant ran;
+    compare iteration counts against the global-sweep reference with
+    ``attach_local_delta``.
     """
     from repro.core.ops import SolverOps
 
-    if problem.precond is not None and problem.precond.name != "jacobi":
-        # the sequential SSOR/IC(0) sweeps and the Chebyshev apply are not
-        # sharded yet (their static arrays are not re-placed and the sweep
-        # scan would serialize the iteration) — see ROADMAP "node-local
-        # block variants" before wiring them through here
-        raise NotImplementedError(
-            f"sharded runtime supports the block-Jacobi preconditioner "
-            f"only, got {problem.precond.name!r}")
     cache = getattr(problem, "_sharded_ops_cache", None)
     if cache is None:
         cache = {}
@@ -90,7 +189,18 @@ def sharded_solver_ops(problem: Problem, mesh: Mesh):
     if mesh not in cache:
         vec = NamedSharding(mesh, P("nodes"))
         mv = sharded_matvec(problem.a, mesh)
-        precond = problem.apply_precond
+        variant = ""
+        name = problem.precond_name
+        if name == "jacobi":
+            precond = problem.apply_precond
+        elif name == "chebyshev":
+            precond, variant = _sharded_chebyshev_precond(problem, mesh)
+        elif name in ("ssor", "ic0"):
+            precond, variant = _sharded_sweep_precond(problem, mesh)
+        else:
+            raise NotImplementedError(
+                f"sharded runtime has no distributed apply for "
+                f"preconditioner {name!r}")
         constrain = lambda v: jax.lax.with_sharding_constraint(v, vec)
 
         def matvec_dot(p):
@@ -103,8 +213,16 @@ def sharded_solver_ops(problem: Problem, mesh: Mesh):
             z_new = constrain(precond(r_new))
             return x_new, r_new, z_new, r_new @ z_new
 
-        cache[mesh] = SolverOps("sharded", mv, matvec_dot, precond, update)
+        cache[mesh] = SolverOps("sharded", mv, matvec_dot, precond, update,
+                                variant)
     return cache[mesh]
+
+
+def attach_local_delta(report, reference) -> None:
+    """Record on ``report`` the iteration-count delta of the node-local
+    (additive-Schwarz) run vs the global-sweep reference solve — the price
+    of making the sweeps partition over the mesh axis."""
+    report.local_delta_iters = report.converged_iter - reference.converged_iter
 
 
 # --------------------------------------------------------------------------- #

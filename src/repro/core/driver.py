@@ -52,6 +52,8 @@ class EventReport:
     wasted_iters: int            # rollback distance of this event
     recovery_s: float            # reconstruction ops only
     inner_rel: float             # Alg.2 line-8 inner solve (nan: imcr/none)
+    pff_iters: int = -1          # Alg.2 line-6 inner-CG iterations (-1 when
+    #                              the preconditioner has a closed form)
 
 
 @dataclasses.dataclass
@@ -71,6 +73,11 @@ class SolveReport:
     aspmv_total_bytes: int = 0
     run_calls: int = 0           # chunk dispatches (no final-chunk re-run)
     events: list[EventReport] = dataclasses.field(default_factory=list)
+    precond_variant: str = ""    # e.g. "node-local ssor" on the sharded
+    #                              runtime (SolverOps.variant)
+    local_delta_iters: Optional[int] = None   # iteration-count delta of a
+    #                              node-local run vs the global-sweep
+    #                              reference (shard.attach_local_delta)
 
 
 def _find_convergence(norms: np.ndarray, thresh: float) -> int:
@@ -104,6 +111,8 @@ def solve_resilient(
     backend: str = "auto",             # SolverOps backend for the hot loop
     ops: Optional[SolverOps] = None,   # explicit bundle (overrides backend)
     gated: bool = True,                # cond-gated storage/rr bookkeeping
+    pff_precond: bool = True,          # precondition the Alg.2 line-6 inner
+    #                                    CG (False = historical plain CG)
 ) -> SolveReport:
     if ops is None:
         if matvec is not None:
@@ -230,6 +239,7 @@ def solve_resilient(
             ev = pending.pop(0)
             failed = list(ev.nodes)
             ev_inner = float("nan")
+            ev_pff = -1
             if strategy == "imcr":
                 st, ev_wasted, target, rec_t = _imcr_failure(
                     st, part, failed, phi, matvec, precond, b)
@@ -239,15 +249,16 @@ def solve_resilient(
                 st, ev_wasted, target, rec_t = _none_failure(
                     st, matvec, precond, b)
             else:
-                st, ev_wasted, target, ev_inner, rec_t = _esrp_failure(
-                    problem, plan, st, failed, T, matvec, precond)
+                st, ev_wasted, target, ev_inner, rec_t, ev_pff = \
+                    _esrp_failure(problem, plan, st, failed, T, matvec,
+                                  precond, pff_precond)
                 inner_rel = ev_inner
             recovery_s += rec_t
             wasted += ev_wasted
             event_reports.append(EventReport(
                 iter=ev.iter, nodes=ev.nodes, target_iter=target,
                 wasted_iters=ev_wasted, recovery_s=rec_t,
-                inner_rel=ev_inner))
+                inner_rel=ev_inner, pff_iters=ev_pff))
             total_iters = int(st.pcg.j)
             resume_numeric_only = target >= 0
     runtime = time.perf_counter() - t0
@@ -265,7 +276,8 @@ def solve_resilient(
         wasted_iters=wasted, target_iter=target, inner_rel=inner_rel,
         drift=drift, aspmv_natural_bytes=nat_bytes,
         aspmv_total_bytes=tot_bytes, run_calls=run_calls,
-        events=event_reports)
+        events=event_reports,
+        precond_variant=getattr(ops, "variant", ""))
 
 
 # --------------------------------------------------------------------------- #
@@ -278,7 +290,8 @@ def _none_failure(st: esrp.ESRPState, matvec, precond, b):
 
 # --------------------------------------------------------------------------- #
 def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
-                  failed: list[int], T: int, matvec, precond):
+                  failed: list[int], T: int, matvec, precond,
+                  pff_precond: bool = True):
     """Failure strikes during iteration J right after its (A)SpMV: run the
     iteration-J storage prelude, zero the failed nodes' dynamic data, then
     reconstruct (Alg. 2) and rebuild a consistent post-stage ESRP state."""
@@ -303,7 +316,7 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     if target < 0:
         # before the first completed storage stage: restart from scratch
         st2 = esrp.esrp_init(matvec, precond, problem.b)
-        return st2, J, -1, float("nan"), 0.0
+        return st2, J, -1, float("nan"), 0.0, -1
 
     if T == 1:
         # ESR: no rollback — reconstruct the *live* iteration J from the
@@ -327,9 +340,10 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     if cache is None:
         cache = {}
         problem._recon_cache = cache
-    key = tuple(failed)
+    key = (tuple(failed), pff_precond)
     if key not in cache:
-        ops = esr.ReconstructionOps.build(problem, failed)
+        ops = esr.ReconstructionOps.build(problem, failed,
+                                          pff_precond=pff_precond)
         # warm the jitted reconstruction (compile excluded from timing)
         esr.reconstruct(ops, p_prev=st.q[prev_slot], p_curr=st.q[curr_slot],
                         beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv
@@ -357,7 +371,9 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
         q_tags=jnp.asarray([-1, target - 1, target], jnp.int32),
         x_s=x, r_s=r, z_s=z, p_s=p, beta_s=beta_prev, rz_s=rz,
         star_tag=jnp.asarray(target, jnp.int32))
-    return st2, J - target, target, float(inner_rel), rec_t
+    pff_stats = getattr(ops.p_solve, "stats", None) if ops.p_solve else None
+    pff_iters = pff_stats["iters"] if pff_stats else -1
+    return st2, J - target, target, float(inner_rel), rec_t, pff_iters
 
 
 def _imcr_failure(st: imcr.IMCRState, part, failed: list[int], phi: int,

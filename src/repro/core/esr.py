@@ -71,7 +71,8 @@ class ReconstructionOps:
     #                                  (None = seed diag-block matvec)
 
     @staticmethod
-    def build(problem: Problem, failed: list[int]) -> "ReconstructionOps":
+    def build(problem: Problem, failed: list[int],
+              pff_precond: bool = True) -> "ReconstructionOps":
         part = problem.part
         failed = sorted(set(failed))
         mask = failures.failed_row_mask(part, failed)
@@ -115,10 +116,15 @@ class ReconstructionOps:
         # recovery-aware lines 5-6: preconditioners with off-diagonal
         # coupling supply their own local operators; block-Jacobi (or a
         # legacy Problem without a precond object) keeps the seed shortcut
+        # ``pff_precond`` threads to the line-6 inner CG: True runs it
+        # preconditioned with the class's failed-slab-truncated operator
+        # (precond.base._pff_inner_precond), False keeps the historical
+        # unpreconditioned solve (the A/B the recovery microbench times)
         pc = problem.precond
         p_offdiag = p_solve = None
         if pc is not None and pc.name != "jacobi":
-            p_offdiag, p_solve = pc.local_ops(mask, f_rows)
+            p_offdiag, p_solve = pc.local_ops(mask, f_rows,
+                                              pff_precond=pff_precond)
 
         return ReconstructionOps(
             problem=problem, failed=failed, mask=mask, f_rows=f_rows,

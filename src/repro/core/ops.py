@@ -42,6 +42,8 @@ class SolverOps(NamedTuple):
     matvec_dot: Callable        # p -> (q, p @ q)
     precond: Callable           # r -> z = P r
     update: Callable            # (alpha, x, r, p, q) -> (x', r', z', rz')
+    variant: str = ""           # preconditioner execution variant (e.g. the
+    #                             sharded runtime's "node-local ssor")
 
 
 def make_closure_ops(matvec: Callable, precond: Callable) -> SolverOps:

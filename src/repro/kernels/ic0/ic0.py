@@ -17,13 +17,22 @@ import functools
 
 import jax
 
-from repro.kernels.trisweep.trisweep import block_sweep
+from repro.kernels.trisweep.trisweep import block_sweep, wavefront_sweep
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ic0_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv_f, dinv_b,
-              r, *, interpret: bool = False):
-    y = block_sweep(lo_idx, lo_n, lo_data, dinv_f, r, reverse=False,
-                    interpret=interpret)
+              r, *, interpret: bool = False, lo_wf=None, up_wf=None):
+    """``lo_wf``/``up_wf``: optional level-major ``trisweep.ops.Wavefront``
+    bundles — one grid step per elimination-DAG level (bit-identical)."""
+    if lo_wf is not None:
+        y = wavefront_sweep(lo_wf.rows, lo_wf.n, lo_wf.idx, lo_wf.data,
+                            lo_wf.dinv, r, interpret=interpret)
+    else:
+        y = block_sweep(lo_idx, lo_n, lo_data, dinv_f, r, reverse=False,
+                        interpret=interpret)
+    if up_wf is not None:
+        return wavefront_sweep(up_wf.rows, up_wf.n, up_wf.idx, up_wf.data,
+                               up_wf.dinv, y, interpret=interpret)
     return block_sweep(up_idx, up_n, up_data, dinv_b, y, reverse=True,
                        interpret=interpret)

@@ -8,11 +8,13 @@ from repro.kernels.ic0.ref import ic0_apply_ref
 
 
 def ic0_precond_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv_f,
-                      dinv_b, r, *, backend: str = "auto"):
+                      dinv_b, r, *, backend: str = "auto", lo_wf=None,
+                      up_wf=None):
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend == "jnp":
         return ic0_apply_ref(lo_idx, lo_n, lo_data, up_idx, up_n, up_data,
-                             dinv_f, dinv_b, r)
+                             dinv_f, dinv_b, r, lo_wf=lo_wf, up_wf=up_wf)
     return ic0_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv_f,
-                     dinv_b, r, interpret=(backend == "interpret"))
+                     dinv_b, r, interpret=(backend == "interpret"),
+                     lo_wf=lo_wf, up_wf=up_wf)

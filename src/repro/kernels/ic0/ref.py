@@ -6,11 +6,18 @@ import functools
 
 import jax
 
-from repro.kernels.trisweep.ref import block_sweep_ref
+from repro.kernels.trisweep.ref import block_sweep_ref, wavefront_sweep_ref
 
 
 @functools.partial(jax.jit)
 def ic0_apply_ref(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv_f,
-                  dinv_b, r):
-    y = block_sweep_ref(lo_idx, lo_n, lo_data, dinv_f, r, reverse=False)
+                  dinv_b, r, lo_wf=None, up_wf=None):
+    if lo_wf is not None:
+        y = wavefront_sweep_ref(lo_wf.rows, lo_wf.n, lo_wf.idx, lo_wf.data,
+                                lo_wf.dinv, r)
+    else:
+        y = block_sweep_ref(lo_idx, lo_n, lo_data, dinv_f, r, reverse=False)
+    if up_wf is not None:
+        return wavefront_sweep_ref(up_wf.rows, up_wf.n, up_wf.idx,
+                                   up_wf.data, up_wf.dinv, y)
     return block_sweep_ref(up_idx, up_n, up_data, dinv_b, y, reverse=True)

@@ -9,12 +9,13 @@ from repro.kernels.ssor.ssor import ssor_apply
 
 def ssor_precond_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv,
                        mid_blocks, r, *, backend: str = "auto",
-                       rows: int = 256):
+                       rows: int = 256, lo_wf=None, up_wf=None):
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if backend == "jnp":
         return ssor_apply_ref(lo_idx, lo_n, lo_data, up_idx, up_n, up_data,
-                              dinv, mid_blocks, r)
+                              dinv, mid_blocks, r, lo_wf=lo_wf, up_wf=up_wf)
     return ssor_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv,
                       mid_blocks, r, rows=rows,
-                      interpret=(backend == "interpret"))
+                      interpret=(backend == "interpret"),
+                      lo_wf=lo_wf, up_wf=up_wf)

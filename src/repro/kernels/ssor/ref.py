@@ -7,12 +7,19 @@ import functools
 import jax
 
 from repro.kernels.block_jacobi.ref import block_jacobi_apply_ref
-from repro.kernels.trisweep.ref import block_sweep_ref
+from repro.kernels.trisweep.ref import block_sweep_ref, wavefront_sweep_ref
 
 
 @functools.partial(jax.jit)
 def ssor_apply_ref(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv,
-                   mid_blocks, r):
-    y = block_sweep_ref(lo_idx, lo_n, lo_data, dinv, r, reverse=False)
+                   mid_blocks, r, lo_wf=None, up_wf=None):
+    if lo_wf is not None:
+        y = wavefront_sweep_ref(lo_wf.rows, lo_wf.n, lo_wf.idx, lo_wf.data,
+                                lo_wf.dinv, r)
+    else:
+        y = block_sweep_ref(lo_idx, lo_n, lo_data, dinv, r, reverse=False)
     w = block_jacobi_apply_ref(mid_blocks, y)
+    if up_wf is not None:
+        return wavefront_sweep_ref(up_wf.rows, up_wf.n, up_wf.idx,
+                                   up_wf.data, up_wf.dinv, w)
     return block_sweep_ref(up_idx, up_n, up_data, dinv, w, reverse=True)

@@ -21,14 +21,25 @@ import functools
 import jax
 
 from repro.kernels.block_jacobi.block_jacobi import block_jacobi_apply
-from repro.kernels.trisweep.trisweep import block_sweep
+from repro.kernels.trisweep.trisweep import block_sweep, wavefront_sweep
 
 
 @functools.partial(jax.jit, static_argnames=("rows", "interpret"))
 def ssor_apply(lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv,
-               mid_blocks, r, *, rows: int = 256, interpret: bool = False):
-    y = block_sweep(lo_idx, lo_n, lo_data, dinv, r, reverse=False,
-                    interpret=interpret)
+               mid_blocks, r, *, rows: int = 256, interpret: bool = False,
+               lo_wf=None, up_wf=None):
+    """``lo_wf``/``up_wf``: optional level-major ``trisweep.ops.Wavefront``
+    bundles — when present the substitutions run one grid step per
+    elimination-DAG level instead of per block row (bit-identical values)."""
+    if lo_wf is not None:
+        y = wavefront_sweep(lo_wf.rows, lo_wf.n, lo_wf.idx, lo_wf.data,
+                            lo_wf.dinv, r, interpret=interpret)
+    else:
+        y = block_sweep(lo_idx, lo_n, lo_data, dinv, r, reverse=False,
+                        interpret=interpret)
     w = block_jacobi_apply(mid_blocks, y, rows=rows, interpret=interpret)
+    if up_wf is not None:
+        return wavefront_sweep(up_wf.rows, up_wf.n, up_wf.idx, up_wf.data,
+                               up_wf.dinv, w, interpret=interpret)
     return block_sweep(up_idx, up_n, up_data, dinv, w, reverse=True,
                        interpret=interpret)

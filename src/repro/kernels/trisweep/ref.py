@@ -35,3 +35,38 @@ def block_sweep_ref(idx: jax.Array, n: jax.Array, data: jax.Array,
         return jax.lax.dynamic_update_slice(y, yi, (i * b,))
 
     return jax.lax.fori_loop(0, nbr, row, jnp.zeros_like(r))
+
+
+@jax.jit
+def wavefront_sweep_ref(rows: jax.Array, n: jax.Array, idx: jax.Array,
+                        data: jax.Array, dinv: jax.Array,
+                        r: jax.Array) -> jax.Array:
+    """Mirror of the wavefront kernel: outer fori over levels, inner fori
+    over the level's (padded) row slots, the same (m + b) scratch-padded work
+    vector, masked slot loads and ``jnp.dot`` calls — bit-identical to both
+    the Pallas wavefront kernel and (by row-independence within levels) the
+    sequential ``block_sweep_ref`` in f64."""
+    n_levels, width, kmax, b, _ = data.shape
+    m = r.shape[0]
+    r_pad = jnp.concatenate([r, jnp.zeros((b,), r.dtype)])
+
+    def level(t, y):
+        def row(w, y):
+            i = rows[t, w]
+            acc = jax.lax.dynamic_slice(r_pad, (i * b,), (b,))
+
+            def slot(k, acc):
+                j = idx[t, w, k]
+                yj = jax.lax.dynamic_slice(y, (j * b,), (b,))
+                yj = jnp.where(k < n[t, w], yj, jnp.zeros_like(yj))
+                return acc - jnp.dot(data[t, w, k], yj,
+                                     preferred_element_type=acc.dtype)
+
+            acc = jax.lax.fori_loop(0, kmax, slot, acc)
+            yi = jnp.dot(dinv[t, w], acc, preferred_element_type=acc.dtype)
+            return jax.lax.dynamic_update_slice(y, yi, (i * b,))
+
+        return jax.lax.fori_loop(0, width, row, y)
+
+    y = jax.lax.fori_loop(0, n_levels, level, jnp.zeros((m + b,), r.dtype))
+    return y[:m]

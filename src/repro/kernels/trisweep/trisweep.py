@@ -54,6 +54,72 @@ def _sweep_kernel(idx_ref, n_ref, data_ref, dinv_ref, r_ref, y_ref,
                                      preferred_element_type=acc.dtype)
 
 
+def _wavefront_kernel(rows_ref, n_ref, idx_ref, data_ref, dinv_ref, r_ref,
+                      y_ref):
+    t = pl.program_id(0)
+    width = rows_ref.shape[1]
+    kmax = idx_ref.shape[2]
+    b = dinv_ref.shape[-1]
+
+    def row(w, _):
+        i = rows_ref[t, w]                       # padding rows point at the
+        acc = r_ref[pl.ds(i * b, b)]             # scratch block i = nbr
+        def slot(k, acc):
+            j = idx_ref[t, w, k]
+            yj = y_ref[pl.ds(j * b, b)]
+            yj = jnp.where(k < n_ref[t, w], yj, jnp.zeros_like(yj))
+            return acc - jnp.dot(data_ref[0, w, k], yj,
+                                 preferred_element_type=acc.dtype)
+        acc = jax.lax.fori_loop(0, kmax, slot, acc)
+        y_ref[pl.ds(i * b, b)] = jnp.dot(dinv_ref[0, w], acc,
+                                         preferred_element_type=acc.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, width, row, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wavefront_sweep(rows: jax.Array, n: jax.Array, idx: jax.Array,
+                    data: jax.Array, dinv: jax.Array, r: jax.Array,
+                    *, interpret: bool = False) -> jax.Array:
+    """Level-scheduled (wavefront) blocked triangular sweep.
+
+    Inputs are the level-major arrays of a ``precond.blocktri.LevelSchedule``
+    (one grid step per elimination-DAG level, all of the level's independent
+    block rows processed in that step): rows (n_levels, width) int32 row ids
+    with padding = nbr; n/idx/data/dinv per (level, slot). The work vector is
+    (m + b): the trailing scratch block absorbs padding-row writes (their
+    ``dinv`` is zero), so the kernel has no per-row branch. Per-row
+    arithmetic — masked slot loads, sequential k accumulation, one dense
+    diagonal matvec — is exactly the sequential kernel's, so the result is
+    bit-identical to ``block_sweep`` in f64 (rows within a level are
+    mutually independent by construction).
+    """
+    n_levels, width, kmax, b, _ = data.shape
+    m = r.shape[0]
+    mp = m + b
+    r_pad = jnp.concatenate([r, jnp.zeros((b,), r.dtype)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_levels,),
+        in_specs=[
+            pl.BlockSpec((1, width, kmax, b, b),
+                         lambda t, *_: (t, 0, 0, 0, 0)),
+            pl.BlockSpec((1, width, b, b), lambda t, *_: (t, 0, 0, 0)),
+            pl.BlockSpec((mp,), lambda t, *_: (0,)),
+        ],
+        out_specs=pl.BlockSpec((mp,), lambda t, *_: (0,)),
+    )
+    y = pl.pallas_call(
+        _wavefront_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp,), r.dtype),
+        interpret=interpret,
+    )(rows, n, idx, data, dinv, r_pad)
+    return y[:m]
+
+
 @functools.partial(jax.jit, static_argnames=("reverse", "interpret"))
 def block_sweep(idx: jax.Array, n: jax.Array, data: jax.Array,
                 dinv: jax.Array, r: jax.Array, *, reverse: bool = False,

@@ -75,6 +75,160 @@ def block_split(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     return diag, lower, upper
 
 
+@dataclasses.dataclass
+class LevelSchedule:
+    """Level-major (wavefront) repacking of a TriPart + its diagonal solves.
+
+    The elimination DAG of a block-triangular sweep has block row ``i``
+    depending on the rows its off-diagonal slots reference; rows on the same
+    *level* (longest dependency path length) are mutually independent and can
+    be processed together — one wavefront kernel grid step per level instead
+    of one per row. Rows inside a level are padded to the widest level
+    ``width``; padded slots point at a scratch block (row id ``nbr``) with
+    zeroed ``dinv`` so they write zeros into the scratch slot of the
+    (m + b)-length work vector instead of branching.
+
+    rows:  (n_levels, width) int32 — global block-row ids (padding = nbr)
+    nrows: (n_levels,) int32       — valid rows per level
+    idx:   (n_levels, width, kmax) int32 — column-block ids (0-padded)
+    n:     (n_levels, width) int32 — valid slots per row (0 on padding)
+    data:  (n_levels, width, kmax, b, b)
+    dinv:  (n_levels, width, b, b) — per-row diagonal inverse blocks
+    """
+
+    rows: np.ndarray
+    nrows: np.ndarray
+    idx: np.ndarray
+    n: np.ndarray
+    data: np.ndarray
+    dinv: np.ndarray
+
+    @property
+    def n_levels(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.rows.shape[1]
+
+
+def dag_levels(idx: np.ndarray, n: np.ndarray, *, reverse: bool) -> np.ndarray:
+    """Longest-path level of each block row in the elimination DAG.
+
+    Forward sweeps depend on smaller row ids (process rows ascending),
+    backward sweeps on larger ones (descending); either way
+    ``level[i] = 1 + max(level[deps])`` with no-dependency rows at level 0.
+    """
+    nbr = idx.shape[0]
+    level = np.zeros(nbr, np.int32)
+    order = range(nbr - 1, -1, -1) if reverse else range(nbr)
+    for i in order:
+        k = int(n[i])
+        if k:
+            level[i] = int(level[idx[i, :k]].max()) + 1
+    return level
+
+
+def level_schedule(part: TriPart, dinv: np.ndarray, *,
+                   reverse: bool) -> LevelSchedule:
+    """Pack a TriPart + diagonal inverses into level-major wavefront form.
+
+    Rows within a level keep the sequential sweep's processing order
+    (ascending for forward, descending for backward) — irrelevant for the
+    values (rows in a level are independent) but it makes the layout
+    deterministic and diffable against the sequential kernel's row order.
+    """
+    idx = np.asarray(part.idx)
+    n = np.asarray(part.n)
+    data = np.asarray(part.data)
+    dinv = np.asarray(dinv)
+    nbr, kmax = idx.shape
+    b = dinv.shape[-1]
+    level = dag_levels(idx, n, reverse=reverse)
+    n_levels = int(level.max()) + 1 if nbr else 1
+    order = np.argsort(-level if reverse else level, kind="stable")
+    if reverse:
+        order = order[::-1]            # descending row id within each level
+    width = max(int(np.bincount(level, minlength=1).max()), 1) if nbr else 1
+    rows = np.full((n_levels, width), nbr, np.int32)      # scratch padding
+    nrows = np.zeros(n_levels, np.int32)
+    widx = np.zeros((n_levels, width, kmax), np.int32)
+    wn = np.zeros((n_levels, width), np.int32)
+    wdata = np.zeros((n_levels, width, kmax, b, b), data.dtype)
+    wdinv = np.zeros((n_levels, width, b, b), dinv.dtype)
+    for i in order:
+        lv = level[i]
+        s = nrows[lv]
+        rows[lv, s] = i
+        widx[lv, s] = idx[i]
+        wn[lv, s] = n[i]
+        wdata[lv, s] = data[i]
+        wdinv[lv, s] = dinv[i]
+        nrows[lv] += 1
+    return LevelSchedule(rows=rows, nrows=nrows, idx=widx, n=wn, data=wdata,
+                         dinv=wdinv)
+
+
+def _favorable_shape(n_levels: int, width: int, nbr: int,
+                     max_level_frac: float = 0.5,
+                     max_pad_factor: float = 4.0) -> bool:
+    if nbr == 0:
+        return False
+    return (n_levels <= max_level_frac * nbr
+            and n_levels * width <= max_pad_factor * nbr)
+
+
+def wavefront_favorable(sched: LevelSchedule, nbr: int,
+                        *, max_level_frac: float = 0.5,
+                        max_pad_factor: float = 4.0) -> bool:
+    """Whether the wavefront layout beats the sequential sweep: the level
+    count must actually shorten the grid (``n_levels <= max_level_frac·nbr``)
+    and the rectangular padding must not blow the work/VMEM footprint up
+    (``n_levels·width <= max_pad_factor·nbr``). Chain-structured DAGs (e.g.
+    Poisson slabs at block granularity, where every block row touches its
+    predecessor) fail the first test and keep the sequential kernel."""
+    return _favorable_shape(sched.n_levels, sched.width, nbr,
+                            max_level_frac, max_pad_factor)
+
+
+def _level_shape(part: TriPart, *, reverse: bool) -> tuple[int, int]:
+    """(n_levels, width) of a TriPart's elimination DAG — the favorability
+    inputs, computed from the level histogram alone so rejection costs no
+    padded packing (worst-case pad is O(nbr²) memory)."""
+    nbr = np.asarray(part.idx).shape[0]
+    if nbr == 0:
+        return 1, 1
+    level = dag_levels(np.asarray(part.idx), np.asarray(part.n),
+                       reverse=reverse)
+    counts = np.bincount(level)
+    return counts.size, max(int(counts.max()), 1)
+
+
+def wavefront_pair(lo: TriPart, up: TriPart, dinv_lo: np.ndarray,
+                   dinv_up: np.ndarray, nbr: int, mode: str = "auto"):
+    """Build the (forward, backward) device wavefront bundles for a
+    symmetric-sweep preconditioner, or (None, None) when the elimination
+    DAGs don't warrant the level-scheduled kernels.
+
+    mode: "auto" (use wavefront iff both DAGs pass ``wavefront_favorable``)
+    | "wavefront" (force) | "sequential" (never)."""
+    if mode == "sequential":
+        return None, None
+    if mode not in ("auto", "wavefront"):
+        raise ValueError(f"sweep_mode must be auto|wavefront|sequential, "
+                         f"got {mode!r}")
+    if mode != "wavefront":
+        # gate on the level histogram alone — packing an unfavorable DAG
+        # would transiently allocate up to O(nbr²) padded blocks
+        if not all(_favorable_shape(*_level_shape(part, reverse=rev), nbr)
+                   for part, rev in ((lo, False), (up, True))):
+            return None, None
+    lo_s = level_schedule(lo, dinv_lo, reverse=False)
+    up_s = level_schedule(up, dinv_up, reverse=True)
+    from repro.kernels.trisweep.ops import wavefront_from_schedule
+    return wavefront_from_schedule(lo_s), wavefront_from_schedule(up_s)
+
+
 def transpose_tripart(part: TriPart, nbr: int) -> TriPart:
     """ELL of Tᵀ from the ELL of T (block (i,j) -> blockᵀ at (j,i))."""
     b = part.data.shape[-1]

@@ -37,6 +37,65 @@ def gershgorin_bounds(rows, cols, vals, m: int) -> tuple[float, float]:
     return float((2.0 * diag - absrow).min()), float(absrow.max())
 
 
+def lanczos_ritz_bounds(coo, m: int, iters: int = 8,
+                        seed: int = 0) -> tuple[float, float]:
+    """(θ_min, θ_max) Ritz values from a few host-side Lanczos iterations
+    with full reorthogonalization (cheap at ``iters`` ≤ ~16).
+
+    For symmetric A the Ritz values always lie inside [λ_min, λ_max], with
+    the extremes converging outward fastest — so θ_min is a principled
+    *inner* estimate of λ_min that tightens the Chebyshev target interval
+    on easy spectra where the Gershgorin disc bound degenerates to ≤ 0
+    (the lo = hi/eig_ratio clamp wasted polynomial degree there)."""
+    rows, cols, vals = (np.asarray(a) for a in coo)
+
+    def mv(x):
+        y = np.zeros(m)
+        np.add.at(y, rows, vals * x[cols])
+        return y
+
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal(m)
+    q /= np.linalg.norm(q)
+    basis = [q]
+    alphas: list[float] = []
+    betas: list[float] = []
+    q_prev = np.zeros(m)
+    beta = 0.0
+    for _ in range(max(iters, 1)):
+        w = mv(q) - beta * q_prev
+        alpha = float(q @ w)
+        alphas.append(alpha)
+        w -= alpha * q
+        for qq in basis:                 # full reorthogonalization
+            w -= (qq @ w) * qq
+        beta = float(np.linalg.norm(w))
+        if beta < 1e-12 * max(abs(alpha), 1.0):
+            break                        # invariant subspace: T is exact
+        betas.append(beta)
+        q_prev, q = q, w / beta
+        basis.append(q)
+    k = len(alphas)
+    t = np.diag(alphas)
+    if k > 1:
+        off = np.asarray(betas[:k - 1])
+        t += np.diag(off, 1) + np.diag(off, -1)
+    ev = np.linalg.eigvalsh(t)
+    return float(ev[0]), float(ev[-1])
+
+
+def auto_degree(lo: float, hi: float, target: float = 0.05,
+                max_degree: int = 16) -> int:
+    """Smallest degree whose Chebyshev damping 2/T_d(σ) on [lo, hi] drops
+    below ``target`` (σ = (hi+lo)/(hi−lo)); tight bounds ⇒ large σ ⇒ small
+    degree — the "cut the polynomial degree on easy spectra" payoff."""
+    sigma = (hi + lo) / (hi - lo) if hi > lo else float("inf")
+    if not np.isfinite(sigma):
+        return 1
+    d = np.arccosh(2.0 / target) / np.arccosh(sigma)
+    return int(min(max(np.ceil(d), 1), max_degree))
+
+
 @register("chebyshev")
 class Chebyshev(Preconditioner):
     def __init__(self, a, lo: float, hi: float, degree: int, block: int,
@@ -50,15 +109,30 @@ class Chebyshev(Preconditioner):
         self._dtype = dtype
 
     @classmethod
-    def build(cls, *, coo, m, block, dtype, a=None, degree: int = 4,
-              eig_ratio: float = 30.0, **_):
+    def build(cls, *, coo, m, block, dtype, a=None, degree: int | str = 4,
+              eig_ratio: float = 30.0, lanczos_iters: int = 8,
+              auto_target: float = 0.05, **_):
+        """``lanczos_iters`` > 0 (default 8) tightens ``lo`` with the
+        Lanczos Ritz estimate θ_min (relaxed by 0.9); the Gershgorin disc
+        bound and the ``hi/eig_ratio`` floor remain as fallbacks, so the
+        interval only ever *shrinks* relative to the old clamp (the SPD
+        argument is unchanged: λ p_d(λ) > 0 on (0, hi] regardless).
+        Gershgorin keeps supplying ``hi`` — a guaranteed upper bound,
+        which a Ritz estimate is not. ``degree="auto"`` picks the smallest
+        degree reaching ``auto_target`` damping on [lo, hi]."""
         if a is None:
             raise ValueError("Chebyshev needs the Block-ELL matrix (a=...)")
-        if degree < 1:
-            raise ValueError(f"degree must be >= 1, got {degree}")
+        if degree != "auto" and (isinstance(degree, str) or degree < 1):
+            raise ValueError(
+                f"degree must be a positive int or 'auto', got {degree!r}")
         rows, cols, vals = coo
         lo_g, hi = gershgorin_bounds(rows, cols, vals, m)
         lo = max(lo_g, hi / eig_ratio)
+        if lanczos_iters:
+            ritz_lo, _ = lanczos_ritz_bounds(coo, m, lanczos_iters)
+            lo = max(lo, 0.9 * ritz_lo)
+        if degree == "auto":
+            degree = auto_degree(lo, hi, auto_target)
         return cls(a, lo, hi, degree, block, m, dtype)
 
     def _make_apply(self, backend: str):
@@ -68,6 +142,22 @@ class Chebyshev(Preconditioner):
         lo, hi, deg = self.lo, self.hi, self.degree
         return lambda r: chebyshev_precond_apply(data, idx, r, lo=lo, hi=hi,
                                                  degree=deg, backend=backend)
+
+    def _pff_inner_precond(self, mask, f_rows):
+        """B = A_ff (one Block-ELL SpMV restricted to the failed rows):
+        p_d(A) ≈ A⁻¹ on [lo, hi], so A_ff is the natural SPD approximation
+        of P_ff⁻¹ — the Chebyshev analogue of the truncated-operator inner
+        preconditioners."""
+        import jax.numpy as jnp
+
+        fr = jnp.asarray(np.asarray(f_rows))
+        zeros = jnp.zeros((self.m,), self._dtype)
+        a = self.a
+
+        def inner(u):
+            return a.matvec(zeros.at[fr].set(u))[fr]
+
+        return inner
 
     def static_state(self) -> dict:
         # A itself is the problem's static data (safe storage); only the

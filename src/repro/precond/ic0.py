@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.precond.base import Preconditioner, register
 from repro.precond.blocktri import TriPart, _ell_pack, block_split, \
-    transpose_tripart
+    transpose_tripart, wavefront_pair
 
 
 def _ic0_factor(diag: np.ndarray, lower: TriPart, shift: float):
@@ -58,7 +58,15 @@ def _ic0_factor(diag: np.ndarray, lower: TriPart, shift: float):
 @register("ic0")
 class IC0(Preconditioner):
     def __init__(self, lo_idx, lo_n, lo_data, up_idx, up_n, up_data, dinv_f,
-                 dinv_b, block: int, m: int, dtype, shift: float = 0.0):
+                 dinv_b, block: int, m: int, dtype, shift: float = 0.0,
+                 sweep_mode: str = "auto"):
+        self.sweep_mode = sweep_mode
+        self.lo_wf, self.up_wf = wavefront_pair(
+            TriPart(np.asarray(lo_idx), np.asarray(lo_n),
+                    np.asarray(lo_data)),
+            TriPart(np.asarray(up_idx), np.asarray(up_n),
+                    np.asarray(up_data)),
+            np.asarray(dinv_f), np.asarray(dinv_b), m // block, sweep_mode)
         self.lo_idx = jnp.asarray(lo_idx)
         self.lo_n = jnp.asarray(lo_n)
         self.lo_data = jnp.asarray(lo_data)
@@ -74,7 +82,8 @@ class IC0(Preconditioner):
 
     @classmethod
     def build(cls, *, coo, m, block, dtype,
-              shifts=(0.0, 0.01, 0.1, 0.5, 1.0), **_):
+              shifts=(0.0, 0.01, 0.1, 0.5, 1.0), sweep_mode: str = "auto",
+              **_):
         rows, cols, vals = coo
         diag, lower, _upper = block_split(rows, cols, vals, m, block, dtype)
         nbr = m // block
@@ -102,14 +111,50 @@ class IC0(Preconditioner):
         dinv_b = np.swapaxes(dinv_f, -1, -2)         # L_ii⁻ᵀ
         return cls(l_lower.idx, l_lower.n, l_lower.data,
                    l_upper.idx, l_upper.n, l_upper.data,
-                   dinv_f, dinv_b, block, m, dtype, shift)
+                   dinv_f, dinv_b, block, m, dtype, shift, sweep_mode)
 
     def _make_apply(self, backend: str):
         from repro.kernels.ic0.ops import ic0_precond_apply
 
         args = (self.lo_idx, self.lo_n, self.lo_data, self.up_idx, self.up_n,
                 self.up_data, self.dinv_f, self.dinv_b)
-        return lambda r: ic0_precond_apply(*args, r, backend=backend)
+        # kernel backends take the level-scheduled grid; the jnp reference
+        # keeps the unpadded sequential sweep unless forced (the two routes
+        # are bit-identical, so this cannot fork backend trajectories)
+        wf = backend != "jnp" or self.sweep_mode == "wavefront"
+        lo_wf = self.lo_wf if wf else None
+        up_wf = self.up_wf if wf else None
+        return lambda r: ic0_precond_apply(*args, r, backend=backend,
+                                           lo_wf=lo_wf, up_wf=up_wf)
+
+    def _pff_inner_precond(self, mask, f_rows):
+        """Failed-slab-truncated factor product: B = (L Lᵀ)_ff.
+
+        P = (L Lᵀ)⁻¹, so P_ff⁻¹ ≈ (L Lᵀ)_ff — an SPD principal submatrix
+        of the factor product, applied with two triangular *matvecs* (the
+        diagonal factor blocks L_ii are rebuilt host-side from their stored
+        inverses once per failed set)."""
+        from repro.precond.base import tripart_matvec
+
+        fr = jnp.asarray(np.asarray(f_rows))
+        zeros = jnp.zeros((self.m,), self.dtype)
+        b = self.block
+        l_ii = jnp.asarray(np.linalg.inv(np.asarray(self.dinv_f)))
+        l_iit = jnp.swapaxes(l_ii, -1, -2)
+        lo_idx, lo_data = self.lo_idx, self.lo_data
+        up_idx, up_data = self.up_idx, self.up_data
+
+        def inner(u):
+            v = zeros.at[fr].set(u)
+            t = jnp.einsum("nij,nj->ni", l_iit,
+                           v.reshape(-1, b)).reshape(-1) \
+                + tripart_matvec(up_idx, up_data, v, b)      # Lᵀ v
+            mv = jnp.einsum("nij,nj->ni", l_ii,
+                            t.reshape(-1, b)).reshape(-1) \
+                + tripart_matvec(lo_idx, lo_data, t, b)      # L (Lᵀ v)
+            return mv[fr]
+
+        return inner
 
     def static_state(self) -> dict:
         return {"lo_idx": np.asarray(self.lo_idx),
@@ -120,11 +165,13 @@ class IC0(Preconditioner):
                 "up_data": np.asarray(self.up_data),
                 "dinv_f": np.asarray(self.dinv_f),
                 "dinv_b": np.asarray(self.dinv_b),
-                "block": self.block, "shift": self.shift}
+                "block": self.block, "shift": self.shift,
+                "sweep_mode": self.sweep_mode}
 
     @classmethod
     def from_static(cls, state, *, m: int, dtype, **_):
         return cls(state["lo_idx"], state["lo_n"], state["lo_data"],
                    state["up_idx"], state["up_n"], state["up_data"],
                    state["dinv_f"], state["dinv_b"], int(state["block"]),
-                   m, dtype, float(state["shift"]))
+                   m, dtype, float(state["shift"]),
+                   str(state.get("sweep_mode", "auto")))

@@ -1,0 +1,67 @@
+"""Node-local (additive-Schwarz) preconditioner variants.
+
+The sequential SSOR/IC(0) sweeps do not partition over the "nodes" mesh
+axis: every block row of the substitution may depend on rows owned by other
+nodes, which would serialize the whole distributed iteration (the scaling
+obstruction Levonyak et al., arXiv:1912.09230, identify for resilient PCG).
+The standard fix is the *block-Jacobi / additive-Schwarz* variant: drop every
+coupling between different nodes' row slabs, so the preconditioner becomes
+block-diagonal over nodes and each node sweeps its own diagonal slab
+independently — embarrassingly parallel over the mesh axis, at the price of
+a (usually small) iteration-count increase that ``SolveReport
+.local_delta_iters`` tracks.
+
+Algebraically this is the same preconditioner *class* applied to
+blockdiag(A_s) (each A_s an SPD principal submatrix of A), so everything
+else — SPD-ness, the recovery-aware Alg. 2 local operators, static-state
+round-trips — is inherited unchanged from the registered implementation. In
+fact recovery gets *simpler*: when the failed set is a union of whole node
+slabs, P_{f, I\\f} is exactly zero.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def is_slab_local(idx: np.ndarray, n: np.ndarray, nbr_per_node: int) -> bool:
+    """True iff every valid ELL slot of every block row references a column
+    block in the same node slab as the row (host-side static check)."""
+    idx = np.asarray(idx)
+    n = np.asarray(n)
+    nbr, kmax = idx.shape
+    valid = np.arange(kmax)[None, :] < n[:, None]
+    row_slab = np.arange(nbr)[:, None] // nbr_per_node
+    return bool(np.all(~valid | (idx // nbr_per_node == row_slab)))
+
+
+def precond_is_node_local(pc, n_nodes: int) -> bool:
+    """Whether a triangular-sweep preconditioner's structure already is
+    node-local (so the sharded runtime can sweep each slab independently)."""
+    nbr = pc.m // pc.block
+    if nbr % n_nodes:
+        return False
+    per = nbr // n_nodes
+    return (is_slab_local(pc.lo_idx, pc.lo_n, per)
+            and is_slab_local(pc.up_idx, pc.up_n, per))
+
+
+def node_local_twin(problem):
+    """Build the node-local (additive-Schwarz) twin of ``problem``'s SSOR /
+    IC(0) preconditioner from the COO in safe storage, preserving the
+    builder options the instance carries. Cached per problem."""
+    pc = problem.precond
+    cache = getattr(problem, "_node_local_twin", None)
+    if cache is not None:
+        return cache
+    rows, cols, vals = problem.coo
+    # the partition's ownership map is the single source of the slab
+    # definition — the same mask build_problem's node_local option applies
+    keep = problem.part.intra_node_mask(rows, cols)
+    coo = (rows[keep], cols[keep], vals[keep])
+    opts = {"sweep_mode": getattr(pc, "sweep_mode", "auto")}
+    if pc.name == "ssor":
+        opts["omega"] = pc.omega
+    twin = type(pc).build(coo=coo, m=problem.m, block=pc.block,
+                          dtype=problem.b.dtype, **opts)
+    problem._node_local_twin = twin
+    return twin

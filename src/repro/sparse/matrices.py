@@ -183,6 +183,14 @@ def build_problem(kind: str, n_nodes: int, *, bm: int = 8, bn: int = 8,
     block-Jacobi diagonal/inverse blocks are always built — they also serve
     as the Alg. 2 line-8 inner-solve preconditioner.
 
+    ``precond_opts={"node_local": True}`` builds the additive-Schwarz
+    variant of SSOR/IC(0): the preconditioner sees only the COO entries
+    whose row and column are owned by the same node, so its sweeps restrict
+    to each node's diagonal slab and partition over the "nodes" mesh axis
+    (``comm.shard`` runs them embarrassingly parallel). A no-op for
+    block-Jacobi (its blocks never straddle node boundaries); rejected for
+    Chebyshev, whose sharded apply distributes through the SpMV instead.
+
     The problem size is padded (with identity rows) up to
     lcm(n_nodes*bm, n_nodes*bn, n_nodes*precond_block) multiples so that the
     partition constraints hold; padding rows are decoupled (A_ii=1, b_i=0) and
@@ -211,10 +219,20 @@ def build_problem(kind: str, n_nodes: int, *, bm: int = 8, bn: int = 8,
     diag = block_jacobi_blocks(rows, cols, vals, m_pad, precond_block, dtype)
     pinv = invert_blocks(diag)
     from repro import precond as precond_pkg
-    pc = precond_pkg.build(precond, coo=(rows, cols, vals), m=m_pad,
+    opts = dict(precond_opts or {})
+    node_local = bool(opts.pop("node_local", False))
+    pc_coo = (rows, cols, vals)
+    if node_local and precond not in ("jacobi",):
+        if precond == "chebyshev":
+            raise ValueError(
+                "node_local does not apply to chebyshev — its sharded apply "
+                "distributes through the SpMV (comm.shard)")
+        keep = part.intra_node_mask(rows, cols)
+        pc_coo = (rows[keep], cols[keep], vals[keep])
+    pc = precond_pkg.build(precond, coo=pc_coo, m=m_pad,
                            block=precond_block, dtype=dtype, a=a,
                            diag_blocks=diag, pinv_blocks=pinv,
-                           **(precond_opts or {}))
+                           **opts)
     rng = np.random.default_rng(seed + 1)
     b = rng.standard_normal(m_pad).astype(dtype)
     if m_pad != m:

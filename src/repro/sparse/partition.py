@@ -78,6 +78,12 @@ class Partition:
         c = self.col_tiles_per_node
         return s * c, (s + 1) * c
 
+    def intra_node_mask(self, rows, cols) -> np.ndarray:
+        """Entrywise mask of COO coordinates whose row and column are owned
+        by the same node — the entries an additive-Schwarz (node-local)
+        preconditioner keeps."""
+        return self.owner_of_row(rows) == self.owner_of_row(cols)
+
 
 def neighbor(s: int, k: int, n_nodes: int) -> int:
     """Designated redundancy destination ``d_{s,k}`` — Eq. (1) of the paper.

@@ -1,0 +1,201 @@
+"""Node-local (additive-Schwarz) preconditioner variants and the sharded
+runtime's non-Jacobi acceptance: slab-restriction structure, twin building,
+single-device recovery exactness, and (slow, 8 host devices) parity of the
+shard_map sweeps against the single-device node-local reference."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.driver import solve_resilient
+from repro.precond import local as plocal
+from repro.sparse.matrices import build_problem
+
+
+def test_intra_node_mask_keeps_only_intra_slab_entries():
+    from repro.sparse.partition import Partition
+
+    part = Partition(m=100, n_nodes=4, bm=5, bn=5)
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 100, 500)
+    cols = rng.integers(0, 100, 500)
+    keep = part.intra_node_mask(rows, cols)
+    np.testing.assert_array_equal(keep, (rows // 25) == (cols // 25))
+    assert 0 < int(keep.sum()) < 500
+
+
+@pytest.mark.parametrize("name", ("ssor", "ic0"))
+def test_node_local_build_is_slab_local(name):
+    p_loc = build_problem("poisson2d", n_nodes=4, nx=40, precond=name,
+                          precond_opts={"node_local": True})
+    p_glob = build_problem("poisson2d", n_nodes=4, nx=40, precond=name)
+    assert plocal.precond_is_node_local(p_loc.precond, 4)
+    assert not plocal.precond_is_node_local(p_glob.precond, 4)
+
+
+def test_node_local_rejected_for_chebyshev():
+    with pytest.raises(ValueError, match="node_local"):
+        build_problem("poisson2d", n_nodes=4, nx=40, precond="chebyshev",
+                      precond_opts={"node_local": True})
+
+
+def test_node_local_twin_matches_node_local_build():
+    """The auto-built twin of a global SSOR instance is bit-identical to
+    building with precond_opts={"node_local": True} directly."""
+    p_glob = build_problem("poisson2d", n_nodes=4, nx=40, precond="ssor",
+                          precond_opts={"omega": 1.3})
+    p_loc = build_problem("poisson2d", n_nodes=4, nx=40, precond="ssor",
+                         precond_opts={"omega": 1.3, "node_local": True})
+    twin = plocal.node_local_twin(p_glob)
+    assert plocal.precond_is_node_local(twin, 4)
+    assert twin.omega == 1.3
+    assert plocal.node_local_twin(p_glob) is twin          # cached
+    rng = np.random.default_rng(1)
+    r = jnp.asarray(rng.standard_normal(p_glob.m))
+    np.testing.assert_array_equal(np.asarray(twin.apply(r)),
+                                  np.asarray(p_loc.precond.apply(r)))
+
+
+@pytest.mark.parametrize("name", ("ssor", "ic0"))
+def test_node_local_is_weaker_but_converges(name):
+    """Additive Schwarz drops coupling, so it needs >= the global variant's
+    iterations — but still beats unpreconditioned block-Jacobi-style decay
+    and still converges to the same tolerance."""
+    kw = dict(nx=40)
+    it = {}
+    for local in (False, True):
+        p = build_problem("poisson2d", n_nodes=4, precond=name,
+                          precond_opts={"node_local": local}, **kw)
+        rep = solve_resilient(p, strategy="none", rtol=1e-9)
+        assert rep.rel_residual < 1e-9
+        it[local] = rep.converged_iter
+    assert it[True] >= it[False]
+
+
+def test_node_local_recovery_exact_midstage():
+    """Mid-stage failure with the node-local SSOR: Alg. 2 through the
+    generic preconditioner-aware path (with the preconditioned P_ff inner
+    solve) must rejoin the failure-free trajectory exactly — the failed
+    slab decouples, so line 5 is exactly zero and the algebra is the
+    clean additive-Schwarz case."""
+    p = build_problem("poisson2d", n_nodes=4, nx=40, precond="ssor",
+                      precond_opts={"node_local": True})
+    ref = solve_resilient(p, strategy="none", rtol=1e-9, chunk=16)
+    C = ref.converged_iter
+    T = 5
+    fail_at = max(2 * T, (C // 2 // T) * T)
+    assert fail_at < C
+    r = solve_resilient(p, strategy="esrp", T=T, phi=1, rtol=1e-9, chunk=16,
+                        fail_at=fail_at, failed_nodes=[2])
+    assert r.converged_iter == C
+    assert r.rel_residual < 1e-9
+    assert r.events[0].pff_iters > 0          # the line-6 inner CG ran
+
+
+def test_sharded_sweeps_reject_mesh_partition_mismatch():
+    """The shard_map index shift assumes one partition slab per mesh device;
+    a mismatched mesh must fail loudly instead of clamping cross-shard loads
+    to wrong blocks."""
+    from repro.comm import shard
+
+    p = build_problem("poisson2d", n_nodes=4, nx=40, precond="ssor")
+    mesh = shard.nodes_mesh(1)
+    with pytest.raises(ValueError, match="one partition slab per mesh"):
+        shard.sharded_solver_ops(p, mesh)
+
+
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm.shard import (attach_local_delta, nodes_mesh, place_problem,
+                              sharded_solver_ops)
+from repro.core.driver import solve_resilient
+from repro.sparse.matrices import build_problem
+
+assert len(jax.devices()) == 8
+mesh = nodes_mesh(8)
+rng = np.random.default_rng(0)
+
+for name in ("ssor", "ic0", "chebyshev"):
+    opts = {"node_local": True} if name != "chebyshev" else None
+    p = build_problem("poisson2d", n_nodes=8, nx=40, precond=name,
+                      precond_opts=opts)
+    p_glob = build_problem("poisson2d", n_nodes=8, nx=40, precond=name)
+    ref_glob = solve_resilient(p_glob, strategy="none", rtol=1e-10)
+    ref_loc = solve_resilient(p, strategy="none", rtol=1e-10)
+    placed = place_problem(p, mesh)
+    with mesh:
+        ops = sharded_solver_ops(placed, mesh)
+        r = solve_resilient(placed, strategy="none", rtol=1e-10, ops=ops)
+    # parity vs the single-device node-local reference
+    assert r.converged_iter == ref_loc.converged_iter, (
+        name, r.converged_iter, ref_loc.converged_iter)
+    assert r.rel_residual < 1e-10
+    attach_local_delta(r, ref_glob)
+    assert r.local_delta_iters == r.converged_iter - ref_glob.converged_iter
+    assert r.precond_variant, name
+    if name != "chebyshev":
+        # the shard_map sweeps are bitwise the single-device apply
+        x = jnp.asarray(rng.standard_normal(p.m))
+        z_ref = p.precond.apply(x, backend="jnp")
+        with mesh:
+            z_sh = ops.precond(jax.device_put(x, NamedSharding(mesh, P("nodes"))))
+        assert (np.asarray(z_ref) == np.asarray(z_sh)).all(), name
+        assert r.local_delta_iters >= 0, (name, r.local_delta_iters)
+    print(f"{name}: iters={r.converged_iter} delta={r.local_delta_iters} "
+          f"variant={r.precond_variant}")
+
+# ESRP failure + Alg. 2 recovery on the sharded runtime (node-local ssor):
+# must rejoin the single-device node-local trajectory exactly
+p = build_problem("poisson2d", n_nodes=8, nx=40, precond="ssor",
+                  precond_opts={"node_local": True})
+ref = solve_resilient(p, strategy="none", rtol=1e-10)
+placed = place_problem(p, mesh)
+with mesh:
+    ops = sharded_solver_ops(placed, mesh)
+    r = solve_resilient(placed, strategy="esrp", T=10, phi=1, rtol=1e-10,
+                        ops=ops, fail_at=(ref.converged_iter // 2 // 10) * 10,
+                        failed_nodes=[3])
+assert r.converged_iter == ref.converged_iter, (r.converged_iter,
+                                                ref.converged_iter)
+assert r.rel_residual < 1e-10
+
+# auto-twin adoption: a *global* ssor problem is accepted; the bundle swaps
+# in the node-local twin, records it, and drops closures cached against the
+# replaced global operator
+p2 = build_problem("poisson2d", n_nodes=8, nx=40, precond="ssor")
+placed2 = place_problem(p2, mesh)
+placed2.solver_ops("jnp")                 # cache bound to the global apply
+assert hasattr(placed2, "_ops_cache")
+with mesh:
+    ops2 = sharded_solver_ops(placed2, mesh)
+    r2 = solve_resilient(placed2, strategy="none", rtol=1e-10, ops=ops2)
+assert "auto twin" in ops2.variant, ops2.variant
+assert not hasattr(placed2, "_ops_cache")            # stale caches cleared
+assert r2.rel_residual < 1e-10
+from repro.precond.local import precond_is_node_local
+assert precond_is_node_local(placed2.precond, 8)     # adopted problem-wide
+assert r2.converged_iter == ref.converged_iter       # == node-local ref
+
+print("SHARD_LOCAL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_non_jacobi_parity_eight_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], cwd=".",
+                         env=env, capture_output=True, text=True,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARD_LOCAL_OK" in out.stdout
