@@ -425,7 +425,7 @@ def bench_recovery(full):
           f"({len(rows)} rows)")
 
 
-def bench_failures(full):
+def bench_failures(full, sharded=False):
     """Failure-scenario sweep: simultaneous vs staggered vs burst × φ × T
     for ESRP and IMCR — the multi-failure experiment of Pachajoa et al.
     (arXiv:1907.13077) on top of the paper's protocol.
@@ -437,6 +437,14 @@ def bench_failures(full):
       burst         two events one iteration apart: the second strikes the
                     re-run before the next storage stage completes, forcing
                     a rollback to the SAME reconstruction point again
+
+    With ``--sharded`` (requires the 8-virtual-device XLA flag set by
+    ``main``) the T=20 ESRP rows additionally run on the 8-device mesh with
+    the device-resident failure runtime (redundancy copies physically on the
+    neighbour devices, shard_map injection, recovery from surviving shards)
+    and the ``sharded_iter``/``sharded_exact`` columns record the mesh run's
+    convergence and whether it rejoined the single-device mesh-mirror
+    trajectory bit-identically.
 
     Writes artifacts/bench/failures.csv (per-row sweep) and a
     machine-readable BENCH_failures.json next to it so the recovery-cost
@@ -453,6 +461,39 @@ def bench_failures(full):
     n_nodes = 8
     kind, kw = "poisson2d", dict(nx=96 if full else 48)
     p = build_problem(kind, n_nodes=n_nodes, **kw)
+    mesh = placed = sh_ops = mirror = frt = None
+    if sharded:
+        from repro.comm.shard import (ShardedFailureRuntime, mesh_mirror_ops,
+                                      nodes_mesh, place_problem,
+                                      sharded_solver_ops)
+        if len(jax.devices()) < n_nodes:
+            raise RuntimeError(
+                f"--sharded needs {n_nodes} devices; run via main() so the "
+                f"xla_force_host_platform_device_count flag is set before "
+                f"jax imports")
+        mesh = nodes_mesh(n_nodes)
+        placed = place_problem(p, mesh)
+        with mesh:
+            sh_ops = sharded_solver_ops(placed, mesh)
+        mirror = mesh_mirror_ops(p, n_nodes)
+        # ONE runtime for the whole sweep: the jitted chunk runners key
+        # their compile cache on its (per-phi cached) push closure, so a
+        # fresh runtime per row would recompile every row; bind_plan resets
+        # the per-solve wiped-copy tracking anyway
+        frt = ShardedFailureRuntime(placed, mesh)
+
+    def run_sharded(T, phi, events):
+        """One mesh run + its mesh-mirror reference; returns the sharded
+        column trio (iter, bit-exact rejoin, recovery ms)."""
+        with mesh:
+            r = solve_resilient(placed, strategy="esrp", T=T, phi=phi,
+                                rtol=1e-8, chunk=32, scenario=list(events),
+                                ops=sh_ops, failure_runtime=frt)
+        rm = solve_resilient(p, strategy="esrp", T=T, phi=phi, rtol=1e-8,
+                             chunk=32, scenario=list(events), ops=mirror)
+        exact = bool((np.asarray(r.x) == np.asarray(rm.x)).all()
+                     and r.converged_iter == rm.converged_iter)
+        return r.converged_iter, exact, 1e3 * r.recovery_s
     solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)        # warmup
     ref = solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)
     C, t0 = ref.converged_iter, ref.runtime_s
@@ -471,7 +512,8 @@ def bench_failures(full):
                 if all(ev.iter < C for ev in evs)}
 
     header = ("strategy,T,phi,scenario,n_events,converged_iter,wasted_iters,"
-              "recovery_ms,runtime_s,overhead_pct,rel_residual,drift,targets")
+              "recovery_ms,runtime_s,overhead_pct,rel_residual,drift,targets,"
+              "sharded_iter,sharded_exact")
     lines = [header]
     rows = []
     for strategy in ("esrp", "imcr"):
@@ -497,15 +539,25 @@ def bench_failures(full):
                         overhead_pct=100 * (r.runtime_s - t0) / t0,
                         rel_residual=r.rel_residual, drift=r.drift,
                         targets=[e.target_iter for e in r.events],
-                        per_event_wasted=[e.wasted_iters for e in r.events])
+                        per_event_wasted=[e.wasted_iters for e in r.events],
+                        sharded_iter=None, sharded_exact=None,
+                        sharded_recovery_ms=None)
+                    if sharded and strategy == "esrp" and T == 20:
+                        (row["sharded_iter"], row["sharded_exact"],
+                         row["sharded_recovery_ms"]) = run_sharded(
+                            T, phi, events)
                     rows.append(row)
+                    si, se = row["sharded_iter"], row["sharded_exact"]
+                    sh_cols = (f",{'' if si is None else si}"
+                               f",{'' if se is None else int(se)}")
                     lines.append(
                         f"{strategy},{T},{phi},{scen},{len(events)},"
                         f"{r.converged_iter},{r.wasted_iters},"
                         f"{1e3 * r.recovery_s:.2f},{r.runtime_s:.3f},"
                         f"{row['overhead_pct']:.1f},{r.rel_residual:.2e},"
                         f"{r.drift:.2e},"
-                        f"{'|'.join(str(t) for t in row['targets'])}")
+                        f"{'|'.join(str(t) for t in row['targets'])}"
+                        + sh_cols)
     # harness CSV: the headline multi-failure settings at T=20
     for row in rows:
         if row["T"] == 20 and (row["phi"] == max(phis) or
@@ -518,6 +570,12 @@ def bench_failures(full):
                   f"overhead_pct={row['overhead_pct']:.1f}")
     exact = sum(r_["converged_iter"] == C for r_ in rows)
     print(f"failures_exact_rejoin,0,rejoined={exact}/{len(rows)};ref_C={C}")
+    sh_rows = [r_ for r_ in rows if r_["sharded_iter"] is not None]
+    if sh_rows:
+        ok = sum(bool(r_["sharded_exact"]) for r_ in sh_rows)
+        worst = max(r_["sharded_recovery_ms"] for r_ in sh_rows)
+        print(f"failures_sharded_rejoin,0,bit_exact={ok}/{len(sh_rows)};"
+              f"max_recovery_ms={worst:.2f}")
     _ensure_dir()
     with open("artifacts/bench/failures.csv", "w") as f:
         f.write("\n".join(lines) + "\n")
@@ -534,7 +592,10 @@ def bench_failures(full):
             max_wasted_iters=max(r_["wasted_iters"] for r_ in rows),
             max_recovery_ms=max(r_["recovery_ms"] for r_ in rows),
             median_overhead_pct=float(np.median(
-                [r_["overhead_pct"] for r_ in rows]))))
+                [r_["overhead_pct"] for r_ in rows])),
+            sharded_rows=len(sh_rows),
+            sharded_bit_exact=sum(bool(r_["sharded_exact"])
+                                  for r_ in sh_rows)))
     with open("artifacts/bench/BENCH_failures.json", "w") as f:
         json.dump(summary, f, indent=1, default=float)
     print(f"# wrote artifacts/bench/failures.csv + BENCH_failures.json "
@@ -566,11 +627,25 @@ def main() -> None:
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, choices=list(ALL))
+    ap.add_argument("--sharded", action="store_true",
+                    help="failures sweep only: also run the T=20 ESRP rows "
+                         "on an 8-device mesh with the device-resident "
+                         "failure runtime (adds the sharded_iter/"
+                         "sharded_exact columns)")
     args = ap.parse_args()
+    if args.sharded:
+        # must precede the first jax import (bench functions import lazily)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=8").strip()
     names = [args.only] if args.only else list(ALL)
     for name in names:
         print(f"\n== {name} ==")
-        ALL[name](args.full)
+        if name == "failures":
+            ALL[name](args.full, sharded=args.sharded)
+        else:
+            ALL[name](args.full)
 
 
 if __name__ == "__main__":

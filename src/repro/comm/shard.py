@@ -1,14 +1,32 @@
 """Distributed solver runtime: the paper's MPI cluster on a JAX mesh.
 
-Two layers:
+Three layers:
 
 * ``place_problem`` + ``sharded_matvec`` — the production path: block-rows of
   the Block-ELL matrix and all vectors are sharded over a 1-D "nodes" mesh
   axis; the SpMV's halo exchange is an ``all_gather`` of the input vector
-  (general sparsity), and dot products reduce across nodes — plain jit +
-  NamedSharding, so the *same* ESRP/IMCR code from ``repro.core`` runs
-  distributed unchanged (tested on 8 host devices in
-  tests/test_solver_multidevice.py).
+  (general sparsity) under ``shard_map``, each device running the
+  sequential-k Block-ELL product over its own row slab, and dot products
+  reduce as per-node partials + ``psum`` — so the *same* ESRP/IMCR code from
+  ``repro.core`` runs distributed unchanged, and ``mesh_mirror_ops`` builds
+  the single-device reference bundle with the identical reduction structure
+  (the sharded trajectory is bit-identical to it in f64, tested on 8 host
+  devices).
+
+* the **device-resident failure story**: ``redundancy_queue`` materializes
+  the paper §2.2.1 ASpMV redundancy on the mesh — at every storage push the
+  current search direction's column tiles are physically placed on their
+  designated holder devices (ring ``ppermute`` sends to the d_{s,k}
+  neighbours + retention of the naturally-travelling tiles), rotating
+  through the queue-of-3 in ``ESRPState.rq``. ``ShardedFailureRuntime``
+  plugs into ``core.driver.solve_resilient``: failure injection is a
+  ``shard_map`` operation zeroing only the failed devices' shards (live
+  vectors, starred locals, own-queue rows AND the copies the failed device
+  held for others), and reconstruction reads p^(j-1), p^(j) for the failed
+  rows out of the *surviving devices'* queue shards — never from a
+  replicated array — with a device-resident survival check that is stricter
+  than the static plan (a copy wiped by an earlier event only revives at
+  the next storage push).
 
 * ``ring_halo_matvec`` — the banded-matrix specialization matching the
   paper's point-to-point neighbour sends: each node exchanges only its
@@ -25,6 +43,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.sparse.blockell import BlockEll
@@ -51,15 +70,106 @@ def place_problem(problem: Problem, mesh: Mesh) -> Problem:
 
 
 def sharded_matvec(a: BlockEll, mesh: Mesh):
-    """General-sparsity distributed SpMV: gather x, local block-ELL product.
-    Output stays node-sharded (the natural block-row result placement)."""
+    """General-sparsity distributed SpMV under ``shard_map``: all-gather x
+    (the halo exchange), then each device runs the *sequential-k* Block-ELL
+    product over its own row slab.
 
-    def mv(x):
-        y = a.matvec(x)
-        return jax.lax.with_sharding_constraint(
-            y, NamedSharding(mesh, P("nodes")))
+    The per-row accumulation order is exactly ``spmv_seq_ref``'s (the jnp
+    SolverOps backend), and rows are independent — so the distributed
+    product is bit-identical in f64 to the single-device one regardless of
+    how XLA partitions the surrounding graph (the free-form einsum the
+    previous implementation used re-associated the k×bn reduction
+    differently under SPMD partitioning). ``mesh_mirror_ops`` relies on
+    this for the single-device reference trajectory.
+    """
+    from repro.kernels.spmv.ref import spmv_seq_ref
 
-    return mv
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P("nodes"), P("nodes"), P("nodes")),
+        out_specs=P("nodes"), check_rep=False)
+    def mv(data, idx, x_local):
+        xg = jax.lax.all_gather(x_local, "nodes", tiled=True)
+        return spmv_seq_ref(data, idx, xg)
+
+    return lambda x: mv(a.data, a.idx, x)
+
+
+def _dot_lane(m: int, n_nodes: int, lane: int = 8) -> int:
+    """Lane width for the pinned slab dot (the f64 SIMD register width; the
+    Block-ELL bn in practice). Falls back to 1 when the slab doesn't tile."""
+    slab = m // n_nodes
+    return lane if slab % lane == 0 else 1
+
+
+def _slab_dot(u, v, lane: int):
+    """One node's share of a distributed dot, with a *pinned* reduction
+    structure: per-``lane``-wide row partials (a fixed-size SIMD reduce XLA
+    cannot re-associate) barriered against collapsing, then one flat sum of
+    the row partials. A plain local ``u @ v`` compiles to a different
+    re-association depending on the surrounding fusion context, which breaks
+    the sharded-vs-mirror bit-identity (measured: ~half of random inputs)."""
+    p = jnp.einsum("rj,rj->r", u.reshape(-1, lane), v.reshape(-1, lane))
+    return jnp.sum(jax.lax.optimization_barrier(p))
+
+
+def sharded_dot(mesh: Mesh, m: int, lane: int = 8):
+    """uᵀv for node-sharded vectors: each device reduces its own slab with
+    the pinned structure of ``_slab_dot``, then ``psum`` accumulates the
+    per-node partials around the ring (sequential order — ``mesh_dot`` is
+    the bit-identical single-device form)."""
+    n = mesh.shape["nodes"]
+    lane = _dot_lane(m, n, lane)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P("nodes"), P("nodes")), out_specs=P(),
+                       check_rep=False)
+    def dot(u, v):
+        return jax.lax.psum(_slab_dot(u, v, lane), "nodes")
+
+    return dot
+
+
+def mesh_dot(n_nodes: int, m: int, lane: int = 8):
+    """Single-device uᵀv with the mesh's exact reduction structure: the same
+    pinned per-slab dots as ``sharded_dot``'s shard_map body, accumulated
+    sequentially over the node axis like ``psum`` does around the ring —
+    bit-identical in f64 to the distributed dot (``mesh_mirror_ops``)."""
+    lane = _dot_lane(m, n_nodes, lane)
+
+    def dot(u, v):
+        u8 = u.reshape(n_nodes, -1)
+        v8 = v.reshape(n_nodes, -1)
+        acc = jnp.zeros((), u.dtype)
+        for s in range(n_nodes):
+            acc = acc + _slab_dot(u8[s], v8[s], lane)
+        return acc
+
+    return dot
+
+
+def _ensure_node_local(problem: Problem, n: int):
+    """Adopt the node-local (additive-Schwarz) twin problem-wide when the
+    registered SSOR/IC(0) instance still carries cross-slab coupling, so
+    that Alg. 2 recovery reconstructs against the same operator the
+    distributed hot loop applies. Clears every closure cache bound to the
+    replaced global-sweep operator — including ``_sharded_ops_cache``: a
+    same-shape mesh entry built pre-adoption would otherwise keep applying
+    the old operator (``jax.make_mesh`` interns equal-shape meshes, so the
+    stale entry is reachable from a *fresh* mesh object)."""
+    from repro.precond import local as plocal
+
+    pc = problem.precond
+    if plocal.precond_is_node_local(pc, n):
+        return pc, False
+    pc = plocal.node_local_twin(problem)
+    problem.precond = pc
+    for attr in ("_recon_cache", "_ops_cache", "_closure_ops_cache",
+                 "_sharded_ops_cache", "_mesh_mirror_cache"):
+        if hasattr(problem, attr):
+            delattr(problem, attr)
+    assert plocal.precond_is_node_local(pc, n)
+    return pc, True
 
 
 def _sharded_sweep_precond(problem: Problem, mesh: Mesh):
@@ -78,11 +188,8 @@ def _sharded_sweep_precond(problem: Problem, mesh: Mesh):
     """
     from functools import partial
 
-    from jax.experimental.shard_map import shard_map
-
     from repro.kernels.block_jacobi.ref import block_jacobi_apply_ref
     from repro.kernels.trisweep.ref import block_sweep_ref
-    from repro.precond import local as plocal
 
     n = mesh.shape["nodes"]
     if n != problem.part.n_nodes:
@@ -92,20 +199,9 @@ def _sharded_sweep_precond(problem: Problem, mesh: Mesh):
         raise ValueError(
             f"node-local sweeps need one partition slab per mesh device: "
             f"mesh has {n} nodes, partition has {problem.part.n_nodes}")
-    pc = problem.precond
-    if plocal.precond_is_node_local(pc, n):
-        variant = f"node-local {pc.name}"
-    else:
-        pc = plocal.node_local_twin(problem)
-        problem.precond = pc
-        # closures cached against the replaced global-sweep operator must
-        # not survive the adoption (reconstruction would otherwise rebuild
-        # against a different P than the hot loop applies)
-        for attr in ("_recon_cache", "_ops_cache", "_closure_ops_cache"):
-            if hasattr(problem, attr):
-                delattr(problem, attr)
-        variant = f"node-local {pc.name} (auto twin)"
-        assert plocal.precond_is_node_local(pc, n)
+    pc, adopted = _ensure_node_local(problem, n)
+    variant = (f"node-local {pc.name} (auto twin)" if adopted
+               else f"node-local {pc.name}")
     per = (pc.m // pc.block) // n
     put = lambda a: jax.device_put(a, NamedSharding(mesh, P("nodes")))
 
@@ -160,16 +256,36 @@ def _sharded_chebyshev_precond(problem: Problem, mesh: Mesh):
     return apply_, "spmv-distributed chebyshev"
 
 
+def _ops_from_parts(backend, mv, precond, dot, variant, constrain):
+    """Assemble the (sharded | mesh-mirror) SolverOps bundle from its parts —
+    one definition of the update/dot structure, so the two runtimes cannot
+    drift apart numerically."""
+    from repro.core.ops import SolverOps
+
+    def matvec_dot(p):
+        q = mv(p)
+        return q, dot(p, q)
+
+    def update(alpha, x, r, p, q):
+        x_new = constrain(x + alpha * p)
+        r_new = constrain(r - alpha * q)
+        z_new = constrain(precond(r_new))
+        return x_new, r_new, z_new, dot(r_new, z_new)
+
+    return SolverOps(backend, mv, matvec_dot, precond, update, variant, dot)
+
+
 def sharded_solver_ops(problem: Problem, mesh: Mesh):
     """SolverOps bundle for the distributed runtime.
 
     The same ESRP/IMCR core from ``repro.core`` runs through this bundle
     unchanged: the SpMV is the all-gather sharded matvec, every vector
-    produced by the fused update is constrained back to the block-row
-    placement (so XLA keeps the whole iteration SPMD-partitioned instead of
-    replicating intermediates), and the pᵀq / rᵀz dots lower to the natural
-    psum across the "nodes" axis. Cached per (problem, mesh): the jitted
-    chunk runners treat the bundle as a static argument.
+    produced by the update is constrained back to the block-row placement
+    (so XLA keeps the whole iteration SPMD-partitioned instead of
+    replicating intermediates), and the pᵀq / rᵀz dots lower to per-node
+    partials + the natural psum across the "nodes" axis. Cached per
+    (problem, mesh): the jitted chunk runners treat the bundle as a static
+    argument.
 
     Every registered preconditioner is accepted: block-Jacobi keeps the
     seed's einsum over re-placed blocks, SSOR/IC(0) run their node-local
@@ -178,50 +294,103 @@ def sharded_solver_ops(problem: Problem, mesh: Mesh):
     ``_sharded_sweep_precond``), and Chebyshev distributes through the
     sharded SpMV. ``SolveReport.precond_variant`` records which variant ran;
     compare iteration counts against the global-sweep reference with
-    ``attach_local_delta``.
+    ``attach_local_delta``. ``mesh_mirror_ops`` builds the single-device
+    bundle this one is bit-identical to in f64.
     """
-    from repro.core.ops import SolverOps
-
+    cache = getattr(problem, "_sharded_ops_cache", None)
+    if cache is not None and mesh in cache:
+        return cache[mesh]
+    n = mesh.shape["nodes"]
+    vec = NamedSharding(mesh, P("nodes"))
+    mv = sharded_matvec(problem.a, mesh)
+    variant = ""
+    name = problem.precond_name
+    if name == "jacobi":
+        precond = problem.apply_precond
+    elif name == "chebyshev":
+        precond, variant = _sharded_chebyshev_precond(problem, mesh)
+    elif name in ("ssor", "ic0"):
+        precond, variant = _sharded_sweep_precond(problem, mesh)
+    else:
+        raise NotImplementedError(
+            f"sharded runtime has no distributed apply for "
+            f"preconditioner {name!r}")
+    constrain = lambda v: jax.lax.with_sharding_constraint(v, vec)
+    ops = _ops_from_parts("sharded", mv, precond,
+                          sharded_dot(mesh, problem.m, problem.part.bn),
+                          variant, constrain)
+    # re-fetch: building the bundle may have *cleared* the cache attribute
+    # (twin adoption drops every closure cache, this one included)
     cache = getattr(problem, "_sharded_ops_cache", None)
     if cache is None:
         cache = {}
         problem._sharded_ops_cache = cache
-    if mesh not in cache:
-        vec = NamedSharding(mesh, P("nodes"))
-        mv = sharded_matvec(problem.a, mesh)
+    cache[mesh] = ops
+    return ops
+
+
+def mesh_mirror_ops(problem: Problem, n_nodes: int):
+    """Single-device SolverOps with the *mesh's* reduction structure: the
+    sequential-k SpMV, per-node partial dots summed over the node axis, and
+    the same preconditioner variant the sharded runtime applies (adopting
+    the node-local twin exactly like ``_sharded_sweep_precond`` would).
+
+    This is the single-device reference trajectory the sharded runtime
+    rejoins **bit-identically in f64** — the distributed analogue of the
+    jnp-backend's kernel-mirrored reduction order. Use it as the reference
+    for sharded parity/scenario tests; against the plain jnp backend only
+    iteration-count equality holds (flat vs per-node dot association).
+    """
+    cache = getattr(problem, "_mesh_mirror_cache", None)
+    if cache is None:
+        cache = {}
+        problem._mesh_mirror_cache = cache
+    if n_nodes not in cache:
+        from repro.kernels.spmv.ref import spmv_seq_ref
+
+        if n_nodes != problem.part.n_nodes:
+            raise ValueError(
+                f"mesh mirror needs one partition slab per simulated node: "
+                f"asked n={n_nodes}, partition has {problem.part.n_nodes}")
+        a = problem.a
+        matvec = lambda x: spmv_seq_ref(a.data, a.idx, x)
         variant = ""
         name = problem.precond_name
         if name == "jacobi":
             precond = problem.apply_precond
         elif name == "chebyshev":
-            precond, variant = _sharded_chebyshev_precond(problem, mesh)
+            from repro.kernels.chebyshev.chebyshev import cheb_recurrence
+
+            pc = problem.precond
+            precond = lambda r: cheb_recurrence(matvec, r, lo=pc.lo,
+                                                hi=pc.hi, degree=pc.degree)
+            variant = "spmv-distributed chebyshev"
         elif name in ("ssor", "ic0"):
-            precond, variant = _sharded_sweep_precond(problem, mesh)
+            pc, adopted = _ensure_node_local(problem, n_nodes)
+            precond = lambda r: pc.apply(r, backend="jnp")
+            variant = (f"node-local {pc.name} (auto twin)" if adopted
+                       else f"node-local {pc.name}")
+            cache = {}
+            problem._mesh_mirror_cache = cache    # adoption dropped the attr
         else:
-            raise NotImplementedError(
-                f"sharded runtime has no distributed apply for "
-                f"preconditioner {name!r}")
-        constrain = lambda v: jax.lax.with_sharding_constraint(v, vec)
-
-        def matvec_dot(p):
-            q = mv(p)
-            return q, p @ q
-
-        def update(alpha, x, r, p, q):
-            x_new = constrain(x + alpha * p)
-            r_new = constrain(r - alpha * q)
-            z_new = constrain(precond(r_new))
-            return x_new, r_new, z_new, r_new @ z_new
-
-        cache[mesh] = SolverOps("sharded", mv, matvec_dot, precond, update,
-                                variant)
-    return cache[mesh]
+            raise NotImplementedError(name)
+        cache[n_nodes] = _ops_from_parts(
+            "mesh-mirror", matvec, precond,
+            mesh_dot(n_nodes, problem.m, problem.part.bn),
+            f"mesh-mirror {variant}".strip(), lambda v: v)
+    return cache[n_nodes]
 
 
 def attach_local_delta(report, reference) -> None:
     """Record on ``report`` the iteration-count delta of the node-local
     (additive-Schwarz) run vs the global-sweep reference solve — the price
-    of making the sweeps partition over the mesh axis."""
+    of making the sweeps partition over the mesh axis. If either run
+    stopped at max_iters without converging, ``converged_iter`` is just
+    where the budget ran out and the delta would be meaningless — left
+    ``None``."""
+    if not (report.converged and reference.converged):
+        report.local_delta_iters = None
+        return
     report.local_delta_iters = report.converged_iter - reference.converged_iter
 
 
@@ -237,10 +406,20 @@ def ring_halo_matvec(a: BlockEll, part, mesh: Mesh, halo_tiles: int):
     are sent to each ring neighbour per product (the paper's I_{s,s±1});
     communication volume = 2 * halo_tiles * bn * itemsize per node.
     """
-    from jax.experimental.shard_map import shard_map
-
     n = part.n_nodes
     cpt = part.col_tiles_per_node
+    if n < 2:
+        # a 1-node "ring" sends both halos to itself; ppermute with self
+        # edges silently yields zeros — reject at build time
+        raise ValueError(
+            f"ring halo exchange needs >= 2 nodes, got n_nodes={n}")
+    if not 1 <= halo_tiles <= cpt:
+        # halo_tiles > cpt would make xt[-halo_tiles:] silently slice the
+        # whole slab (and halo_tiles = 0 the empty one), failing later with
+        # an opaque concatenate shape error instead of here
+        raise ValueError(
+            f"halo_tiles={halo_tiles} must be within [1, col_tiles_per_node"
+            f"={cpt}]: each node can only send tiles it owns")
     # static check: band fits the halo
     idx = np.asarray(a.idx)
     nblk = np.asarray(a.nblk)
@@ -278,8 +457,35 @@ def ring_halo_matvec(a: BlockEll, part, mesh: Mesh, halo_tiles: int):
 
 
 # --------------------------------------------------------------------------- #
-# physical ASpMV redundancy pushes (paper §2.2.1 on the ICI ring)
+# physical ASpMV redundancy (paper §2.2.1 on the ICI ring)
 # --------------------------------------------------------------------------- #
+def _designated_sends(plan, part):
+    """Host-side static send lists for the §2.2.1 redundancy pushes: for
+    each k in 1..phi, an (n_nodes, width_k) int32 array of the column tiles
+    node s ships to its designated destination d_{s,k} (-1 = padding) —
+    every tile of s the destination holds after one ASpMV (natural + extra,
+    i.e. the queue entry the buddy can serve after a failure) — plus the
+    matching ppermute edge list."""
+    from repro.sparse.partition import neighbor
+
+    n = part.n_nodes
+    send_idx_k, perms = [], []
+    for k in range(1, plan.phi + 1):
+        rows = []
+        for s in range(n):
+            d = neighbor(s, k, n)
+            lo, hi = part.node_col_tiles(s)
+            rows.append([t for t in range(lo, hi) if plan.holders[t, d]
+                         and part.owner_of_col_tile(t) == s])
+        width = max(len(r) for r in rows)
+        idx = np.full((n, width), -1, np.int32)
+        for s, r in enumerate(rows):
+            idx[s, :len(r)] = r
+        send_idx_k.append(idx)
+        perms.append([(s, neighbor(s, k, n)) for s in range(n)])
+    return send_idx_k, perms
+
+
 def aspmv_push(plan, part, mesh: Mesh):
     """Materialize the augmented-SpMV redundancy sends as ring ppermutes.
 
@@ -290,37 +496,15 @@ def aspmv_push(plan, part, mesh: Mesh):
     ``push(x) -> list over k of (recv_tiles, recv_idx)`` where node d's row
     of ``recv_tiles`` holds the tile values it received (its share of the
     paper's redundancy queue entry) and ``recv_idx`` the *global* column-tile
-    ids (-1 = padding).
+    ids (-1 = padding). ``redundancy_queue`` is the hot-loop form: the same
+    sends scattered straight into the device-resident queue entry.
     """
     from functools import partial
-
-    from jax.experimental.shard_map import shard_map
-
-    from repro.sparse.partition import neighbor
 
     n = part.n_nodes
     cpt = part.col_tiles_per_node
     bn = part.bn
-
-    # host-side static send lists per k: natural I_{s,d} tiles are already in
-    # flight during SpMV; the queue holds natural + extra = everything the
-    # buddy can serve after a failure
-    send_idx_k = []
-    perms = []
-    for k in range(1, plan.phi + 1):
-        rows = []
-        for s in range(n):
-            d = neighbor(s, k, n)
-            lo, hi = part.node_col_tiles(s)
-            natural = [t for t in range(lo, hi) if plan.holders[t, d]
-                       and part.owner_of_col_tile(t) == s]
-            rows.append(natural)
-        width = max(len(r) for r in rows)
-        idx = np.full((n, width), -1, np.int32)
-        for s, r in enumerate(rows):
-            idx[s, :len(r)] = r
-        send_idx_k.append(idx)
-        perms.append([(s, neighbor(s, k, n)) for s in range(n)])
+    send_idx_k, perms = _designated_sends(plan, part)
 
     def make_one(k):
         idx = jax.device_put(jnp.asarray(send_idx_k[k]),
@@ -342,3 +526,278 @@ def aspmv_push(plan, part, mesh: Mesh):
 
     fns = [make_one(k) for k in range(plan.phi)]
     return lambda x: [f(x) for f in fns]
+
+
+def redundancy_queue(plan, part, mesh: Mesh):
+    """Device-resident ASpMV redundancy queue entry (paper §2.2.1).
+
+    One push physically places, on every node d, a copy of each column tile
+    the plan says d holds for another owner: the designated sends travel as
+    the same ring ``ppermute``s as ``aspmv_push`` (one hop per k — the
+    paper's explicit redundancy traffic), and tiles that already travel
+    *naturally* to a non-designated receiver are retained out of the
+    all-gather the SpMV performs anyway (the ESR zero-extra-communication
+    insight). Returns ``(hold_idx, push)``:
+
+      hold_idx  (n_nodes, width) int32, static: hold_idx[d, j] is the global
+                column tile whose copy lives in slot j of node d's queue
+                entry (-1 = padding).
+      push      x -> (n_nodes, width, bn): node d's row holds the tile
+                values it received/retained this push — its physical share
+                of the redundancy queue, sharded over the "nodes" axis.
+    """
+    from functools import partial
+
+    from repro.sparse.partition import neighbor
+
+    n = part.n_nodes
+    cpt = part.col_tiles_per_node
+    bn = part.bn
+    ct = part.col_tiles
+    owner = part.owner_of_col_tile(np.arange(ct))
+
+    hold_rows = [np.nonzero(plan.holders[:, d] & (owner != d))[0]
+                 for d in range(n)]
+    width = max((r.size for r in hold_rows), default=0)
+    if width == 0:
+        raise ValueError("redundancy plan holds no off-owner copies — "
+                         "nothing to queue (n_nodes < 2?)")
+    hold_idx = np.full((n, width), -1, np.int32)
+    slot_of = [dict() for _ in range(n)]
+    for d, r in enumerate(hold_rows):
+        hold_idx[d, :r.size] = r
+        slot_of[d].update({int(t): j for j, t in enumerate(r)})
+
+    send_idx_k, perms = _designated_sends(plan, part)
+    # per k: the receiving slot of each ppermute lane (node d receives the
+    # tiles its k-th *reverse* neighbour sent; the lane order is the
+    # sender's, so map sender-lane tile -> receiver hold slot)
+    recv_slot_k = []
+    for k in range(plan.phi):
+        wk = send_idx_k[k].shape[1]
+        rs = np.full((n, wk), -1, np.int32)
+        for s in range(n):
+            d = neighbor(s, k + 1, n)
+            for j, t in enumerate(send_idx_k[k][s]):
+                if t >= 0:
+                    rs[d, j] = slot_of[d][int(t)]
+        recv_slot_k.append(rs)
+    # natural retention: hold tiles not covered by any designated send
+    covered = [set() for _ in range(n)]
+    for k in range(plan.phi):
+        for s in range(n):
+            d = neighbor(s, k + 1, n)
+            covered[d].update(int(t) for t in send_idx_k[k][s] if t >= 0)
+    nat_rows = [[t for t in hold_rows[d] if int(t) not in covered[d]]
+                for d in range(n)]
+    wn = max(len(r) for r in nat_rows)
+    nat_idx = np.full((n, max(wn, 1)), -1, np.int32)
+    nat_slot = np.full((n, max(wn, 1)), -1, np.int32)
+    for d, r in enumerate(nat_rows):
+        for j, t in enumerate(r):
+            nat_idx[d, j] = t
+            nat_slot[d, j] = slot_of[d][int(t)]
+
+    put = lambda a: jax.device_put(jnp.asarray(a),
+                                   NamedSharding(mesh, P("nodes")))
+    statics = ([put(i) for i in send_idx_k] + [put(r) for r in recv_slot_k]
+               + [put(nat_idx), put(nat_slot)])
+    phi = plan.phi
+    out_sh = NamedSharding(mesh, P("nodes"))
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P("nodes"),) * (1 + len(statics)),
+             out_specs=P("nodes"), check_rep=False)
+    def push(x_local, *stat):
+        send = stat[:phi]
+        rslot = stat[phi:2 * phi]
+        nidx, nslot = stat[2 * phi], stat[2 * phi + 1]
+        xt = x_local.reshape(cpt, bn)
+        me = jax.lax.axis_index("nodes")
+        # scratch row `width` swallows the padding-lane writes, so a pad can
+        # never overwrite (or 0.0-perturb) a real slot
+        buf = jnp.zeros((width + 1, bn), x_local.dtype)
+        for k in range(phi):
+            sidx = send[k][0]
+            local = jnp.clip(sidx - me * cpt, 0, cpt - 1)
+            payload = jnp.where((sidx >= 0)[:, None], xt[local], 0.0)
+            recv = jax.lax.ppermute(payload, "nodes", perms[k])
+            slot = rslot[k][0]
+            buf = buf.at[jnp.where(slot >= 0, slot, width)].set(recv)
+        if wn:
+            xg = jax.lax.all_gather(xt, "nodes", tiled=True)   # (ct, bn)
+            ni, ns = nidx[0], nslot[0]
+            vals = xg[jnp.clip(ni, 0, ct - 1)]
+            buf = buf.at[jnp.where(ns >= 0, ns, width)].set(vals)
+        return buf[None, :width]
+
+    fn = lambda x: jax.lax.with_sharding_constraint(push(x, *statics),
+                                                    out_sh)
+    return hold_idx, fn
+
+
+def _node_axis_zeroer(mesh: Mesh, axis: int):
+    """shard_map op zeroing entire shards of the devices flagged in ``dead``
+    — the physical failure injection (no gather/replicate round-trip; each
+    device tests only its own axis index). ``axis`` is the array axis the
+    "nodes" mesh axis shards."""
+    spec = P(*([None] * axis + ["nodes"]))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=(spec, P()),
+                       out_specs=spec, check_rep=False)
+    def zero(v, dead):
+        me = jax.lax.axis_index("nodes")
+        return jnp.where(dead[me], jnp.zeros_like(v), v)
+
+    return zero
+
+
+class ShardedFailureRuntime:
+    """Device-resident failure semantics for ``solve_resilient`` on the mesh.
+
+    Plugs the three physical pieces into the driver:
+
+      * ``init_queue`` / ``queue_push`` — the ``ESRPState.rq`` redundancy
+        queue: per-device copies physically placed on the designated
+        neighbours at every storage push (``redundancy_queue``).
+      * ``lose_esrp`` / ``lose_pcg`` — failure injection as a ``shard_map``
+        zeroing of the failed devices' shards only: live vectors, starred
+        locals, the device's own queue rows AND the copies it held for
+        others (a failed node loses everything node-resident, paper §4).
+      * ``assemble_pair`` — reconstruction inputs: p^(j-1), p^(j) restricted
+        to the failed rows are read from *surviving devices'* ``rq`` shards
+        (host-side static source choice via ``RedundancyPlan.copy_sources``,
+        stricter than the static plan: copies wiped by an earlier event are
+        stale until the next storage push refreshes them).
+
+    Also accounts the per-preconditioner static-state reload a replacement
+    node performs (``precond.local.static_reload_bytes``) —
+    ``EventReport.precond_reload_bytes``.
+    """
+
+    def __init__(self, problem: Problem, mesh: Mesh):
+        n = mesh.shape["nodes"]
+        if n != problem.part.n_nodes:
+            raise ValueError(
+                f"failure runtime needs one partition slab per mesh device: "
+                f"mesh has {n} nodes, partition has {problem.part.n_nodes}")
+        self.problem = problem
+        self.mesh = mesh
+        self.n = n
+        self.part = problem.part
+        self.plan = None
+        self.queue_push = None
+        self._hold_idx = None
+        self._slot_of = None
+        self._queues = {}   # phi -> (hold_idx, push, slot_of): the push
+        #                     closure must keep a stable identity across
+        #                     solves (the jitted chunk runners key their
+        #                     compile cache on it)
+        self._zero_rows = _node_axis_zeroer(mesh, 0)   # (M,) vectors
+        self._zero_ax1 = _node_axis_zeroer(mesh, 1)    # (3, M) and (3, n, …)
+        self._wiped: dict[int, int] = {}   # device -> newest q tag when its
+        #                                    held copies were zeroed
+        self.last_sources: tuple[int, ...] = ()
+
+    # -- driver hooks ------------------------------------------------------ #
+    def bind_plan(self, plan) -> None:
+        """Called by the driver once the RedundancyPlan exists: build (or
+        reuse — the driver builds a fresh plan object per solve, but the
+        layout only depends on φ) the physical queue layout + push closure,
+        and reset the wiped-copy tracking for the new run."""
+        self.plan = plan
+        self._wiped.clear()
+        entry = self._queues.get(plan.phi)
+        if entry is None:
+            hold_idx, push = redundancy_queue(plan, self.part, self.mesh)
+            slot_of = [{int(t): j for j, t in enumerate(row) if t >= 0}
+                       for row in hold_idx]
+            entry = self._queues[plan.phi] = (hold_idx, push, slot_of)
+        self._hold_idx, self.queue_push, self._slot_of = entry
+
+    def init_queue(self, st, reset: bool = False):
+        """Attach the empty (3, n, width, bn) device-resident queue to a
+        fresh ESRPState (placed on the node axis). reset=True also forgets
+        wiped-copy tracking (a restart rebuilds everything from scratch)."""
+        if reset:
+            self._wiped.clear()
+        w = self._hold_idx.shape[1]
+        rq = jax.device_put(
+            jnp.zeros((3, self.n, w, self.part.bn), self.problem.b.dtype),
+            NamedSharding(self.mesh, P(None, "nodes")))
+        return st._replace(rq=rq)
+
+    def _dead(self, failed) -> jnp.ndarray:
+        dead = np.zeros(self.n, bool)
+        dead[list(failed)] = True
+        return jnp.asarray(dead)
+
+    def lose_pcg(self, pcg, failed):
+        """Zero the failed devices' shards of the live vectors (x, r, z, p)."""
+        dead = self._dead(failed)
+        l = lambda v: self._zero_rows(v, dead)
+        return pcg._replace(x=l(pcg.x), r=l(pcg.r), z=l(pcg.z), p=l(pcg.p))
+
+    def lose_esrp(self, st, failed):
+        """Full §4 injection for an ESRPState: live vectors, starred locals,
+        the failed devices' own queue rows, and the redundancy copies they
+        held for others (their ``rq`` rows)."""
+        dead = self._dead(failed)
+        l = lambda v: self._zero_rows(v, dead)
+        st = st._replace(
+            pcg=self.lose_pcg(st.pcg, failed),
+            x_s=l(st.x_s), r_s=l(st.r_s), z_s=l(st.z_s), p_s=l(st.p_s),
+            q=self._zero_ax1(st.q, dead))
+        if not isinstance(st.rq, tuple):
+            st = st._replace(rq=self._zero_ax1(st.rq, dead))
+        return st
+
+    def mark_wiped(self, failed, newest_tag: int) -> None:
+        """Record that the failed devices' held copies are gone: every queue
+        entry tagged <= ``newest_tag`` has their rows zeroed. Only entries
+        pushed *later* (a strictly newer tag) carry fresh copies again."""
+        for d in failed:
+            self._wiped[int(d)] = int(newest_tag)
+
+    def _valid_sources(self, read_tag: int) -> np.ndarray:
+        """Which devices hold fresh copies in a queue entry tagged
+        ``read_tag``. Must be the tag of the *oldest slot actually read* —
+        validating against the newest tag would declare a device fresh as
+        soon as any later push landed, even though recovery falls back to a
+        pre-refresh slot pair whose rows are still zero (e.g. a second
+        failure striking exactly on a stage's first push)."""
+        return np.array([d not in self._wiped
+                         or read_tag > self._wiped[d]
+                         for d in range(self.n)])
+
+    def assemble_pair(self, st, prev_slot: int, curr_slot: int, failed):
+        """Rebuild full-length p^(j-1), p^(j): surviving rows from each
+        node's own queue history (``st.q`` — failed rows were zeroed by the
+        injection), failed rows gathered from the surviving devices'
+        device-resident ``rq`` shards. Returns (p_prev, p_curr, sources)."""
+        from repro.core import failures
+
+        oldest_read = int(st.q_tags[prev_slot])
+        tiles, src = self.plan.copy_sources(
+            failed, self._valid_sources(oldest_read))
+        slots = np.array([self._slot_of[int(d)][int(t)]
+                          for t, d in zip(tiles, src)], np.int32)
+        f_rows = jnp.asarray(failures.failed_rows(self.part, list(failed)))
+        src_j = jnp.asarray(src.astype(np.int32))
+        slots_j = jnp.asarray(slots)
+
+        def fill(slot):
+            vals = st.rq[slot][src_j, slots_j]           # (n_tiles, bn)
+            return st.q[slot].at[f_rows].set(vals.reshape(-1))
+
+        self.last_sources = tuple(sorted({int(d) for d in src}))
+        return fill(prev_slot), fill(curr_slot), self.last_sources
+
+    def precond_reload(self, failed):
+        """Per-preconditioner-state survival check + safe-storage reload
+        accounting for the replacement nodes (SSOR/IC(0) slab strips rebuild
+        from the COO; Chebyshev bounds are replicated scalars; block-Jacobi
+        reloads its inverted diagonal blocks)."""
+        from repro.precond.local import static_reload_bytes
+
+        return static_reload_bytes(self.problem, failed)

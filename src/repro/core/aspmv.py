@@ -73,6 +73,49 @@ class RedundancyPlan:
         alive[np.asarray(failed)] = False
         return (self.holders & alive[None, :]).any(axis=1)
 
+    def copy_sources(self, failed: list[int],
+                     valid: np.ndarray | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Device-resident copy sourcing: for every column tile owned by a
+        failed node, pick the surviving holder whose *physical* queue shard
+        the replacement will read (preferring the designated ring
+        neighbours d_{s,k}, the paper's recovery senders).
+
+        ``valid[d] = False`` marks devices whose held copies are stale —
+        zeroed by an earlier failure event and not yet refreshed by a
+        storage push (``ShardedFailureRuntime`` tracks this). That is
+        exactly the gap between the static plan's ``check_event`` and
+        surviving *device state*: a scenario the plan calls survivable can
+        still be physically unrecoverable until the next push.
+
+        Returns (tiles, sources) — ascending failed tiles and the device
+        each copy is read from; raises when a tile has no live fresh copy.
+        """
+        from repro.sparse.partition import neighbors
+
+        n = self.n_nodes
+        ok = np.ones(n, bool)
+        ok[np.asarray(list(failed))] = False
+        if valid is not None:
+            ok &= np.asarray(valid, bool)
+        tiles = np.concatenate(
+            [np.arange(*self.part.node_col_tiles(s)) for s in sorted(failed)])
+        src = np.empty(tiles.size, np.int32)
+        for i, t in enumerate(tiles):
+            owner = int(self.part.owner_of_col_tile(t))
+            cands = np.nonzero(self.holders[t] & ok)[0]
+            cands = cands[cands != owner]
+            if cands.size == 0:
+                holders = np.nonzero(self.holders[t])[0].tolist()
+                raise RuntimeError(
+                    f"tile {t} (owner {owner}): every physical redundancy "
+                    f"copy is dead or stale — holders {holders}, failed "
+                    f"{sorted(failed)}; a copy wiped by an earlier event "
+                    f"only revives at the next storage push")
+            des = [d for d in neighbors(owner, self.phi, n) if d in cands]
+            src[i] = des[0] if des else int(cands[0])
+        return tiles, src
+
     def check_event(self, failed: list[int]) -> None:
         """Per-event φ-copy survival analysis: every tile owned by a failed
         node must keep at least one copy on a survivor, or the event is

@@ -54,6 +54,14 @@ class EventReport:
     inner_rel: float             # Alg.2 line-8 inner solve (nan: imcr/none)
     pff_iters: int = -1          # Alg.2 line-6 inner-CG iterations (-1 when
     #                              the preconditioner has a closed form)
+    precond_reload_bytes: int = 0   # static preconditioner state the
+    #                              replacement reloads from safe storage
+    #                              (sharded runtime; see
+    #                              precond.local.static_reload_bytes)
+    queue_src_nodes: tuple[int, ...] = ()   # devices whose *physical* queue
+    #                              shards supplied the failed rows'
+    #                              p-copies (sharded runtime; empty on the
+    #                              host-side simulator)
 
 
 @dataclasses.dataclass
@@ -66,7 +74,9 @@ class SolveReport:
     runtime_s: float
     recovery_s: float            # reconstruction ops only, summed over events
     wasted_iters: int            # rollback distance, summed over events
-    target_iter: int             # last event's reconstruction point (-1 = restart)
+    target_iter: int             # last event's reconstruction point; -1 when
+    #                              no reconstruction happened (restart, or no
+    #                              failure event at all — see ``events``)
     inner_rel: float             # last event's Alg.2 line-8 inner-solve residual
     drift: float                 # paper Eq. (2)
     aspmv_natural_bytes: int = 0
@@ -78,6 +88,15 @@ class SolveReport:
     local_delta_iters: Optional[int] = None   # iteration-count delta of a
     #                              node-local run vs the global-sweep
     #                              reference (shard.attach_local_delta)
+    converged: bool = True       # False: the run stopped at max_iters with
+    #                              ||r|| still above threshold
+    precond_reload_bytes: int = 0   # summed over events (sharded runtime)
+    x: Optional[object] = dataclasses.field(default=None, repr=False)
+    #                              final iterate (device array) — lets parity
+    #                              tests assert bit-identical rejoin; rel/
+    #                              drift above are host-side norms whose flat
+    #                              reduction may differ from the mesh's by
+    #                              1 ulp even on identical vectors
 
 
 def _find_convergence(norms: np.ndarray, thresh: float) -> int:
@@ -113,6 +132,10 @@ def solve_resilient(
     gated: bool = True,                # cond-gated storage/rr bookkeeping
     pff_precond: bool = True,          # precondition the Alg.2 line-6 inner
     #                                    CG (False = historical plain CG)
+    failure_runtime=None,              # comm.shard.ShardedFailureRuntime:
+    #                                    device-resident redundancy queue,
+    #                                    shard_map injection, and recovery
+    #                                    reads from surviving devices' shards
 ) -> SolveReport:
     if ops is None:
         if matvec is not None:
@@ -141,20 +164,29 @@ def solve_resilient(
     part = problem.part
 
     plan: Optional[RedundancyPlan] = None
+    push = None
     if strategy == "esrp":
         plan = build_plan(problem.a, part, phi)   # static, verified φ+1 copies
+        if failure_runtime is not None:
+            # device-resident redundancy: the storage pushes physically
+            # place each node's p-tiles on the designated holder devices
+            failure_runtime.bind_plan(plan)
+            push = failure_runtime.queue_push
+    dot = getattr(ops, "dot", None)
 
     if strategy == "imcr":
-        st = imcr.imcr_init(matvec, precond, b)
+        st = imcr.imcr_init(matvec, precond, b, dot=dot)
         run = lambda s, n: imcr.run_chunk(s, ops, T, phi,
                                           part.rows_per_node, n,
                                           thresh_dev, gated)
     elif strategy == "esrp":
-        st = esrp.esrp_init(matvec, precond, b)
+        st = esrp.esrp_init(matvec, precond, b, dot=dot)
+        if failure_runtime is not None:
+            st = failure_runtime.init_queue(st)
         run = lambda s, n: esrp.run_chunk(s, ops, T, n, thresh_dev,
-                                          rr_every, gated, b)
+                                          rr_every, gated, b, push)
     elif strategy == "none":
-        st = esrp.esrp_init(matvec, precond, b)   # T=max => never stores
+        st = esrp.esrp_init(matvec, precond, b, dot=dot)  # T=max: no stores
         run = lambda s, n: esrp.run_chunk(s, ops, 1 << 30, n, thresh_dev,
                                           rr_every, gated, b)
     else:
@@ -165,7 +197,7 @@ def solve_resilient(
     event_reports: list[EventReport] = []
     recovery_s = 0.0
     wasted = 0
-    target = -2
+    target = -1       # "no reconstruction point": restart or no event at all
     inner_rel = float("nan")
     # rr gating applies to the esrp/none runners only; imcr's chunk runner
     # has no replacement gate, so its resume must not add one either
@@ -206,6 +238,7 @@ def solve_resilient(
             total_iters = int(pcg.j)
             resume_numeric_only = False
             if float(jnp.linalg.norm(pcg.r)) < thresh:
+                converged = True
                 break
             continue
 
@@ -240,25 +273,30 @@ def solve_resilient(
             failed = list(ev.nodes)
             ev_inner = float("nan")
             ev_pff = -1
+            ev_reload = 0
+            ev_src: tuple[int, ...] = ()
             if strategy == "imcr":
                 st, ev_wasted, target, rec_t = _imcr_failure(
-                    st, part, failed, phi, matvec, precond, b)
+                    st, part, failed, phi, matvec, precond, b,
+                    dot=dot, fruntime=failure_runtime)
             elif strategy == "none":
                 # no redundancy of any kind: nothing can rebuild the lost
                 # entries — cleanly restart from scratch, counting the work
                 st, ev_wasted, target, rec_t = _none_failure(
-                    st, matvec, precond, b)
+                    st, matvec, precond, b, dot=dot)
             else:
-                st, ev_wasted, target, ev_inner, rec_t, ev_pff = \
-                    _esrp_failure(problem, plan, st, failed, T, matvec,
-                                  precond, pff_precond)
+                (st, ev_wasted, target, ev_inner, rec_t, ev_pff, ev_reload,
+                 ev_src) = _esrp_failure(
+                    problem, plan, st, failed, T, ops, pff_precond,
+                    fruntime=failure_runtime, push=push)
                 inner_rel = ev_inner
             recovery_s += rec_t
             wasted += ev_wasted
             event_reports.append(EventReport(
                 iter=ev.iter, nodes=ev.nodes, target_iter=target,
                 wasted_iters=ev_wasted, recovery_s=rec_t,
-                inner_rel=ev_inner, pff_iters=ev_pff))
+                inner_rel=ev_inner, pff_iters=ev_pff,
+                precond_reload_bytes=ev_reload, queue_src_nodes=ev_src))
             total_iters = int(st.pcg.j)
             resume_numeric_only = target >= 0
     runtime = time.perf_counter() - t0
@@ -277,35 +315,59 @@ def solve_resilient(
         drift=drift, aspmv_natural_bytes=nat_bytes,
         aspmv_total_bytes=tot_bytes, run_calls=run_calls,
         events=event_reports,
-        precond_variant=getattr(ops, "variant", ""))
+        precond_variant=getattr(ops, "variant", ""),
+        converged=converged,
+        precond_reload_bytes=sum(e.precond_reload_bytes
+                                 for e in event_reports),
+        x=pcg.x)
 
 
 # --------------------------------------------------------------------------- #
-def _none_failure(st: esrp.ESRPState, matvec, precond, b):
+def _none_failure(st: esrp.ESRPState, matvec, precond, b, dot=None):
     """strategy="none": no redundant copies, no checkpoints — every failure
     is a full restart with target_iter = -1 and J wasted iterations."""
     J = int(st.pcg.j)
-    return esrp.esrp_init(matvec, precond, b), J, -1, 0.0
+    return esrp.esrp_init(matvec, precond, b, dot=dot), J, -1, 0.0
 
 
 # --------------------------------------------------------------------------- #
 def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
-                  failed: list[int], T: int, matvec, precond,
-                  pff_precond: bool = True):
+                  failed: list[int], T: int, solver_ops,
+                  pff_precond: bool = True, fruntime=None, push=None):
     """Failure strikes during iteration J right after its (A)SpMV: run the
-    iteration-J storage prelude, zero the failed nodes' dynamic data, then
-    reconstruct (Alg. 2) and rebuild a consistent post-stage ESRP state."""
+    iteration-J storage prelude (including, on the sharded runtime, the
+    physical redundancy sends that were already in flight), lose the failed
+    nodes' dynamic data, then reconstruct (Alg. 2) and rebuild a consistent
+    post-stage ESRP state.
+
+    With ``fruntime`` (comm.shard.ShardedFailureRuntime) the whole failure
+    path is device-resident: injection is a shard_map zeroing of the failed
+    devices' shards only, and the p^(j-1)/p^(j) copies feeding Alg. 2 are
+    read out of the *surviving devices'* queue shards (``ESRPState.rq``),
+    never from a replicated array. Without it (the single-device simulator)
+    the queue is the host-visible (3, M) array and injection is the
+    replicated ``jnp.where`` of the paper's simulation protocol.
+    """
     part = problem.part
+    matvec, precond = solver_ops.matvec, solver_ops.precond
     J = int(st.pcg.j)
-    st = jax.jit(esrp.esrp_prelude, static_argnums=(1, 2))(st, T, True)
+    st = jax.jit(esrp.esrp_prelude, static_argnums=(1, 2, 3))(st, T, True,
+                                                              push)
 
     # --- the failure: all dynamic data on failed nodes is lost -------------
-    mask = failed_row_mask(part, failed)
-    lose = lambda v: zero_failed(v, mask)
-    pcg = st.pcg._replace(x=lose(st.pcg.x), r=lose(st.pcg.r),
-                          z=lose(st.pcg.z), p=lose(st.pcg.p))
-    st = st._replace(pcg=pcg, x_s=lose(st.x_s), r_s=lose(st.r_s),
-                     z_s=lose(st.z_s), p_s=lose(st.p_s))
+    if fruntime is not None:
+        st = fruntime.lose_esrp(st, failed)
+        reload_desc, reload_bytes = fruntime.precond_reload(failed)
+        del reload_desc
+    else:
+        mask = failed_row_mask(part, failed)
+        lose = lambda v: zero_failed(v, mask)
+        pcg = st.pcg._replace(x=lose(st.pcg.x), r=lose(st.pcg.r),
+                              z=lose(st.pcg.z), p=lose(st.pcg.p))
+        st = st._replace(pcg=pcg, x_s=lose(st.x_s), r_s=lose(st.r_s),
+                         z_s=lose(st.z_s), p_s=lose(st.p_s))
+        reload_bytes = 0
+    pcg = st.pcg
 
     # per-event φ-copy survival analysis: a redundant copy of every failed
     # tile must outlive this event's failed set (topology-aware, so a lucky
@@ -315,8 +377,10 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     target, prev_slot, curr_slot = esrp.recovery_point(st, T)
     if target < 0:
         # before the first completed storage stage: restart from scratch
-        st2 = esrp.esrp_init(matvec, precond, problem.b)
-        return st2, J, -1, float("nan"), 0.0, -1
+        st2 = esrp.esrp_init(matvec, precond, problem.b, dot=solver_ops.dot)
+        if fruntime is not None:
+            st2 = fruntime.init_queue(st2, reset=True)
+        return st2, J, -1, float("nan"), 0.0, -1, reload_bytes, ()
 
     if T == 1:
         # ESR: no rollback — reconstruct the *live* iteration J from the
@@ -332,6 +396,16 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
         # scalar is the exact value of the uncorrupted trajectory.
         rz = st.rz_s
 
+    # the redundant p-copies Alg. 2 reads: on the sharded runtime the failed
+    # rows are assembled from the surviving devices' physical queue shards
+    # (the injection zeroed the failed rows of ``q`` itself); the simulator
+    # reads the host-side queue directly
+    if fruntime is not None:
+        p_prev, p_curr, src_nodes = fruntime.assemble_pair(
+            st, prev_slot, curr_slot, failed)
+    else:
+        p_prev, p_curr, src_nodes = st.q[prev_slot], st.q[curr_slot], ()
+
     # static-data reload (excluded from the recovery timing, paper §4) —
     # cached per (problem, failed-set) so repeated benchmark runs also reuse
     # the jitted inner solve (a C framework has no JIT warmup; timing it
@@ -345,20 +419,20 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
         ops = esr.ReconstructionOps.build(problem, failed,
                                           pff_precond=pff_precond)
         # warm the jitted reconstruction (compile excluded from timing)
-        esr.reconstruct(ops, p_prev=st.q[prev_slot], p_curr=st.q[curr_slot],
+        esr.reconstruct(ops, p_prev=p_prev, p_curr=p_curr,
                         beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv
                         )[0].block_until_ready()
         cache[key] = ops
     ops = cache[key]
     t0 = time.perf_counter()
     x_f, r_f, z_f, inner_rel = esr.reconstruct(
-        ops, p_prev=st.q[prev_slot], p_curr=st.q[curr_slot],
+        ops, p_prev=p_prev, p_curr=p_curr,
         beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv)
     f_rows = jnp.asarray(ops.f_rows)
     x = x_surv.at[f_rows].set(x_f)
     r = r_surv.at[f_rows].set(r_f)
     z = z_surv.at[f_rows].set(z_f)
-    p = p_surv.at[f_rows].set(st.q[curr_slot][f_rows])
+    p = p_surv.at[f_rows].set(p_curr[f_rows])
     jax.block_until_ready(x)
     rec_t = time.perf_counter() - t0
 
@@ -367,17 +441,26 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     empty = jnp.zeros_like(p)
     st2 = esrp.ESRPState(
         pcg=new_pcg,
-        q=jnp.stack([empty, st.q[prev_slot], st.q[curr_slot]]),
+        q=jnp.stack([empty, p_prev, p_curr]),
         q_tags=jnp.asarray([-1, target - 1, target], jnp.int32),
         x_s=x, r_s=r, z_s=z, p_s=p, beta_s=beta_prev, rz_s=rz,
         star_tag=jnp.asarray(target, jnp.int32))
+    if fruntime is not None:
+        # survivors keep their physical copies; the replacement's shard
+        # stays empty (it was wiped) until the next storage push refreshes
+        # every device's entry — tracked so a burst event cannot silently
+        # read a stale copy
+        st2 = st2._replace(rq=jnp.stack(
+            [jnp.zeros_like(st.rq[0]), st.rq[prev_slot], st.rq[curr_slot]]))
+        fruntime.mark_wiped(failed, target)
     pff_stats = getattr(ops.p_solve, "stats", None) if ops.p_solve else None
     pff_iters = pff_stats["iters"] if pff_stats else -1
-    return st2, J - target, target, float(inner_rel), rec_t, pff_iters
+    return (st2, J - target, target, float(inner_rel), rec_t, pff_iters,
+            reload_bytes, src_nodes)
 
 
 def _imcr_failure(st: imcr.IMCRState, part, failed: list[int], phi: int,
-                  matvec, precond, b):
+                  matvec, precond, b, dot=None, fruntime=None):
     """IMCR: zero the failed nodes' live data, then everyone rolls back to the
     last checkpoint (replacements fetch their parts from surviving buddies).
 
@@ -389,13 +472,18 @@ def _imcr_failure(st: imcr.IMCRState, part, failed: list[int], phi: int,
     # per-event buddy-survival analysis (|failed| ≤ φ always passes; a
     # spread-out larger set may too — see imcr.check_survivable)
     imcr.check_survivable(failed, phi, part.n_nodes)
-    mask = failed_row_mask(part, failed)
-    lose = lambda v: zero_failed(v, mask)
-    st = st._replace(pcg=st.pcg._replace(
-        x=lose(st.pcg.x), r=lose(st.pcg.r), z=lose(st.pcg.z), p=lose(st.pcg.p)))
+    if fruntime is not None:
+        # sharded runtime: zero only the failed devices' shards (shard_map)
+        st = st._replace(pcg=fruntime.lose_pcg(st.pcg, failed))
+    else:
+        mask = failed_row_mask(part, failed)
+        lose = lambda v: zero_failed(v, mask)
+        st = st._replace(pcg=st.pcg._replace(
+            x=lose(st.pcg.x), r=lose(st.pcg.r), z=lose(st.pcg.z),
+            p=lose(st.pcg.p)))
     tag = int(st.ck_tag)
     if tag < 0:                      # failure before the first checkpoint
-        return imcr.imcr_init(matvec, precond, b), J, -1, 0.0
+        return imcr.imcr_init(matvec, precond, b, dot=dot), J, -1, 0.0
     t0 = time.perf_counter()
     pcg = imcr.recover(st)           # fetch-from-buddy (restore the copies)
     jax.block_until_ready(pcg.x)

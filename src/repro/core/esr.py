@@ -30,6 +30,13 @@ multi-node event of the scenario engine resolves to ONE reconstruction over
 the union I_f of all its failed rows (arXiv:1907.13077's simultaneous case);
 the inner solves are zero-RHS-safe (``run_pcg`` returns x = 0, rel = 0.0
 instead of NaN when a strip of v or w is exactly zero).
+
+Where p^(j-1), p^(j) come from is the caller's business: the single-device
+simulator passes the host-visible queue slots, while the sharded runtime
+assembles them from the *surviving devices'* physical queue shards
+(``comm.shard.ShardedFailureRuntime.assemble_pair``) — ``reconstruct`` only
+ever reads the failed rows of these vectors plus the surviving rows of
+r, x, so either source yields the same algebra.
 """
 from __future__ import annotations
 

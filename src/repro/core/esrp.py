@@ -44,7 +44,10 @@ from repro.core.pcg import (PCGState, pcg_init, pcg_iterate_ops,
 
 class ESRPState(NamedTuple):
     pcg: PCGState
-    q: jax.Array          # (3, M) redundant copies of p (newest = slot 2)
+    q: jax.Array          # (3, M) redundant copies of p (newest = slot 2).
+    #                       Block-row placement: each node's rows are its OWN
+    #                       pushed history (survivor anchor); the copies a
+    #                       failure recovers from live in ``rq``.
     q_tags: jax.Array     # (3,) int32 iteration of each copy, -1 = empty
     x_s: jax.Array        # starred locals (rollback anchor), iteration j*
     r_s: jax.Array
@@ -53,11 +56,19 @@ class ESRPState(NamedTuple):
     beta_s: jax.Array     # β* = β^(j*-1)
     rz_s: jax.Array       # r*ᵀz* (avoids a recompute on rollback)
     star_tag: jax.Array   # j*, -1 = none
+    rq: jax.Array | tuple = ()   # device-resident redundancy-queue copies:
+    #                       (3, n_nodes, width, bn), node axis sharded over
+    #                       the mesh — row d holds the tile values node d
+    #                       received at each storage push (paper §2.2.1's
+    #                       queue entry on the designated neighbours). Empty
+    #                       tuple on the single-device simulator. Tags are
+    #                       shared with ``q_tags``.
 
 
 def esrp_init(matvec, precond, b: jax.Array,
-              x0: jax.Array | None = None) -> ESRPState:
-    pcg = pcg_init(matvec, precond, b, x0)
+              x0: jax.Array | None = None,
+              dot=None) -> ESRPState:
+    pcg = pcg_init(matvec, precond, b, x0, dot)
     z = jnp.zeros_like(b)
     return ESRPState(
         pcg=pcg,
@@ -77,11 +88,20 @@ def storage_flags(j: jax.Array, T: int):
     return push1 | push2, push2
 
 
-def push_queue(st: ESRPState, tag: jax.Array) -> ESRPState:
-    """ASpMV side effect: rotate the queue-of-3, newest copy = current p."""
+def push_queue(st: ESRPState, tag: jax.Array, push=None) -> ESRPState:
+    """ASpMV side effect: rotate the queue-of-3, newest copy = current p.
+
+    ``push`` (comm.shard.redundancy_queue) is the *physical* redundancy
+    send: it ppermutes/retains the current p's column tiles onto their
+    designated holder devices and the received payload rotates into ``rq``
+    — the device-resident queue entry recovery reads on the mesh."""
     q = jnp.concatenate([st.q[1:], st.pcg.p[None]], axis=0)
     tags = jnp.concatenate([st.q_tags[1:], tag[None]])
-    return st._replace(q=q, q_tags=tags)
+    st = st._replace(q=q, q_tags=tags)
+    if push is not None:
+        entry = push(st.pcg.p)                     # (n_nodes, width, bn)
+        st = st._replace(rq=jnp.concatenate([st.rq[1:], entry[None]], axis=0))
+    return st
 
 
 def capture_stars(st: ESRPState, tag: jax.Array) -> ESRPState:
@@ -95,25 +115,30 @@ def capture_stars(st: ESRPState, tag: jax.Array) -> ESRPState:
                        beta_s=p.beta, rz_s=p.rz, star_tag=tag)
 
 
-def esrp_prelude(st: ESRPState, T: int, gated: bool = True) -> ESRPState:
+def esrp_prelude(st: ESRPState, T: int, gated: bool = True,
+                 push=None) -> ESRPState:
     """The storage bookkeeping of iteration j (everything that happens at the
     (A)SpMV point, *before* the numeric update). Split out so the failure
     driver can inject a failure exactly mid-iteration, after the push.
 
     gated=True executes the push/star branches under ``lax.cond`` — on the
-    non-storage iterations of the period nothing is copied. gated=False is
-    the seed's ``jnp.where``-over-the-state-tree (copies the queue every
-    iteration; kept for the microbenchmark comparison).
+    non-storage iterations of the period nothing is copied *and no
+    redundancy traffic moves* (``push``'s ppermutes run only on storage
+    iterations, like the paper's ASpMV swap-in). gated=False is the seed's
+    ``jnp.where``-over-the-state-tree (copies the queue every iteration;
+    kept for the microbenchmark comparison).
     """
     j = st.pcg.j
-    push, star = storage_flags(j, T)
+    do_push, star = storage_flags(j, T)
     if gated:
-        st = jax.lax.cond(push, lambda s: push_queue(s, j), lambda s: s, st)
+        st = jax.lax.cond(do_push, lambda s: push_queue(s, j, push),
+                          lambda s: s, st)
         st = jax.lax.cond(star, lambda s: capture_stars(s, j), lambda s: s,
                           st)
     else:
         st = jax.tree.map(
-            lambda a, b: jnp.where(push, a, b), push_queue(st, j), st)
+            lambda a, b: jnp.where(do_push, a, b), push_queue(st, j, push),
+            st)
         st = jax.tree.map(
             lambda a, b: jnp.where(star, a, b), capture_stars(st, j), st)
     return st
@@ -149,7 +174,9 @@ def numeric_step(pcg: PCGState, ops: SolverOps,
         def replace(s: PCGState) -> PCGState:
             r_true = b - ops.matvec(s.x)
             z_true = ops.precond(r_true)
-            return s._replace(r=r_true, z=z_true, rz=r_true @ z_true)
+            rz = (r_true @ z_true if ops.dot is None
+                  else ops.dot(r_true, z_true))
+            return s._replace(r=r_true, z=z_true, rz=rz)
 
         if gated:
             pcg = jax.lax.cond(do, replace, lambda s: s, pcg)
@@ -161,18 +188,18 @@ def numeric_step(pcg: PCGState, ops: SolverOps,
 
 def esrp_step(st: ESRPState, ops: SolverOps, T: int,
               b: jax.Array | None = None, rr_every: int = 0,
-              gated: bool = True) -> ESRPState:
+              gated: bool = True, push=None) -> ESRPState:
     """One full ESRP iteration: bookkeeping + the PCG update (Alg. 3 body).
     See ``numeric_step`` for the residual-replacement semantics."""
-    st = esrp_prelude(st, T, gated)
+    st = esrp_prelude(st, T, gated, push)
     return st._replace(pcg=numeric_step(st.pcg, ops, b, rr_every, gated))
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6, 8))
 def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
               thresh: jax.Array | None = None,
               rr_every: int = 0, gated: bool = True,
-              b: jax.Array | None = None):
+              b: jax.Array | None = None, push=None):
     """Run n_iters ESRP iterations, recording ||r|| after each (the paper
     checks convergence every iteration; the driver scans the record).
 
@@ -185,7 +212,8 @@ def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
     """
 
     def step(s):
-        s2 = esrp_step(s, ops, T, b=b, rr_every=rr_every, gated=gated)
+        s2 = esrp_step(s, ops, T, b=b, rr_every=rr_every, gated=gated,
+                       push=push)
         return s2, jnp.linalg.norm(s2.pcg.r)
 
     return scan_with_convergence_freeze(

@@ -63,6 +63,14 @@ def normalize_scenario(
             "not both")
     if scenario is None:
         if fail_at is None:
+            if failed_nodes is not None:
+                # silently returning [] here would drop the caller's
+                # requested failure and report a clean solve — the run would
+                # measure nothing
+                raise ValueError(
+                    f"failed_nodes={list(failed_nodes)} was passed without "
+                    f"fail_at: no iteration to inject the failure at (pass "
+                    f"fail_at=<iter> or a scenario=[FailureEvent(...)])")
             return []
         scenario = [FailureEvent(fail_at, tuple(failed_nodes or [0]))]
     events = [ev if isinstance(ev, FailureEvent) else FailureEvent(*ev)

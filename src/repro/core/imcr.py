@@ -42,8 +42,8 @@ class IMCRState(NamedTuple):
 
 
 def imcr_init(matvec, precond, b: jax.Array,
-              x0: jax.Array | None = None) -> IMCRState:
-    pcg = pcg_init(matvec, precond, b, x0)
+              x0: jax.Array | None = None, dot=None) -> IMCRState:
+    pcg = pcg_init(matvec, precond, b, x0, dot)
     z = jnp.zeros_like(b)
     zero = jnp.zeros((), b.dtype)
     return IMCRState(pcg=pcg, ck_x=z, ck_r=z, ck_z=z, ck_p=z,

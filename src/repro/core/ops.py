@@ -44,6 +44,12 @@ class SolverOps(NamedTuple):
     update: Callable            # (alpha, x, r, p, q) -> (x', r', z', rz')
     variant: str = ""           # preconditioner execution variant (e.g. the
     #                             sharded runtime's "node-local ssor")
+    dot: Callable | None = None  # (u, v) -> uᵀv with this backend's reduction
+    #                             structure; None = plain u @ v. Off-hot-loop
+    #                             dots (pcg_init's r₀ᵀz₀, the residual-
+    #                             replacement rᵀz) route through it so the
+    #                             sharded runtime and its single-device
+    #                             mesh-mirror stay bit-identical in f64.
 
 
 def make_closure_ops(matvec: Callable, precond: Callable) -> SolverOps:

@@ -35,11 +35,16 @@ class PCGState(NamedTuple):
 
 
 def pcg_init(matvec: Callable, precond: Callable, b: jax.Array,
-             x0: jax.Array | None = None) -> PCGState:
+             x0: jax.Array | None = None,
+             dot: Callable | None = None) -> PCGState:
+    """``dot`` overrides the r₀ᵀz₀ reduction (SolverOps.dot): the sharded
+    runtime's per-node partial sums and its single-device mesh mirror must
+    agree bitwise from iteration 0, which a flat ``@`` would break."""
     x0 = jnp.zeros_like(b) if x0 is None else x0
     r0 = b - matvec(x0)
     z0 = precond(r0)
-    return PCGState(x=x0, r=r0, z=z0, p=z0, rz=r0 @ z0,
+    rz0 = r0 @ z0 if dot is None else dot(r0, z0)
+    return PCGState(x=x0, r=r0, z=z0, p=z0, rz=rz0,
                     beta=jnp.zeros((), b.dtype), j=jnp.zeros((), jnp.int32))
 
 

@@ -165,21 +165,33 @@ class ESRPTrainer:
         return params, opt, restart
 
     # ------------------------------------------------------------------ #
-    def run(self, params, opt: OptState, n_steps: int,
+    def fit(self, params, opt: OptState, n_steps: int,
+            scenario: Optional[list] = None,
             fail_at: Optional[int] = None,
             failed_ranks: Optional[list[int]] = None, start_step: int = 0):
-        """Training loop with storage stages + one optional failure event.
+        """Training loop with storage stages + an optional *failure
+        scenario*: a list of ``FailureEvent(step, ranks)`` entries with the
+        solver driver's semantics (``core.failures.normalize_scenario`` —
+        simultaneous multi-rank events, staggered multi-event runs, strictly
+        increasing step numbers, each event firing exactly once). Recovery
+        rolls everyone back to the last storage stage and replays, so a
+        later event's step is reached again on the replay *after* its
+        predecessor was consumed — rollback never re-arms an event. The
+        legacy ``fail_at``/``failed_ranks`` shorthand maps to one event.
         Returns (params, opt, losses: dict step -> loss)."""
+        from repro.core.failures import normalize_scenario
+
+        pending = normalize_scenario(scenario, fail_at, failed_ranks,
+                                     self.ft.n_ranks)
         bufs = self.init_buffers(params, opt)
         losses = {}
         step = start_step
-        pending_fail = fail_at is not None
         while step < n_steps:
             if self.ft.mode != "none" and step % self.ft.T == 0 and step > 0:
                 bufs = self.storage_stage(params, opt, bufs, step)
-            if pending_fail and step == fail_at:
-                pending_fail = False
-                failed = failed_ranks or [0]
+            if pending and step == pending[0].iter:
+                ev = pending.pop(0)
+                failed = list(ev.nodes)
                 params, opt, bufs = self.inject_failure(params, opt, bufs,
                                                         failed)
                 params, opt, step = self.recover(bufs, failed)
@@ -189,3 +201,10 @@ class ESRPTrainer:
             losses[step] = float(metrics["loss"])
             step += 1
         return params, opt, losses
+
+    def run(self, params, opt: OptState, n_steps: int,
+            fail_at: Optional[int] = None,
+            failed_ranks: Optional[list[int]] = None, start_step: int = 0):
+        """Legacy single-event entry point; ``fit`` is the scenario form."""
+        return self.fit(params, opt, n_steps, fail_at=fail_at,
+                        failed_ranks=failed_ranks, start_step=start_step)

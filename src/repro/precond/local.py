@@ -45,6 +45,60 @@ def precond_is_node_local(pc, n_nodes: int) -> bool:
             and is_slab_local(pc.up_idx, pc.up_n, per))
 
 
+def static_reload_bytes(problem, failed) -> tuple[str, int]:
+    """Per-preconditioner-state survival check + safe-storage reload
+    accounting for a failure of ``failed`` nodes on the sharded runtime.
+
+    The preconditioner's *static* state carries no redundant copies of its
+    own — survivability rests on it being rebuildable from the COO in safe
+    storage, per class:
+
+      * block-Jacobi — the inverted diagonal blocks of the failed rows are
+        re-inverted from the reloaded A rows; accounted as the failed-slab
+        block bytes.
+      * SSOR / IC(0) — the node-local sweep strips are static *and*
+        slab-local (the adopted twin), so the replacement rebuilds exactly
+        its own slab's lo/up factors + diagonal terms; a global-sweep
+        instance is rejected (its triangular strips span surviving slabs —
+        the sharded runtime must adopt the twin first).
+      * Chebyshev — the [lo, hi] bounds are replicated scalars; every
+        survivor still holds them, nothing reloads beyond the A rows.
+
+    Returns (description, bytes) — the reload volume charged to the event
+    (``EventReport.precond_reload_bytes``); the A-row/b reload common to
+    every strategy is already covered by the paper's protocol and excluded.
+    """
+    part = problem.part
+    pc = problem.precond
+    itemsize = np.dtype(problem.b.dtype).itemsize
+    n_failed = len(set(failed))
+    if pc is None or pc.name == "jacobi":
+        blocks = (n_failed * part.rows_per_node) // problem.precond_block
+        nbytes = blocks * problem.precond_block ** 2 * itemsize
+        return "jacobi: reinvert failed-slab diagonal blocks", int(nbytes)
+    if pc.name == "chebyshev":
+        return "chebyshev: replicated [lo, hi] bounds survive", 0
+    if pc.name not in ("ssor", "ic0"):
+        raise NotImplementedError(pc.name)
+    n_nodes = part.n_nodes
+    if not precond_is_node_local(pc, n_nodes):
+        raise RuntimeError(
+            f"{pc.name}: global-sweep strips span failed and surviving "
+            f"slabs — the sharded runtime must adopt the node-local twin "
+            f"before its state can be rebuilt per-slab from safe storage")
+    nbr = pc.m // pc.block
+    per = nbr // n_nodes
+    mask = np.zeros(nbr, bool)
+    for s in set(failed):
+        mask[s * per:(s + 1) * per] = True
+    b2 = pc.block ** 2
+    tri = int(np.asarray(pc.lo_n)[mask].sum()
+              + np.asarray(pc.up_n)[mask].sum()) * b2
+    diag = 2 * int(mask.sum()) * b2       # ssor: dinv+mid; ic0: dinv_f+dinv_b
+    return (f"{pc.name}: rebuild failed-slab sweep strips from COO",
+            int((tri + diag) * itemsize))
+
+
 def node_local_twin(problem):
     """Build the node-local (additive-Schwarz) twin of ``problem``'s SSOR /
     IC(0) preconditioner from the COO in safe storage, preserving the

@@ -82,6 +82,47 @@ def test_recovery_reproduces_trajectory(setup, mode, fail_at, failed):
     assert _max_diff(p_ref, p_ft) == 0.0     # bitwise trajectory identity
 
 
+def test_fit_staggered_two_event_scenario(setup):
+    """fit(scenario=[...]): two staggered events — the second striking after
+    the first's rollback+replay — reproduce the undisturbed trajectory
+    bit-for-bit, and a simultaneous multi-rank event rides the same path."""
+    from repro.core.failures import FailureEvent
+
+    model, ts, pipe, specs, params, opt, p_ref = setup
+    tr = ESRPTrainer(model, ts, pipe,
+                     FTConfig(mode="esrp", T=5, phi=2, n_ranks=8), specs)
+    p_ft, _, losses = tr.fit(params, opt, n_steps=22,
+                             scenario=[FailureEvent(13, (2,)),
+                                       FailureEvent(17, (5, 6))])
+    assert _max_diff(p_ref, p_ft) == 0.0     # bitwise trajectory identity
+    assert set(losses) == set(range(22))
+
+
+def test_fit_legacy_run_equivalence(setup):
+    """run(fail_at=...) is the one-event shorthand of fit(scenario=...)."""
+    from repro.core.failures import FailureEvent
+
+    model, ts, pipe, specs, params, opt, p_ref = setup
+    mk = lambda: ESRPTrainer(model, ts, pipe,
+                             FTConfig(mode="esrp", T=5, phi=1, n_ranks=8),
+                             specs)
+    p_a, _, _ = mk().run(params, opt, n_steps=22, fail_at=13,
+                         failed_ranks=[2])
+    p_b, _, _ = mk().fit(params, opt, n_steps=22,
+                         scenario=[FailureEvent(13, (2,))])
+    assert _max_diff(p_a, p_b) == 0.0
+
+
+def test_fit_failed_ranks_without_fail_at_raises(setup):
+    """Regression (normalize_scenario): failed_ranks without fail_at used to
+    silently train failure-free."""
+    model, ts, pipe, specs, params, opt, _ = setup
+    tr = ESRPTrainer(model, ts, pipe,
+                     FTConfig(mode="esrp", T=5, phi=1, n_ranks=8), specs)
+    with pytest.raises(ValueError, match="without fail_at"):
+        tr.fit(params, opt, n_steps=22, failed_ranks=[1])
+
+
 def test_esrp_pushes_less_than_imcr(setup):
     model, ts, pipe, specs, params, opt, _ = setup
     a = ESRPTrainer(model, ts, pipe,

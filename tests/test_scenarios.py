@@ -185,6 +185,45 @@ def test_scenario_validation():
         normalize_scenario([FailureEvent(10, tuple(range(n)))], None, None, n)
     with pytest.raises(ValueError):   # empty event
         normalize_scenario([FailureEvent(10, ())], None, None, n)
+    with pytest.raises(ValueError, match="without fail_at"):
+        # regression: failed_nodes without fail_at used to silently return []
+        # — the requested failure never fired and the run reported a clean
+        # solve
+        normalize_scenario(None, None, [3], n)
+
+
+def test_failed_nodes_without_fail_at_raises(problem):
+    """Driver-level regression for the silent-[] bug: the solve must refuse
+    to run a 'failure experiment' whose failure can never fire."""
+    with pytest.raises(ValueError, match="without fail_at"):
+        solve_resilient(problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+                        failed_nodes=[2])
+
+
+def test_target_iter_sentinel_normalized(problem, reference):
+    """-1 is the single 'no reconstruction point' sentinel: failure-free
+    runs report it too (the undocumented -2 is gone); restarts keep it; a
+    real rollback reports the reconstruction iteration."""
+    assert reference.target_iter == -1 and not reference.events
+    assert reference.converged
+    r = solve_resilient(problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+                        fail_at=45, failed_nodes=[2])
+    assert r.target_iter == 41
+
+
+def test_attach_local_delta_guarded_at_max_iters(problem, reference):
+    """A run stopped at max_iters reports converged=False; the node-local
+    iteration delta against it would be meaningless and stays None."""
+    from repro.comm.shard import attach_local_delta
+
+    capped = solve_resilient(problem, strategy="none", rtol=1e-10,
+                             max_iters=10, chunk=5)
+    assert not capped.converged and capped.converged_iter == 10
+    attach_local_delta(capped, reference)
+    assert capped.local_delta_iters is None
+    ok = solve_resilient(problem, strategy="none", rtol=1e-10)
+    attach_local_delta(ok, reference)
+    assert ok.local_delta_iters == 0
 
 
 # --------------------------------------------------------------------------- #

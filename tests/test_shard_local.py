@@ -96,6 +96,33 @@ def test_node_local_recovery_exact_midstage():
     assert r.events[0].pff_iters > 0          # the line-6 inner CG ran
 
 
+def test_ring_halo_matvec_validates_halo_width():
+    """halo_tiles > col_tiles_per_node made xt[-halo_tiles:] silently slice
+    the whole slab and fail later with an opaque concat shape error (and
+    halo_tiles = 0 the empty one) — both must be rejected at build time,
+    before any mesh communication is set up."""
+    from repro.comm import shard
+
+    p = build_problem("poisson2d", n_nodes=8, nx=40)
+    mesh = shard.nodes_mesh(1)                 # never reached: checks first
+    cpt = p.part.col_tiles_per_node
+    for bad in (0, cpt + 1, 10 * cpt):
+        with pytest.raises(ValueError, match="halo_tiles"):
+            shard.ring_halo_matvec(p.a, p.part, mesh, halo_tiles=bad)
+    # the boundary value is accepted (the existing 8-device test uses it)
+    shard.ring_halo_matvec(p.a, p.part, mesh, halo_tiles=cpt)
+
+
+def test_ring_halo_matvec_rejects_single_node_ring():
+    """A 1-node 'ring' would ppermute both halos to itself (silent zeros)."""
+    from repro.comm import shard
+
+    p = build_problem("poisson2d", n_nodes=1, nx=40)
+    mesh = shard.nodes_mesh(1)
+    with pytest.raises(ValueError, match=">= 2 nodes"):
+        shard.ring_halo_matvec(p.a, p.part, mesh, halo_tiles=1)
+
+
 def test_sharded_sweeps_reject_mesh_partition_mismatch():
     """The shard_map index shift assumes one partition slab per mesh device;
     a mismatched mesh must fail loudly instead of clamping cross-shard loads

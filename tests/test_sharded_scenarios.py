@@ -1,0 +1,290 @@
+"""Device-resident failure runtime on the 8-device mesh.
+
+Slow suite (subprocess, ``--xla_force_host_platform_device_count=8``):
+
+  * the physical redundancy queue (``redundancy_queue``) delivers every
+    copy the plan says a node holds — values checked tile by tile;
+  * multi-event / multi-node scenarios (simultaneous φ=2, staggered,
+    burst-before-the-next-storage-stage, IMCR staggered, SSOR with twin
+    adoption + reload accounting, Chebyshev) each rejoin the single-device
+    ``mesh_mirror_ops`` reference trajectory **bit-identically in f64**;
+  * the consumed recovery copies are read from *surviving devices'* queue
+    shards: ``EventReport.queue_src_nodes`` is non-empty and disjoint from
+    the failed set, and a burst whose only physical copy was wiped by the
+    previous event raises — while the host-side static plan calls the same
+    scenario survivable (the device-resident vs static-plan gap);
+  * twin adoption invalidates ``_sharded_ops_cache`` entries built on an
+    equal-size mesh before the adoption (regression).
+
+Fast host-side tests cover ``RedundancyPlan.copy_sources`` and the
+per-preconditioner ``static_reload_bytes`` accounting.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.aspmv import build_plan
+from repro.precond.local import static_reload_bytes
+from repro.sparse.matrices import build_problem
+from repro.sparse.partition import neighbor
+
+
+# --------------------------------------------------------------------------- #
+# host-side: copy sourcing + reload accounting
+# --------------------------------------------------------------------------- #
+def test_copy_sources_reads_surviving_holders():
+    p = build_problem("poisson2d", n_nodes=8, nx=32)
+    plan = build_plan(p.a, p.part, phi=1)
+    tiles, src = plan.copy_sources([3])
+    lo, hi = p.part.node_col_tiles(3)
+    np.testing.assert_array_equal(tiles, np.arange(lo, hi))
+    assert (src != 3).all()
+    for t, d in zip(tiles, src):
+        assert plan.holders[t, d], (t, d)
+    # the designated neighbour d_{3,1} = 4 serves every tile it holds
+    d1 = neighbor(3, 1, 8)
+    held_by_d1 = plan.holders[tiles, d1]
+    np.testing.assert_array_equal(src[held_by_d1], d1)
+
+
+def test_copy_sources_stale_copy_is_not_a_source():
+    """A holder whose physical entry was wiped (valid=False) must not be
+    chosen; if it was the only copy, the event is physically unrecoverable
+    even though the static plan (check_event) calls it survivable."""
+    p = build_problem("poisson2d", n_nodes=8, nx=32)
+    plan = build_plan(p.a, p.part, phi=1)
+    plan.check_event([3])                      # static plan: survivable
+    valid = np.ones(8, bool)
+    valid[2] = False                           # node 2's copies are stale
+    with pytest.raises(RuntimeError, match="dead or stale"):
+        plan.copy_sources([3], valid)
+    # with node 2 fresh the same event sources fine
+    tiles, src = plan.copy_sources([3], np.ones(8, bool))
+    assert 2 in set(src.tolist())              # the boundary tile needs it
+
+
+def test_copy_sources_multi_node_union():
+    p = build_problem("poisson2d", n_nodes=8, nx=32)
+    plan = build_plan(p.a, p.part, phi=2)
+    tiles, src = plan.copy_sources([2, 5])
+    assert tiles.size == 2 * p.part.col_tiles_per_node
+    assert not set(src.tolist()) & {2, 5}      # only survivors serve copies
+
+
+def test_static_reload_bytes_per_preconditioner():
+    item = 8                                   # f64
+    pj = build_problem("poisson2d", n_nodes=8, nx=32)
+    desc, nb = static_reload_bytes(pj, [1, 4])
+    blocks = 2 * pj.part.rows_per_node // pj.precond_block
+    assert nb == blocks * pj.precond_block ** 2 * item
+    assert "jacobi" in desc
+
+    pc = build_problem("poisson2d", n_nodes=8, nx=32, precond="chebyshev")
+    desc, nb = static_reload_bytes(pc, [1])
+    assert nb == 0 and "replicated" in desc
+
+    ps = build_problem("poisson2d", n_nodes=8, nx=32, precond="ssor",
+                       precond_opts={"node_local": True})
+    desc, nb = static_reload_bytes(ps, [3])
+    assert nb > 0 and "ssor" in desc
+    # two failed slabs reload twice the strips of one (equal slabs)
+    _, nb2 = static_reload_bytes(ps, [3, 5])
+    assert nb2 == pytest.approx(2 * nb, rel=0.2)
+
+    pg = build_problem("poisson2d", n_nodes=8, nx=32, precond="ssor")
+    with pytest.raises(RuntimeError, match="node-local twin"):
+        static_reload_bytes(pg, [3])           # global strips span slabs
+
+
+# --------------------------------------------------------------------------- #
+# 8-device parity suite
+# --------------------------------------------------------------------------- #
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.comm.shard import (ShardedFailureRuntime, mesh_mirror_ops,
+                              nodes_mesh, place_problem, redundancy_queue,
+                              sharded_solver_ops)
+from repro.core.aspmv import build_plan
+from repro.core.driver import solve_resilient
+from repro.core.failures import FailureEvent
+from repro.sparse.matrices import build_problem
+
+mesh = nodes_mesh(8)
+problem = build_problem("poisson2d", n_nodes=8, nx=40, ny=40)
+placed = place_problem(problem, mesh)
+mirror = mesh_mirror_ops(problem, 8)
+with mesh:
+    ops = sharded_solver_ops(placed, mesh)
+
+# --- 0) the physical queue: every plan-held copy is delivered verbatim ----
+plan = build_plan(problem.a, problem.part, phi=2)
+hold_idx, push = redundancy_queue(plan, problem.part, mesh)
+rng = np.random.default_rng(0)
+x = rng.standard_normal(problem.m)
+xs = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("nodes")))
+with mesh:
+    entry = np.asarray(push(xs))
+xt = x.reshape(-1, problem.part.bn)
+owner = problem.part.owner_of_col_tile(np.arange(problem.part.col_tiles))
+checked = 0
+for d in range(8):
+    held = set()
+    for slot, t in enumerate(hold_idx[d]):
+        if t < 0:
+            continue
+        np.testing.assert_array_equal(entry[d, slot], xt[t])
+        assert plan.holders[t, d] and owner[t] != d
+        held.add(int(t))
+        checked += 1
+    # completeness: every copy the plan assigns node d is physically present
+    assert held == set(np.nonzero(plan.holders[:, d] & (owner != d))[0])
+assert checked > 100, checked
+print("QUEUE_OK", checked)
+
+def run_pair(scenario, strategy="esrp", T=20, phi=1, prob=problem,
+             plc=placed, op=ops, mir=mirror, rtol=1e-10):
+    frt = ShardedFailureRuntime(plc, mesh)
+    with mesh:
+        r = solve_resilient(plc, strategy=strategy, T=T, phi=phi, rtol=rtol,
+                            ops=op, scenario=list(scenario),
+                            failure_runtime=frt)
+    rm = solve_resilient(prob, strategy=strategy, T=T, phi=phi, rtol=rtol,
+                         ops=mir, scenario=list(scenario))
+    assert r.converged_iter == rm.converged_iter, (r.converged_iter,
+                                                   rm.converged_iter)
+    assert (np.asarray(r.x) == np.asarray(rm.x)).all(), \
+        "sharded run did not rejoin the mesh-mirror trajectory bitwise"
+    for e in r.events:
+        if e.target_iter >= 0 and strategy == "esrp":
+            # consumed copies came from surviving devices' shards (IMCR
+            # recovers from buddy checkpoints, not the ESRP queue)
+            assert e.queue_src_nodes, e
+            assert not set(e.queue_src_nodes) & set(e.nodes), e
+    return r, rm
+
+ref = solve_resilient(problem, strategy="none", rtol=1e-10, ops=mirror)
+C = ref.converged_iter
+
+# --- 1) simultaneous phi=2 multi-node ---
+r, rm = run_pair([FailureEvent(C // 2, (2, 5))], phi=2)
+assert r.converged_iter == C
+print("SIMULTANEOUS_OK", r.events[0].queue_src_nodes)
+
+# --- 2) staggered two-event ESRP ---
+r, _ = run_pair([FailureEvent(45, (2,)), FailureEvent(70, (5,))])
+assert [e.target_iter for e in r.events] == [41, 61]
+assert r.converged_iter == C
+print("STAGGERED_OK")
+
+# --- 3) burst: 2nd event before the next storage stage completes ---
+r, _ = run_pair([FailureEvent(58, (2,)), FailureEvent(59, (5,))])
+assert [e.target_iter for e in r.events] == [41, 41]
+assert r.converged_iter == C
+print("BURST_OK")
+
+# --- 4) device-resident survival is stricter than the static plan: node 3's
+# boundary-tile copy lives only on node 2, which the first event wiped and
+# no storage push has refreshed ---
+frt = ShardedFailureRuntime(placed, mesh)
+raised = False
+try:
+    with mesh:
+        solve_resilient(placed, strategy="esrp", T=20, phi=1, rtol=1e-10,
+                        ops=ops, failure_runtime=frt,
+                        scenario=[FailureEvent(58, (2,)),
+                                  FailureEvent(59, (3,))])
+except RuntimeError as e:
+    raised = "dead or stale" in str(e)
+assert raised
+# ... while the host-side simulator (static plan only) survives it
+rh = solve_resilient(problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+                     scenario=[FailureEvent(58, (2,)), FailureEvent(59, (3,))])
+assert rh.converged_iter == ref.converged_iter
+print("STALE_COPY_OK")
+
+# --- 4b) regression: staleness is judged per READ slot, not the newest tag.
+# The second event lands exactly on the next stage's FIRST push (iter 60):
+# the queue then holds tags [40, 41, 60], recovery needs the consecutive
+# (40, 41) pair — whose node-2 rows the first event zeroed — while the tag-60
+# entry is fresh. Validating against the newest tag would declare node 2 a
+# valid source and silently reconstruct node 1's interior tiles from zeros.
+frt = ShardedFailureRuntime(placed, mesh)
+raised = False
+try:
+    with mesh:
+        solve_resilient(placed, strategy="esrp", T=20, phi=1, rtol=1e-10,
+                        ops=ops, failure_runtime=frt,
+                        scenario=[FailureEvent(58, (2,)),
+                                  FailureEvent(60, (1,))])
+except RuntimeError as e:
+    raised = "dead or stale" in str(e)
+assert raised
+rh = solve_resilient(problem, strategy="esrp", T=20, phi=1, rtol=1e-10,
+                     scenario=[FailureEvent(58, (2,)), FailureEvent(60, (1,))])
+assert rh.converged_iter == ref.converged_iter
+print("STALE_SLOT_TAG_OK")
+
+# --- 5) IMCR staggered multi-node (shard_map injection) ---
+r, _ = run_pair([FailureEvent(45, (5, 6)), FailureEvent(70, (1,))],
+                strategy="imcr", phi=2)
+assert [e.target_iter for e in r.events] == [40, 60]
+print("IMCR_OK")
+
+# --- 6) SSOR: twin adoption + slab reload accounting; Chebyshev: replicated
+# bounds, zero reload ---
+for name, expect_reload in (("ssor", True), ("chebyshev", False)):
+    p2 = build_problem("poisson2d", n_nodes=8, nx=40, precond=name)
+    plc2 = place_problem(p2, mesh)
+    with mesh:
+        op2 = sharded_solver_ops(plc2, mesh)
+    mir2 = mesh_mirror_ops(plc2, 8)
+    ref2 = solve_resilient(plc2, strategy="none", rtol=1e-9, ops=mir2)
+    T = 10
+    J = (ref2.converged_iter // 2 // T) * T + T - 2
+    r, _ = run_pair([FailureEvent(J, (2, 5))], T=T, phi=2, prob=plc2,
+                    plc=plc2, op=op2, mir=mir2, rtol=1e-9)
+    assert r.converged_iter == ref2.converged_iter
+    assert (r.precond_reload_bytes > 0) == expect_reload, name
+    print(f"PRECOND_OK {name} reload={r.precond_reload_bytes}")
+
+# --- 7) regression: twin adoption invalidates same-size-mesh ops entries ---
+p3 = build_problem("poisson2d", n_nodes=8, nx=40, precond="ssor")
+plc3 = place_problem(p3, mesh)
+mesh_b = Mesh(np.asarray(jax.devices())[::-1], ("nodes",))  # equal size
+sentinel = object()
+plc3._sharded_ops_cache = {mesh_b: sentinel}     # entry built pre-adoption
+with mesh:
+    op3 = sharded_solver_ops(plc3, mesh)         # triggers the adoption
+assert "auto twin" in op3.variant
+cache = plc3._sharded_ops_cache
+assert sentinel not in cache.values()            # stale entry dropped
+assert cache[mesh] is op3                        # fresh entry still cached
+with mesh:
+    assert sharded_solver_ops(plc3, mesh) is op3
+print("CACHE_INVALIDATION_OK")
+
+print("SHARDED_SCENARIOS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_scenarios_eight_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], cwd=".",
+                         env=env, capture_output=True, text=True,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    for tag in ("QUEUE_OK", "SIMULTANEOUS_OK", "STAGGERED_OK", "BURST_OK",
+                "STALE_COPY_OK", "STALE_SLOT_TAG_OK", "IMCR_OK",
+                "CACHE_INVALIDATION_OK", "SHARDED_SCENARIOS_OK"):
+        assert tag in out.stdout, (tag, out.stdout)
