@@ -425,7 +425,7 @@ def bench_recovery(full):
           f"({len(rows)} rows)")
 
 
-def bench_failures(full, sharded=False):
+def bench_failures(full, sharded=False, tiers=False):
     """Failure-scenario sweep: simultaneous vs staggered vs burst × φ × T
     for ESRP and IMCR — the multi-failure experiment of Pachajoa et al.
     (arXiv:1907.13077) on top of the paper's protocol.
@@ -446,6 +446,14 @@ def bench_failures(full, sharded=False):
     convergence and whether it rejoined the single-device mesh-mirror
     trajectory bit-identically.
 
+    Every row also carries ``tier_recovery_ms`` — the measured recovery
+    time re-priced under each storage tier's read cost model (the fetch of
+    the redundant p pair is the only tier-dependent step of a recovery).
+    With ``tiers=True`` (``--tiers``) an additional tier × φ × T sweep runs
+    REAL solves with ``storage_tier=...`` threaded through the driver, so
+    the push/fetch accounting columns (push_count, push_bytes, model
+    seconds) come from the solver itself, not a host-side re-pricing.
+
     Writes artifacts/bench/failures.csv (per-row sweep) and a
     machine-readable BENCH_failures.json next to it so the recovery-cost
     trajectory is trackable across PRs.
@@ -456,6 +464,7 @@ def bench_failures(full, sharded=False):
     jax.config.update("jax_enable_x64", True)
     from repro.core.driver import solve_resilient
     from repro.core.failures import FailureEvent
+    from repro.core.tiers import TIERS, resolve_tier
     from repro.sparse.matrices import build_problem
 
     n_nodes = 8
@@ -540,6 +549,13 @@ def bench_failures(full, sharded=False):
                         rel_residual=r.rel_residual, drift=r.drift,
                         targets=[e.target_iter for e in r.events],
                         per_event_wasted=[e.wasted_iters for e in r.events],
+                        # measured recovery re-priced per storage tier: the
+                        # redundant-pair fetch is the tier-dependent step
+                        tier_recovery_ms={
+                            name: 1e3 * (r.recovery_s + sum(
+                                t.read_s(e.fetch_bytes) for e in r.events
+                                if e.fetch_bytes))
+                            for name, t in TIERS.items()},
                         sharded_iter=None, sharded_exact=None,
                         sharded_recovery_ms=None)
                     if sharded and strategy == "esrp" and T == 20:
@@ -558,6 +574,57 @@ def bench_failures(full, sharded=False):
                         f"{r.drift:.2e},"
                         f"{'|'.join(str(t) for t in row['targets'])}"
                         + sh_cols)
+    # --tiers: tier × φ × T with REAL per-tier solves (storage_tier threaded
+    # through the driver) on the representative simultaneous ESRP scenario;
+    # the data path is tier-independent, so converged_iter must match the
+    # tier-less row and only the accounting columns move
+    tier_rows = []
+    if tiers:
+        for T in Ts:
+            for phi in phis:
+                events = scenarios(T, phi)["simultaneous"]
+                for name in TIERS:
+                    r = solve_resilient(p, strategy="esrp", T=T, phi=phi,
+                                        rtol=1e-8, chunk=32, scenario=events,
+                                        storage_tier=name)
+                    t = resolve_tier(name)
+                    tier_rows.append(dict(
+                        tier=name, T=T, phi=phi, scenario="simultaneous",
+                        converged_iter=r.converged_iter,
+                        wasted_iters=r.wasted_iters,
+                        recovery_ms=1e3 * r.recovery_s,
+                        recovery_ms_model=1e3 * (r.recovery_s
+                                                 + r.fetch_s_model),
+                        push_count=r.push_count, push_bytes=r.push_bytes,
+                        push_s_model=r.push_s_model,
+                        fetch_bytes=sum(e.fetch_bytes for e in r.events),
+                        fetch_s_model=r.fetch_s_model,
+                        write_s_per_mb=t.write_s(1 << 20)))
+        base = {(r_["T"], r_["phi"]): r_["converged_iter"] for r_ in rows
+                if r_["strategy"] == "esrp"
+                and r_["scenario"] == "simultaneous"}
+        assert all(tr["converged_iter"] == base[(tr["T"], tr["phi"])]
+                   for tr in tier_rows), "tier changed the data path"
+        tier_header = ("tier,T,phi,converged_iter,recovery_ms,"
+                       "recovery_ms_model,push_count,push_bytes,"
+                       "push_s_model,fetch_bytes,fetch_s_model")
+        tier_lines = [tier_header] + [
+            f"{tr['tier']},{tr['T']},{tr['phi']},{tr['converged_iter']},"
+            f"{tr['recovery_ms']:.2f},{tr['recovery_ms_model']:.2f},"
+            f"{tr['push_count']},{tr['push_bytes']},"
+            f"{tr['push_s_model']:.3e},{tr['fetch_bytes']},"
+            f"{tr['fetch_s_model']:.3e}" for tr in tier_rows]
+        _ensure_dir()
+        with open("artifacts/bench/failures_tiers.csv", "w") as f:
+            f.write("\n".join(tier_lines) + "\n")
+        for tr in tier_rows:
+            if tr["T"] == max(Ts) and tr["phi"] == max(phis):
+                print(f"failures_tier_{tr['tier']}_T{tr['T']}"
+                      f"_phi{tr['phi']},"
+                      f"{1e3 * tr['recovery_ms_model']:.0f},"
+                      f"push_bytes={tr['push_bytes']};"
+                      f"push_s_model={tr['push_s_model']:.3e};"
+                      f"fetch_s_model={tr['fetch_s_model']:.3e}")
     # harness CSV: the headline multi-failure settings at T=20
     for row in rows:
         if row["T"] == 20 and (row["phi"] == max(phis) or
@@ -586,6 +653,8 @@ def bench_failures(full, sharded=False):
         sweep=dict(Ts=list(Ts), phis=list(phis),
                    strategies=["esrp", "imcr"]),
         rows=rows,
+        tiers=dict(names=list(TIERS),
+                   swept=bool(tier_rows), rows=tier_rows),
         aggregate=dict(
             n_rows=len(rows),
             exact_rejoin=exact,
@@ -632,6 +701,12 @@ def main() -> None:
                          "on an 8-device mesh with the device-resident "
                          "failure runtime (adds the sharded_iter/"
                          "sharded_exact columns)")
+    ap.add_argument("--tiers", action="store_true",
+                    help="failures sweep only: also run the storage-tier × "
+                         "φ × T sweep with real per-tier solves "
+                         "(storage_tier threaded through the driver); "
+                         "writes failures_tiers.csv and the tiers section "
+                         "of BENCH_failures.json")
     args = ap.parse_args()
     if args.sharded:
         # must precede the first jax import (bench functions import lazily)
@@ -643,7 +718,7 @@ def main() -> None:
     for name in names:
         print(f"\n== {name} ==")
         if name == "failures":
-            ALL[name](args.full, sharded=args.sharded)
+            ALL[name](args.full, sharded=args.sharded, tiers=args.tiers)
         else:
             ALL[name](args.full)
 

@@ -7,8 +7,16 @@ finishes with a staggered multi-event scenario (failure → recover → fail
 again, φ nodes simultaneously in the first event) with the per-event
 recovery breakdown.
 
+With ``--sdc`` an extra section injects silent data corruption (a bit flip
+in the search direction p, and a perturbed redundancy-queue copy) instead
+of a fail-stop: the invariant checks detect the corruption within one
+check period, route it through the same Alg. 2 reconstruction, and the run
+rejoins the clean trajectory — the report prints which detector fired, the
+detection latency, and the distance to the corruption-free solution.
+
     PYTHONPATH=src python examples/solve_poisson_resilient.py \
-        --kind poisson3d --nx 32 --nodes 16 --T 20 --phi 3 --precond ssor
+        --kind poisson3d --nx 32 --nodes 16 --T 20 --phi 3 --precond ssor \
+        --sdc
 """
 import argparse
 
@@ -16,8 +24,10 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+import numpy as np
+
 from repro.core.driver import solve_resilient
-from repro.core.failures import FailureEvent
+from repro.core.failures import FailureEvent, SDCEvent
 from repro.sparse.matrices import build_problem
 
 
@@ -32,6 +42,10 @@ def main():
     ap.add_argument("--rtol", type=float, default=1e-8)
     ap.add_argument("--precond", default="jacobi",
                     choices=["jacobi", "ssor", "chebyshev", "ic0"])
+    ap.add_argument("--sdc", action="store_true",
+                    help="also inject silent data corruption (bit flip in "
+                         "p, perturbed queue copy) and show detection + "
+                         "repair via the invariant checks")
     args = ap.parse_args()
 
     kw = dict(nx=args.nx) if args.kind != "banded" else dict(
@@ -76,6 +90,31 @@ def main():
         print(f"  iter {e.iter:4d} nodes {e.nodes}: rollback -> "
               f"{e.target_iter} ({e.wasted_iters} wasted, "
               f"{1e3 * e.recovery_s:.1f} ms reconstruction)")
+
+    if args.sdc:
+        xref = np.asarray(ref.x)
+        xscale = max(float(np.linalg.norm(xref)), 1.0)
+        print("\nsilent data corruption (detect + repair):")
+        print(f"{'target':8s} {'kind':8s} {'detector':16s} {'inject':>6s} "
+              f"{'caught':>6s} {'latency':>7s} {'wasted':>6s} "
+              f"{'|x-xref|/|xref|':>15s}")
+        for target, kind in (("p", "bitflip"), ("queue", "perturb")):
+            r = solve_resilient(
+                problem, strategy="esrp", T=args.T, phi=args.phi,
+                rtol=args.rtol,
+                scenario=[SDCEvent(iter=fail_at, nodes=(0,),
+                                   target=target, kind=kind)])
+            assert r.rel_residual < args.rtol
+            reps = [e for e in r.events if e.kind == "sdc-repair"]
+            assert len(reps) == 1, [e.kind for e in r.events]
+            e = reps[0]
+            err = float(np.linalg.norm(np.asarray(r.x) - xref)) / xscale
+            print(f"{target:8s} {kind:8s} {e.detector:16s} {fail_at:6d} "
+                  f"{e.detect_iter:6d} {e.detect_latency:7d} "
+                  f"{e.wasted_iters:6d} {err:15.2e}")
+        print("  (queue corruption costs zero wasted iterations: the copy "
+              "is re-pushed\n   from live state without touching the "
+              "iteration)")
 
 
 if __name__ == "__main__":

@@ -725,7 +725,14 @@ class ShardedFailureRuntime:
         rq = jax.device_put(
             jnp.zeros((3, self.n, w, self.part.bn), self.problem.b.dtype),
             NamedSharding(self.mesh, P(None, "nodes")))
-        return st._replace(rq=rq)
+        st = st._replace(rq=rq)
+        if not isinstance(st.q_sums, tuple):
+            # per-holder checksums of the physical copies ride along with the
+            # host-visible q checksums (same push-time write protocol)
+            st = st._replace(rq_sums=jax.device_put(
+                jnp.zeros((3, self.n), self.problem.b.dtype),
+                NamedSharding(self.mesh, P(None, "nodes"))))
+        return st
 
     def _dead(self, failed) -> jnp.ndarray:
         dead = np.zeros(self.n, bool)
@@ -750,7 +757,25 @@ class ShardedFailureRuntime:
             q=self._zero_ax1(st.q, dead))
         if not isinstance(st.rq, tuple):
             st = st._replace(rq=self._zero_ax1(st.rq, dead))
+        # keep checksums consistent with the zeroed copies (sum of zeros = 0)
+        # so the wipe itself never reads as queue corruption
+        col = jnp.asarray(self._dead(failed))[None, :]
+        if not isinstance(st.q_sums, tuple) and st.q_sums.shape[1] == self.n:
+            st = st._replace(q_sums=jnp.where(col, 0, st.q_sums))
+        if not isinstance(st.rq_sums, tuple):
+            st = st._replace(rq_sums=jnp.where(col, 0, st.rq_sums))
         return st
+
+    def lose_live(self, st, failed):
+        """SDC-repair injection: discard the flagged devices' live vectors
+        and starred locals but keep their queue rows and held copies —
+        nothing was physically lost, the stored redundancy is still intact
+        (and checksum-verified at read time)."""
+        dead = self._dead(failed)
+        l = lambda v: self._zero_rows(v, dead)
+        return st._replace(pcg=self.lose_pcg(st.pcg, failed),
+                           x_s=l(st.x_s), r_s=l(st.r_s), z_s=l(st.z_s),
+                           p_s=l(st.p_s))
 
     def mark_wiped(self, failed, newest_tag: int) -> None:
         """Record that the failed devices' held copies are gone: every queue
@@ -758,6 +783,23 @@ class ShardedFailureRuntime:
         pushed *later* (a strictly newer tag) carry fresh copies again."""
         for d in failed:
             self._wiped[int(d)] = int(newest_tag)
+
+    def _checksum_valid(self, st, slots) -> np.ndarray:
+        """Read-time verification of the device-resident copies: recompute
+        each holder's checksum for the slots about to be read and exclude
+        holders whose stored copy no longer matches its push-time checksum
+        (a corrupted copy must never enter Alg. 2 — ``copy_sources`` falls
+        back to an alternate holder, or raises when none is left). The
+        comparison is tolerance-based (differing jit contexts may reduce in
+        a different order) and NaN-unsafe values compare as corrupt."""
+        if isinstance(getattr(st, "rq_sums", ()), tuple):
+            return np.ones(self.n, bool)
+        ok = np.ones(self.n, bool)
+        for slot in sorted({int(s) for s in slots}):
+            actual = np.asarray(jax.device_get(st.rq[slot]).sum(axis=(1, 2)))
+            ref = np.asarray(jax.device_get(st.rq_sums[slot]))
+            ok &= np.abs(actual - ref) <= 1e-9 * (np.abs(ref) + 1.0)
+        return ok
 
     def _valid_sources(self, read_tag: int) -> np.ndarray:
         """Which devices hold fresh copies in a queue entry tagged
@@ -778,8 +820,9 @@ class ShardedFailureRuntime:
         from repro.core import failures
 
         oldest_read = int(st.q_tags[prev_slot])
-        tiles, src = self.plan.copy_sources(
-            failed, self._valid_sources(oldest_read))
+        valid = self._valid_sources(oldest_read)
+        valid &= self._checksum_valid(st, (prev_slot, curr_slot))
+        tiles, src = self.plan.copy_sources(failed, valid)
         slots = np.array([self._slot_of[int(d)][int(t)]
                           for t, d in zip(tiles, src)], np.int32)
         f_rows = jnp.asarray(failures.failed_rows(self.part, list(failed)))

@@ -179,3 +179,12 @@ def build_plan(a: BlockEll, part: Partition, phi: int) -> RedundancyPlan:
                           extra_tiles_sent=extra_total)
     plan.verify()
     return plan
+
+
+def shrink_plan(plan: RedundancyPlan, a_new: BlockEll,
+                part_new) -> RedundancyPlan:
+    """Elastic continuation: rebuild the redundancy plan for the shrunk
+    partition, clamping φ below the new node count (φ copies need φ + 1
+    distinct holders; a 2-node mesh can sustain at most φ = 1)."""
+    phi = min(plan.phi, part_new.n_nodes - 1)
+    return build_plan(a_new, part_new, phi)

@@ -34,12 +34,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import esr, esrp, imcr
-from repro.core.aspmv import RedundancyPlan, build_plan
-from repro.core.failures import (FailureEvent, failed_row_mask,
+from repro.core import elastic as elastic_mod
+from repro.core import esr, esrp, imcr, sdc
+from repro.core.aspmv import RedundancyPlan, build_plan, shrink_plan
+from repro.core.failures import (FailureEvent, SDCEvent, failed_row_mask,
                                  normalize_scenario, zero_failed)
 from repro.core.ops import SolverOps, make_closure_ops
 from repro.core.pcg import PCGState, residual_drift
+from repro.core.tiers import resolve_tier
 from repro.sparse.matrices import Problem
 
 
@@ -62,6 +64,19 @@ class EventReport:
     #                              shards supplied the failed rows'
     #                              p-copies (sharded runtime; empty on the
     #                              host-side simulator)
+    kind: str = "fail-stop"      # "fail-stop" | "sdc-inject" | "sdc-repair"
+    detector: str = ""           # sdc-repair: which invariant fired
+    detect_iter: int = -1        # sdc-repair: iteration the check fired at
+    detect_latency: int = -1     # detect_iter − injection iteration (≤ one
+    #                              invariant-check period by construction)
+    sdc_target: str = ""         # sdc-inject: corrupted array ("p"/"r"/...)
+    sdc_violation: float = float("nan")   # the relative violation measured
+    sdc_tol: float = float("nan")         # the tolerance it was compared to
+    tier: str = ""               # storage tier the recovery read from
+    fetch_bytes: int = 0         # redundancy bytes the recovery fetched
+    fetch_s_model: float = 0.0   # tier cost model applied to fetch_bytes
+    elastic_n_nodes: int = 0     # >0: node count the run continued on after
+    #                              this event (elastic shrunk-mesh recovery)
 
 
 @dataclasses.dataclass
@@ -91,6 +106,17 @@ class SolveReport:
     converged: bool = True       # False: the run stopped at max_iters with
     #                              ||r|| still above threshold
     precond_reload_bytes: int = 0   # summed over events (sharded runtime)
+    tier: str = ""               # redundancy storage tier (core.tiers)
+    push_count: int = 0          # storage pushes executed over the run
+    #                              (incl. re-pushes on rolled-back stretches)
+    push_bytes: int = 0          # total bytes those pushes moved into the
+    #                              tier (per-push volume × push_count)
+    push_s_model: float = 0.0    # tier cost model over all pushes
+    fetch_s_model: float = 0.0   # summed over events' recovery fetches
+    sdc_checks: int = 0          # invariant checks evaluated
+    sdc_check_every: int = 0     # the cadence they ran at (0 = SDC off)
+    final_n_nodes: int = 0       # node count at convergence (shrinks under
+    #                              elastic recovery)
     x: Optional[object] = dataclasses.field(default=None, repr=False)
     #                              final iterate (device array) — lets parity
     #                              tests assert bit-identical rejoin; rel/
@@ -136,7 +162,56 @@ def solve_resilient(
     #                                    device-resident redundancy queue,
     #                                    shard_map injection, and recovery
     #                                    reads from surviving devices' shards
+    sdc_policy: Optional[sdc.SDCPolicy] = None,   # enable the invariant
+    #                                    checks (auto-enabled with defaults
+    #                                    when the scenario holds an SDCEvent)
+    storage_tier="device-neighbour",   # core.tiers name or StorageTier: the
+    #                                    redundancy-queue placement cost model
+    elastic: bool = False,             # no replacement nodes: after each
+    #                                    fail-stop event, re-partition onto
+    #                                    the shrunk node count and continue
 ) -> SolveReport:
+    part = problem.part
+    pending = normalize_scenario(scenario, fail_at, failed_nodes,
+                                 part.n_nodes)
+    sdc_events = [e for e in pending if isinstance(e, SDCEvent)]
+    if sdc_events or sdc_policy is not None:
+        if strategy not in ("esrp", "none"):
+            raise ValueError(
+                f"SDC detection/repair supports the esrp and none strategies "
+                f"(got {strategy!r}): imcr's checkpoint protocol has no "
+                f"per-iteration invariants to verify against")
+        if strategy == "esrp" and T == 1:
+            raise ValueError(
+                "SDC with T=1 (ESR) is unsupported: ESR stores every "
+                "iteration, so corrupted state would be committed to the "
+                "redundancy queue before any check cadence could catch it — "
+                "use T >= 2")
+        if strategy == "none" and any(e.target == "queue"
+                                      for e in sdc_events):
+            raise ValueError(
+                'strategy="none" keeps no redundancy queue — there is no '
+                '"queue" shard to corrupt')
+        if sdc_policy is None:
+            sdc_policy = sdc.SDCPolicy()
+    sdc_on = sdc_policy is not None
+    # per-push queue checksums: written at push time, compared at check and
+    # read time (only meaningful when something both stores and checks)
+    qsum_slabs = part.n_nodes if (sdc_on and strategy == "esrp") else 0
+    if elastic:
+        if strategy != "esrp":
+            raise ValueError(
+                f"elastic shrunk-mesh recovery needs the esrp strategy (got "
+                f"{strategy!r}): Alg. 2 reconstruction provides the complete "
+                f"state the shrunk partition continues from")
+        if failure_runtime is not None or ops is not None \
+                or matvec is not None:
+            raise ValueError(
+                "elastic recovery re-partitions the problem and rebuilds its "
+                "solver ops — it requires the default problem-built ops (no "
+                "custom ops/matvec) and no sharded failure runtime")
+    tier = resolve_tier(storage_tier)
+    itemsize = np.dtype(problem.b.dtype).itemsize
     if ops is None:
         if matvec is not None:
             # cache the closure bundle on the problem so repeated solves with
@@ -156,12 +231,12 @@ def solve_resilient(
     matvec = ops.matvec
     precond = ops.precond
     b = problem.b
-    thresh_dev = jnp.asarray(rtol * float(jnp.linalg.norm(b)), b.dtype)
+    bnorm = float(jnp.linalg.norm(b))
+    thresh_dev = jnp.asarray(rtol * bnorm, b.dtype)
     # host-side scans must compare against the *same* value the chunk
     # runner's freeze uses, or (in f32) a norm between the two would freeze
     # the device state without the host ever declaring convergence
     thresh = float(thresh_dev)
-    part = problem.part
 
     plan: Optional[RedundancyPlan] = None
     push = None
@@ -180,7 +255,7 @@ def solve_resilient(
                                           part.rows_per_node, n,
                                           thresh_dev, gated)
     elif strategy == "esrp":
-        st = esrp.esrp_init(matvec, precond, b, dot=dot)
+        st = esrp.esrp_init(matvec, precond, b, dot=dot, n_slabs=qsum_slabs)
         if failure_runtime is not None:
             st = failure_runtime.init_queue(st)
         run = lambda s, n: esrp.run_chunk(s, ops, T, n, thresh_dev,
@@ -192,8 +267,6 @@ def solve_resilient(
     else:
         raise ValueError(strategy)
 
-    pending = normalize_scenario(scenario, fail_at, failed_nodes,
-                                 part.n_nodes)
     event_reports: list[EventReport] = []
     recovery_s = 0.0
     wasted = 0
@@ -208,10 +281,20 @@ def solve_resilient(
     run_calls = 0
     resume_numeric_only = False
     converged = False
-    # one chunk's norm record kept in flight: (device norms, start iteration).
-    # Readback (the host sync) happens only after the *next* chunk has been
-    # dispatched, so device compute and host bookkeeping overlap.
-    inflight: Optional[tuple[jax.Array, int]] = None
+    sdc_checks = 0
+    sdc_repairs = 0
+    # injections whose corruption no repair has cleared yet, for the
+    # detection-latency attribution: (injection iter, target)
+    sdc_wait: list[tuple[int, str]] = []
+    # iteration stretches actually executed (rollback re-executes, so pushes
+    # re-happen) — the tier push accounting replays the storage schedule
+    # over them after the run
+    push_ranges: list[tuple[int, int]] = []
+    # one chunk's norm record kept in flight: (device norms, start
+    # iteration, dispatched length). Readback (the host sync) happens only
+    # after the *next* chunk has been dispatched, so device compute and host
+    # bookkeeping overlap.
+    inflight: Optional[tuple[jax.Array, int, int]] = None
 
     def settle(entry) -> bool:
         """Block on one chunk's norm record; True iff it converged. The
@@ -219,8 +302,10 @@ def solve_resilient(
         live ``st`` already is the state at iteration base + hit + 1 — no
         re-run needed, only the count is fixed up."""
         nonlocal total_iters, converged
-        norms, base = entry
+        norms, base, n_disp = entry
         hit = _find_convergence(np.asarray(norms), thresh)
+        # iterations past a convergence hit ran frozen — no pushes happened
+        push_ranges.append((base, base + (hit + 1 if hit >= 0 else n_disp)))
         if hit >= 0:
             total_iters = base + hit + 1
             converged = True
@@ -245,11 +330,19 @@ def solve_resilient(
         n = chunk
         if pending:
             n = min(n, pending[0].iter - total_iters)
+        if sdc_on:
+            # land exactly on every invariant-check boundary: the cadence,
+            # plus (ESRP) every storage iteration — state must be verified
+            # clean BEFORE it is committed to the queue/stars, or a later
+            # rollback would faithfully restore corrupted copies
+            n = min(n, _next_sdc_boundary(
+                total_iters, sdc_policy.check_every, T,
+                strategy == "esrp") - total_iters)
         entry = None
         if n > 0:
             st, norms = run(st, n)               # async dispatch
             run_calls += 1
-            entry = (norms, total_iters)
+            entry = (norms, total_iters, n)
             total_iters += n
 
         if inflight is not None:
@@ -259,8 +352,11 @@ def solve_resilient(
                 #                                  the state is frozen past
                 #                                  convergence by construction
         at_fail = bool(pending) and total_iters == pending[0].iter
+        at_check = (sdc_on and not at_fail and total_iters > 0
+                    and _at_sdc_boundary(total_iters, sdc_policy.check_every,
+                                         T, strategy == "esrp"))
         if entry is not None:
-            if at_fail or total_iters >= max_iters:
+            if at_fail or at_check or total_iters >= max_iters:
                 if settle(entry):
                     break
             else:
@@ -270,35 +366,172 @@ def solve_resilient(
 
         if at_fail:
             ev = pending.pop(0)
-            failed = list(ev.nodes)
-            ev_inner = float("nan")
-            ev_pff = -1
-            ev_reload = 0
-            ev_src: tuple[int, ...] = ()
-            if strategy == "imcr":
-                st, ev_wasted, target, rec_t = _imcr_failure(
-                    st, part, failed, phi, matvec, precond, b,
-                    dot=dot, fruntime=failure_runtime)
-            elif strategy == "none":
-                # no redundancy of any kind: nothing can rebuild the lost
-                # entries — cleanly restart from scratch, counting the work
-                st, ev_wasted, target, rec_t = _none_failure(
-                    st, matvec, precond, b, dot=dot)
+            if any(nd >= part.n_nodes for nd in ev.nodes):
+                raise ValueError(
+                    f"event at iter {ev.iter} names node(s) {ev.nodes} "
+                    f"outside the current {part.n_nodes}-node partition "
+                    f"(elastic recovery shrank the mesh)")
+            if isinstance(ev, SDCEvent):
+                # silent corruption: iteration ev.iter executes with the
+                # corruption struck mid-iteration; nothing stops, nothing is
+                # reported to the solver — only an invariant check can catch
+                # it downstream
+                st = _inject_sdc(problem, st, ev,
+                                 T if strategy == "esrp" else (1 << 30),
+                                 ops, b, resume_rr, gated, push)
+                total_iters = int(st.pcg.j)
+                push_ranges.append((ev.iter, ev.iter + 1))
+                sdc_wait.append((ev.iter, ev.target))
+                event_reports.append(EventReport(
+                    iter=ev.iter, nodes=ev.nodes, target_iter=total_iters,
+                    wasted_iters=0, recovery_s=0.0, inner_rel=float("nan"),
+                    kind="sdc-inject", sdc_target=ev.target, tier=tier.name))
+                # the landing count may itself be a check boundary (e.g. the
+                # event struck a first-push iteration, so the very next
+                # iteration star-captures and pushes again): run the check
+                # NOW, before any dispatch commits the corrupted state to
+                # storage — otherwise a later rollback would faithfully
+                # restore the corruption
+                at_check = _at_sdc_boundary(total_iters,
+                                            sdc_policy.check_every, T,
+                                            strategy == "esrp")
             else:
-                (st, ev_wasted, target, ev_inner, rec_t, ev_pff, ev_reload,
-                 ev_src) = _esrp_failure(
-                    problem, plan, st, failed, T, ops, pff_precond,
-                    fruntime=failure_runtime, push=push)
-                inner_rel = ev_inner
-            recovery_s += rec_t
-            wasted += ev_wasted
-            event_reports.append(EventReport(
-                iter=ev.iter, nodes=ev.nodes, target_iter=target,
-                wasted_iters=ev_wasted, recovery_s=rec_t,
-                inner_rel=ev_inner, pff_iters=ev_pff,
-                precond_reload_bytes=ev_reload, queue_src_nodes=ev_src))
-            total_iters = int(st.pcg.j)
-            resume_numeric_only = target >= 0
+                failed = list(ev.nodes)
+                ev_inner = float("nan")
+                ev_pff = -1
+                ev_reload = 0
+                ev_src: tuple[int, ...] = ()
+                ev_fetch = 0
+                ev_fetch_s = 0.0
+                if strategy == "imcr":
+                    st, ev_wasted, target, rec_t = _imcr_failure(
+                        st, part, failed, phi, matvec, precond, b,
+                        dot=dot, fruntime=failure_runtime)
+                elif strategy == "none":
+                    # no redundancy of any kind: nothing can rebuild the lost
+                    # entries — cleanly restart from scratch, counting the work
+                    st, ev_wasted, target, rec_t = _none_failure(
+                        st, matvec, precond, b, dot=dot)
+                else:
+                    (st, ev_wasted, target, ev_inner, rec_t, ev_pff, ev_reload,
+                     ev_src) = _esrp_failure(
+                        problem, plan, st, failed, T, ops, pff_precond,
+                        fruntime=failure_runtime, push=push,
+                        n_slabs=qsum_slabs)
+                    inner_rel = ev_inner
+                    push_ranges.append((ev.iter, ev.iter + 1))  # the prelude push
+                    if target >= 0:
+                        ev_fetch = tier.fetch_bytes(
+                            len(failed) * part.rows_per_node, itemsize)
+                        ev_fetch_s = tier.read_s(ev_fetch)
+                recovery_s += rec_t
+                wasted += ev_wasted
+                er = EventReport(
+                    iter=ev.iter, nodes=ev.nodes, target_iter=target,
+                    wasted_iters=ev_wasted, recovery_s=rec_t,
+                    inner_rel=ev_inner, pff_iters=ev_pff,
+                    precond_reload_bytes=ev_reload, queue_src_nodes=ev_src,
+                    tier=tier.name, fetch_bytes=ev_fetch,
+                    fetch_s_model=ev_fetch_s)
+                if elastic:
+                    # no replacement node exists: re-partition the problem onto
+                    # the surviving count and rebuild everything layout-bound
+                    # (ops, plan, thresholds); the recovered state extends with
+                    # exactly-consistent zero padding rows (core.elastic)
+                    n_new = part.n_nodes - len(ev.nodes)
+                    problem = elastic_mod.shrink_problem(problem, n_new)
+                    part = problem.part
+                    st = elastic_mod.remap_state(st, part.m, part.n_nodes)
+                    ops = problem.solver_ops(backend)
+                    matvec, precond = ops.matvec, ops.precond
+                    dot = getattr(ops, "dot", None)
+                    b = problem.b
+                    bnorm = float(jnp.linalg.norm(b))
+                    thresh_dev = jnp.asarray(rtol * bnorm, b.dtype)
+                    thresh = float(thresh_dev)
+                    plan = shrink_plan(plan, problem.a, part)
+                    if qsum_slabs:
+                        qsum_slabs = part.n_nodes
+                    er.elastic_n_nodes = n_new
+                    # the run/resume closures read ops/b/thresh_dev late-bound —
+                    # rebinding the locals above re-targets them to the shrunk
+                    # layout
+                event_reports.append(er)
+                total_iters = int(st.pcg.j)
+                resume_numeric_only = target >= 0
+
+        if at_check:
+            sdc_checks += 1
+            det = sdc.run_checks(ops, st, b, part, bnorm, sdc_policy)
+            if det is not None:
+                sdc_repairs += 1
+                if sdc_repairs > sdc_policy.max_repairs:
+                    raise RuntimeError(
+                        f"SDC repair fired {sdc_repairs} times without "
+                        f"clearing the invariant violation "
+                        f"({det.detector}: {det.violation:.3e} > "
+                        f"{det.tol:.3e}) — corruption outside the "
+                        f"recoverable state, or tolerances below the "
+                        f"solver's noise floor")
+                # detection-latency attribution: the oldest injection this
+                # detector class can see (queue checksums see only queue
+                # corruption; the state invariants see everything else)
+                want_q = det.detector == "queue-checksum"
+                attr = [i for i, tg in sdc_wait if (tg == "queue") == want_q]
+                sdc_wait = [(i, tg) for i, tg in sdc_wait
+                            if (tg == "queue") != want_q]
+                latency = total_iters - attr[0] if attr else -1
+                J = int(st.pcg.j)
+                ev_inner = float("nan")
+                ev_pff = -1
+                rec_t = 0.0
+                ev_wasted = 0
+                ev_src = ()
+                ev_fetch = 0
+                ev_fetch_s = 0.0
+                if want_q:
+                    # the corrupted copies ARE the redundancy — nothing can
+                    # rebuild them; invalidate their slot so no recovery
+                    # ever reads them (the next push refreshes the queue).
+                    # The live trajectory is untouched: queue corruption
+                    # never feeds forward.
+                    st = _invalidate_queue_slots(st, det)
+                    target = J
+                elif strategy == "none":
+                    st, ev_wasted, target, rec_t = _none_failure(
+                        st, matvec, precond, b, dot=dot)
+                elif len(det.flagged) >= part.n_nodes:
+                    # catastrophic (all slabs non-finite): no survivors to
+                    # reconstruct from — restart clean
+                    st = esrp.esrp_init(matvec, precond, b, dot=dot,
+                                        n_slabs=qsum_slabs)
+                    if failure_runtime is not None:
+                        st = failure_runtime.init_queue(st, reset=True)
+                    ev_wasted, target = J, -1
+                else:
+                    (st, ev_wasted, target, ev_inner, rec_t, ev_pff, _,
+                     ev_src) = _esrp_failure(
+                        problem, plan, st, list(det.flagged), T, ops,
+                        pff_precond, fruntime=failure_runtime, push=push,
+                        sdc_mode=True, n_slabs=qsum_slabs)
+                    inner_rel = ev_inner
+                    if target >= 0:
+                        ev_fetch = tier.fetch_bytes(
+                            len(det.flagged) * part.rows_per_node, itemsize)
+                        ev_fetch_s = tier.read_s(ev_fetch)
+                recovery_s += rec_t
+                wasted += ev_wasted
+                event_reports.append(EventReport(
+                    iter=J, nodes=tuple(det.flagged), target_iter=target,
+                    wasted_iters=ev_wasted, recovery_s=rec_t,
+                    inner_rel=ev_inner, pff_iters=ev_pff,
+                    queue_src_nodes=ev_src, kind="sdc-repair",
+                    detector=det.detector, detect_iter=J,
+                    detect_latency=latency, sdc_violation=det.violation,
+                    sdc_tol=det.tol, tier=tier.name, fetch_bytes=ev_fetch,
+                    fetch_s_model=ev_fetch_s))
+                total_iters = int(st.pcg.j)
+                resume_numeric_only = (not want_q) and target >= 0
     runtime = time.perf_counter() - t0
 
     pcg = st.pcg
@@ -307,7 +540,11 @@ def solve_resilient(
     rel = float(jnp.linalg.norm(pcg.r)) / float(jnp.linalg.norm(b))
     nat_bytes = tot_bytes = 0
     if plan is not None:
-        nat_bytes, tot_bytes = plan.bytes_per_aspmv(np.dtype(problem.b.dtype).itemsize)
+        nat_bytes, tot_bytes = plan.bytes_per_aspmv(itemsize)
+    push_count = per_push = 0
+    if strategy == "esrp" and plan is not None:
+        push_count = _count_pushes(push_ranges, T)
+        per_push = tier.push_bytes(plan, part.m, itemsize)
     return SolveReport(
         strategy=strategy, T=T, phi=phi, converged_iter=total_iters,
         rel_residual=rel, runtime_s=runtime, recovery_s=recovery_s,
@@ -319,7 +556,97 @@ def solve_resilient(
         converged=converged,
         precond_reload_bytes=sum(e.precond_reload_bytes
                                  for e in event_reports),
+        tier=tier.name, push_count=push_count,
+        push_bytes=push_count * per_push,
+        push_s_model=push_count * (tier.write_s(per_push) if per_push
+                                   else 0.0),
+        fetch_s_model=sum(e.fetch_s_model for e in event_reports),
+        sdc_checks=sdc_checks,
+        sdc_check_every=sdc_policy.check_every if sdc_on else 0,
+        final_n_nodes=part.n_nodes,
         x=pcg.x)
+
+
+# --------------------------------------------------------------------------- #
+def _at_sdc_boundary(j: int, check_every: int, T: int,
+                     esrp_storage: bool) -> bool:
+    """Is iteration count ``j`` an invariant-check point? The cadence, plus
+    (ESRP) every storage iteration: a check right before each push/star
+    commit guarantees the queue and the rollback anchor only ever hold
+    verified state — which is what makes a later rollback-based repair
+    sound."""
+    if j % check_every == 0:
+        return True
+    return esrp_storage and j > 2 and (j % T == 0 or (j - 1) % T == 0)
+
+
+def _next_sdc_boundary(j: int, check_every: int, T: int,
+                       esrp_storage: bool) -> int:
+    """Smallest check boundary strictly greater than ``j``."""
+    nxt = (j // check_every + 1) * check_every
+    if esrp_storage:
+        for k in range(j + 1, nxt):
+            if k > 2 and (k % T == 0 or (k - 1) % T == 0):
+                return k
+    return nxt
+
+
+def _count_pushes(ranges: list[tuple[int, int]], T: int) -> int:
+    """Replay the Alg. 3 storage schedule over the executed iteration
+    stretches (rollback re-executes a stretch, so its pushes physically
+    happen again)."""
+    c = 0
+    for base, end in ranges:
+        for j in range(base, end):
+            if j > 2 and (T == 1 or j % T == 0 or (j - 1) % T == 0):
+                c += 1
+    return c
+
+
+def _inject_sdc(problem: Problem, st: esrp.ESRPState, ev: SDCEvent, T: int,
+                solver_ops, b, rr_every: int, gated: bool, push):
+    """Execute iteration ``ev.iter`` with silent corruption struck
+    mid-iteration. The storage prelude runs first and is CLEAN (the paper's
+    injection point is right after the ASpMV — the push already carried the
+    uncorrupted p), then the corruption lands:
+
+      p/r/x/queue: flipped before the numeric update — the corrupted values
+        feed this very iteration and silently propagate (queue corruption
+        touches only the stored copy; the trajectory is unaffected).
+      z: the carried z is recomputed and consumed into p = z + β·p_prev
+        within the same fused update, so a plain pre-step flip of z would
+        be a dead store and never observable. The physical event modeled is
+        a flip landing between z's computation and its use: run the step
+        cleanly, then apply the flip to z and its additive image to p.
+    """
+    st = jax.jit(esrp.esrp_prelude, static_argnums=(1, 2, 3))(st, T, True,
+                                                              push)
+    if ev.target == "z":
+        st = st._replace(pcg=_resume_step(st.pcg, solver_ops, b, rr_every,
+                                          gated))
+        st = sdc.corrupt(st, ev, problem.part)
+    else:
+        st = sdc.corrupt(st, ev, problem.part)
+        st = st._replace(pcg=_resume_step(st.pcg, solver_ops, b, rr_every,
+                                          gated))
+    return st
+
+
+def _invalidate_queue_slots(st: esrp.ESRPState, det) -> esrp.ESRPState:
+    """Queue-checksum repair: drop every slot holding a corrupted copy
+    (tag := -1), zeroing its payload and checksums so later checks see a
+    consistent empty slot. ``recovery_point`` will fall back to an older
+    consecutive pair, or report unrecoverable until the next push."""
+    for slot in sorted(set(det.queue_slots) | set(det.rq_slots)):
+        st = st._replace(q=st.q.at[slot].set(0.0),
+                         q_tags=st.q_tags.at[slot].set(-1))
+        if not isinstance(st.q_sums, tuple):
+            st = st._replace(q_sums=st.q_sums.at[slot].set(0.0))
+        if not isinstance(st.rq, tuple):
+            st = st._replace(rq=st.rq.at[slot].set(0.0))
+            if not isinstance(st.rq_sums, tuple):
+                st = st._replace(rq_sums=st.rq_sums.at[slot].set(0.0))
+    return st
 
 
 # --------------------------------------------------------------------------- #
@@ -333,7 +660,8 @@ def _none_failure(st: esrp.ESRPState, matvec, precond, b, dot=None):
 # --------------------------------------------------------------------------- #
 def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
                   failed: list[int], T: int, solver_ops,
-                  pff_precond: bool = True, fruntime=None, push=None):
+                  pff_precond: bool = True, fruntime=None, push=None,
+                  sdc_mode: bool = False, n_slabs: int = 0):
     """Failure strikes during iteration J right after its (A)SpMV: run the
     iteration-J storage prelude (including, on the sharded runtime, the
     physical redundancy sends that were already in flight), lose the failed
@@ -347,15 +675,31 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     never from a replicated array. Without it (the single-device simulator)
     the queue is the host-visible (3, M) array and injection is the
     replicated ``jnp.where`` of the paper's simulation protocol.
+
+    ``sdc_mode`` repurposes the same machinery for detected silent
+    corruption: nothing was physically lost — the flagged nodes' *live*
+    vectors are untrustworthy, but their queue copies, held redundancy
+    shards, and static data are intact (the check-before-store protocol
+    plus read-time checksums guarantee it). So: no storage prelude (pushing
+    the corrupted p would poison the queue), the discard zeroes live +
+    starred state only, the redundancy survival analysis is skipped, and
+    the p-pair reads straight from the host-visible queue. The rollback
+    then discards EVERY live vector — survivors restore from the (clean)
+    stars, flagged rows rebuild via Alg. 2 — so repair correctness never
+    depends on how precisely the detector localized the corruption.
     """
     part = problem.part
     matvec, precond = solver_ops.matvec, solver_ops.precond
     J = int(st.pcg.j)
-    st = jax.jit(esrp.esrp_prelude, static_argnums=(1, 2, 3))(st, T, True,
-                                                              push)
+    if not sdc_mode:
+        st = jax.jit(esrp.esrp_prelude, static_argnums=(1, 2, 3))(st, T,
+                                                                  True, push)
 
     # --- the failure: all dynamic data on failed nodes is lost -------------
-    if fruntime is not None:
+    if sdc_mode and fruntime is not None:
+        st = fruntime.lose_live(st, failed)
+        reload_bytes = 0
+    elif fruntime is not None:
         st = fruntime.lose_esrp(st, failed)
         reload_desc, reload_bytes = fruntime.precond_reload(failed)
         del reload_desc
@@ -369,15 +713,18 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
         reload_bytes = 0
     pcg = st.pcg
 
-    # per-event φ-copy survival analysis: a redundant copy of every failed
-    # tile must outlive this event's failed set (topology-aware, so a lucky
-    # |failed| > φ set can still pass — see RedundancyPlan.check_event)
-    plan.check_event(failed)
+    if not sdc_mode:
+        # per-event φ-copy survival analysis: a redundant copy of every
+        # failed tile must outlive this event's failed set (topology-aware,
+        # so a lucky |failed| > φ set can still pass — see
+        # RedundancyPlan.check_event). SDC loses no copies — skip.
+        plan.check_event(failed)
 
     target, prev_slot, curr_slot = esrp.recovery_point(st, T)
     if target < 0:
         # before the first completed storage stage: restart from scratch
-        st2 = esrp.esrp_init(matvec, precond, problem.b, dot=solver_ops.dot)
+        st2 = esrp.esrp_init(matvec, precond, problem.b, dot=solver_ops.dot,
+                             n_slabs=n_slabs)
         if fruntime is not None:
             st2 = fruntime.init_queue(st2, reset=True)
         return st2, J, -1, float("nan"), 0.0, -1, reload_bytes, ()
@@ -399,8 +746,11 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     # the redundant p-copies Alg. 2 reads: on the sharded runtime the failed
     # rows are assembled from the surviving devices' physical queue shards
     # (the injection zeroed the failed rows of ``q`` itself); the simulator
-    # reads the host-side queue directly
-    if fruntime is not None:
+    # reads the host-side queue directly. In sdc_mode nothing was wiped —
+    # every node's own queue rows are intact and were checksum-verified by
+    # this very check pass (the queue detector runs first), so the pair
+    # reads straight from ``q`` on both runtimes.
+    if fruntime is not None and not sdc_mode:
         p_prev, p_curr, src_nodes = fruntime.assemble_pair(
             st, prev_slot, curr_slot, failed)
     else:
@@ -445,14 +795,33 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
         q_tags=jnp.asarray([-1, target - 1, target], jnp.int32),
         x_s=x, r_s=r, z_s=z, p_s=p, beta_s=beta_prev, rz_s=rz,
         star_tag=jnp.asarray(target, jnp.int32))
+    if not isinstance(st.q_sums, tuple):
+        nsl = st.q_sums.shape[1]
+        # failed slabs were rebuilt (their content is fresh — recompute);
+        # surviving slabs keep their STORED push-time checksums, so a copy
+        # corrupted before this event keeps failing its checksum after the
+        # restack instead of being laundered into a consistent one
+        fmask = jnp.zeros((nsl,), bool).at[jnp.asarray(failed)].set(True)
+        st2 = st2._replace(q_sums=jnp.stack([
+            jnp.zeros((nsl,), st.q_sums.dtype),
+            jnp.where(fmask, p_prev.reshape(nsl, -1).sum(axis=1),
+                      st.q_sums[prev_slot]),
+            jnp.where(fmask, p_curr.reshape(nsl, -1).sum(axis=1),
+                      st.q_sums[curr_slot])]))
     if fruntime is not None:
         # survivors keep their physical copies; the replacement's shard
         # stays empty (it was wiped) until the next storage push refreshes
         # every device's entry — tracked so a burst event cannot silently
-        # read a stale copy
+        # read a stale copy. (sdc_mode: nothing was wiped — every holder's
+        # copy is intact and stays readable.)
         st2 = st2._replace(rq=jnp.stack(
             [jnp.zeros_like(st.rq[0]), st.rq[prev_slot], st.rq[curr_slot]]))
-        fruntime.mark_wiped(failed, target)
+        if not isinstance(st.rq_sums, tuple):
+            st2 = st2._replace(rq_sums=jnp.stack(
+                [jnp.zeros_like(st.rq_sums[0]), st.rq_sums[prev_slot],
+                 st.rq_sums[curr_slot]]))
+        if not sdc_mode:
+            fruntime.mark_wiped(failed, target)
     pff_stats = getattr(ops.p_solve, "stats", None) if ops.p_solve else None
     pff_iters = pff_stats["iters"] if pff_stats else -1
     return (st2, J - target, target, float(inner_rel), rec_t, pff_iters,

@@ -1,0 +1,116 @@
+"""Elastic shrunk-mesh recovery: continue on N − |failed| nodes.
+
+The paper's protocol assumes a same-size replacement rejoins (the failed
+nodes "act as their own replacements", §4). When no replacement exists, the
+only alternative to aborting is *elastic* recovery: reconstruct the lost
+state exactly as before (Alg. 2 on the original partition — the queue
+copies and the plan are laid out for N nodes and stay valid through the
+reconstruction), then re-partition the problem onto the surviving node
+count and continue there.
+
+Re-partitioning must not perturb the trajectory's mathematics. The shrunk
+partition needs M divisible by ``n_new · lcm(bm, bn, precond_block)``, so
+the problem is re-padded with *decoupled identity rows* (A_ii = 1, b_i = 0
+— the same padding rule ``build_problem`` uses) and every state vector is
+extended with zeros. The extension is exactly consistent: on a padding row
+r = b − Ax = 0 − x = 0, z = (P r)_i = 0 (the row is decoupled, every
+preconditioner's apply reduces to the identity there), p = z + βp = 0, and
+all inner products are unchanged (zero contributions). The continued run
+therefore computes the *same* iterates on the first M entries — up to
+reduction-order rounding, since longer arrays may sum in a different
+association, which is why the rejoin assertion is norm-wise, not bitwise.
+
+The ASpMV redundancy plan, the P_ff recovery operators, and the solver ops
+are all layout-dependent and are rebuilt from the re-padded matrix (the
+static data lives in safe storage — rebuilding it is the same Alg. 2 line 1
+reload a replacement node performs, just for a new layout).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.sparse.matrices import Problem
+from repro.sparse.partition import shrunk_partition
+from repro.sparse.blockell import BlockEll
+from repro.precond.jacobi import block_jacobi_blocks, invert_blocks
+
+
+def shrink_problem(problem: Problem, n_new: int) -> Problem:
+    """Re-partition ``problem`` onto ``n_new`` nodes (cached per n_new).
+
+    Appends decoupled identity rows up to the new partition unit, re-packs
+    the Block-ELL matrix, and rebuilds the preconditioner from the same COO
+    with the same name/block/options — everything a shrunk mesh needs to
+    keep solving the *same* linear system.
+    """
+    if not 1 <= n_new < problem.part.n_nodes:
+        raise ValueError(
+            f"elastic shrink needs 1 <= n_new < {problem.part.n_nodes}, "
+            f"got {n_new}")
+    cache = getattr(problem, "_elastic_cache", None)
+    if cache is None:
+        cache = {}
+        problem._elastic_cache = cache
+    if n_new in cache:
+        return cache[n_new]
+
+    part = problem.part
+    part_new = shrunk_partition(part, n_new, problem.precond_block)
+    m_new = part_new.m
+    rows, cols, vals = problem.coo
+    if m_new != part.m:
+        pad = np.arange(part.m, m_new)
+        rows = np.concatenate([rows, pad])
+        cols = np.concatenate([cols, pad])
+        vals = np.concatenate([vals, np.ones(pad.size, vals.dtype)])
+    dtype = problem.b.dtype
+    a = BlockEll.from_coo(rows, cols, vals, m_new, part.bm, part.bn,
+                          dtype=dtype)
+    diag = block_jacobi_blocks(rows, cols, vals, m_new,
+                               problem.precond_block, dtype)
+    pinv = invert_blocks(diag)
+    from repro import precond as precond_pkg
+    name = problem.precond_name
+    opts = {}
+    for opt in ("omega", "degree", "sweep_mode"):
+        val = getattr(problem.precond, opt, None)
+        if val is not None:
+            opts[opt] = val
+    pc = precond_pkg.build(name, coo=(rows, cols, vals), m=m_new,
+                           block=problem.precond_block, dtype=dtype, a=a,
+                           diag_blocks=diag, pinv_blocks=pinv, **opts)
+    b = jnp.zeros((m_new,), dtype).at[:part.m].set(problem.b)
+    shrunk = Problem(a=a, part=part_new, b=b, pinv_blocks=jnp.asarray(pinv),
+                     diag_blocks=jnp.asarray(diag),
+                     precond_block=problem.precond_block,
+                     coo=(rows, cols, vals), precond=pc)
+    cache[n_new] = shrunk
+    return shrunk
+
+
+def _extend(v: jnp.ndarray, m_new: int) -> jnp.ndarray:
+    if v.ndim == 1:
+        return jnp.zeros((m_new,), v.dtype).at[:v.shape[0]].set(v)
+    return jnp.zeros((v.shape[0], m_new), v.dtype).at[:, :v.shape[1]].set(v)
+
+
+def remap_state(st, m_new: int, n_slabs: int):
+    """Extend a (recovered, full-length-M) ESRPState onto the re-padded
+    length ``m_new``: live vectors, queue copies, and starred locals get
+    zero padding rows (exactly consistent — see module docstring); the
+    per-slab queue checksums are recomputed for the new slab count (the
+    underlying copies did not change, only the slab boundaries did)."""
+    pcg = st.pcg._replace(x=_extend(st.pcg.x, m_new),
+                          r=_extend(st.pcg.r, m_new),
+                          z=_extend(st.pcg.z, m_new),
+                          p=_extend(st.pcg.p, m_new))
+    st = st._replace(pcg=pcg, q=_extend(st.q, m_new),
+                     x_s=_extend(st.x_s, m_new), r_s=_extend(st.r_s, m_new),
+                     z_s=_extend(st.z_s, m_new), p_s=_extend(st.p_s, m_new))
+    if not isinstance(st.q_sums, tuple):
+        sums = st.q.reshape(3, n_slabs, -1).sum(axis=2)
+        # empty slots keep checksum 0 (their content is all-zero anyway)
+        st = st._replace(q_sums=jnp.where((st.q_tags >= 0)[:, None], sums,
+                                          jnp.zeros_like(sums)))
+    return st

@@ -63,11 +63,21 @@ class ESRPState(NamedTuple):
     #                       queue entry on the designated neighbours). Empty
     #                       tuple on the single-device simulator. Tags are
     #                       shared with ``q_tags``.
+    q_sums: jax.Array | tuple = ()   # (3, n_slabs) per-node-slab checksums
+    #                       of each q copy, written at push time under the
+    #                       same lax.cond — the SDC detector and the
+    #                       recovery read recompute and compare (a mismatch
+    #                       means the stored copy was corrupted after the
+    #                       push). Empty tuple = checksums disabled.
+    rq_sums: jax.Array | tuple = ()  # (3, n_nodes) per-holder-device
+    #                       checksums of each rq entry (same protocol).
 
 
 def esrp_init(matvec, precond, b: jax.Array,
               x0: jax.Array | None = None,
-              dot=None) -> ESRPState:
+              dot=None, n_slabs: int = 0) -> ESRPState:
+    """n_slabs > 0 enables the per-push queue checksums (one slab sum per
+    node); 0 keeps them off (legacy callers, microbenchmarks)."""
     pcg = pcg_init(matvec, precond, b, x0, dot)
     z = jnp.zeros_like(b)
     return ESRPState(
@@ -76,7 +86,8 @@ def esrp_init(matvec, precond, b: jax.Array,
         q_tags=jnp.full((3,), -1, jnp.int32),
         x_s=z, r_s=z, z_s=z, p_s=z,
         beta_s=jnp.zeros((), b.dtype), rz_s=jnp.zeros((), b.dtype),
-        star_tag=jnp.full((), -1, jnp.int32))
+        star_tag=jnp.full((), -1, jnp.int32),
+        q_sums=(jnp.zeros((3, n_slabs), b.dtype) if n_slabs > 0 else ()))
 
 
 def storage_flags(j: jax.Array, T: int):
@@ -98,9 +109,18 @@ def push_queue(st: ESRPState, tag: jax.Array, push=None) -> ESRPState:
     q = jnp.concatenate([st.q[1:], st.pcg.p[None]], axis=0)
     tags = jnp.concatenate([st.q_tags[1:], tag[None]])
     st = st._replace(q=q, q_tags=tags)
+    if not isinstance(st.q_sums, tuple):
+        n_slabs = st.q_sums.shape[1]
+        s = st.pcg.p.reshape(n_slabs, -1).sum(axis=1)
+        st = st._replace(
+            q_sums=jnp.concatenate([st.q_sums[1:], s[None]], axis=0))
     if push is not None:
         entry = push(st.pcg.p)                     # (n_nodes, width, bn)
         st = st._replace(rq=jnp.concatenate([st.rq[1:], entry[None]], axis=0))
+        if not isinstance(st.rq_sums, tuple):
+            es = entry.sum(axis=(1, 2))
+            st = st._replace(
+                rq_sums=jnp.concatenate([st.rq_sums[1:], es[None]], axis=0))
     return st
 
 

@@ -31,7 +31,13 @@ from repro.sparse.partition import Partition
 class FailureEvent:
     """One failure event: ``nodes`` fail simultaneously at iteration ``iter``
     (struck right after the (A)SpMV of that iteration, the paper's injection
-    point)."""
+    point).
+
+    ``iter=0`` is valid: the event fires before any storage push completed,
+    and the driver restarts cleanly (target_iter = -1). Negative iterations
+    are rejected here, at construction, instead of surfacing later as a
+    scenario-loop failure.
+    """
 
     iter: int
     nodes: tuple[int, ...]
@@ -40,6 +46,55 @@ class FailureEvent:
         object.__setattr__(self, "nodes",
                            tuple(sorted(int(n) for n in self.nodes)))
         object.__setattr__(self, "iter", int(self.iter))
+        if self.iter < 0:
+            raise ValueError(
+                f"{type(self).__name__} iteration must be >= 0, got "
+                f"{self.iter} (iter=0 fires before the first storage push "
+                f"and restarts; negative iterations can never fire)")
+
+
+SDC_TARGETS = ("p", "r", "z", "x", "queue")
+SDC_KINDS = ("bitflip", "perturb")
+
+
+@dataclasses.dataclass(frozen=True)
+class SDCEvent(FailureEvent):
+    """Silent data corruption: at iteration ``iter`` (right after the
+    (A)SpMV + storage prelude — the same mid-iteration point fail-stop
+    events use), flip bits in / perturb the ``target`` shard owned by each
+    node in ``nodes``. Nothing stops; the corrupted values silently
+    propagate until an invariant check catches them.
+
+    target: "p" | "r" | "z" | "x" — the live vector's entries on the listed
+            nodes; "queue" — the newest redundancy-queue copy's entries on
+            the listed nodes (on the mesh runtime: the physical ``rq`` rows
+            the listed *holder* devices carry).
+    kind:   "bitflip" — XOR bit ``bit`` of ``count`` entries per node
+            (bit 62 = top exponent bit: a catastrophic, obvious flip;
+            bit ~45 a subtle mantissa flip);
+            "perturb" — add ``scale``·max|v| to those entries.
+    """
+
+    target: str = "p"
+    kind: str = "bitflip"
+    bit: int = 62          # bitflip: which of the 64 bits to XOR
+    count: int = 1         # corrupted entries per listed node
+    scale: float = 1e-3    # perturb: relative magnitude of the injection
+    seed: int = 0          # deterministic in-slab entry choice
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.target not in SDC_TARGETS:
+            raise ValueError(f"SDCEvent target must be one of {SDC_TARGETS},"
+                             f" got {self.target!r}")
+        if self.kind not in SDC_KINDS:
+            raise ValueError(f"SDCEvent kind must be one of {SDC_KINDS}, "
+                             f"got {self.kind!r}")
+        if not 0 <= self.bit < 64:
+            raise ValueError(f"SDCEvent bit must be in [0, 64), "
+                             f"got {self.bit}")
+        if self.count < 1:
+            raise ValueError(f"SDCEvent count must be >= 1, got {self.count}")
 
 
 def normalize_scenario(
@@ -75,11 +130,14 @@ def normalize_scenario(
         scenario = [FailureEvent(fail_at, tuple(failed_nodes or [0]))]
     events = [ev if isinstance(ev, FailureEvent) else FailureEvent(*ev)
               for ev in scenario]
-    prev = 0
+    prev = -1
     for ev in events:
+        # iter >= 0 is already guaranteed by FailureEvent.__post_init__;
+        # iter=0 (fires before any storage push — the driver restarts
+        # cleanly) is a valid first event
         if ev.iter <= prev:
             raise ValueError(
-                f"event iterations must be strictly increasing and > 0, "
+                f"event iterations must be strictly increasing, "
                 f"got {[e.iter for e in events]}")
         prev = ev.iter
         if not ev.nodes:
@@ -91,7 +149,10 @@ def normalize_scenario(
             raise ValueError(
                 f"event at iter {ev.iter} names nodes outside "
                 f"[0, {n_nodes}): {ev.nodes}")
-        if len(ev.nodes) >= n_nodes:
+        if len(ev.nodes) >= n_nodes and not isinstance(ev, SDCEvent):
+            # an SDCEvent corrupts data but kills nobody: striking every
+            # node is meaningful (repair rolls back to the surviving
+            # stars/queue); a fail-stop of every node has no survivors
             raise ValueError(
                 f"event at iter {ev.iter} fails all {n_nodes} nodes — "
                 f"no survivors to reconstruct from")

@@ -1,0 +1,290 @@
+"""Silent-data-corruption injection, invariant checks, and localization.
+
+Fail-stop failures announce themselves; SDC does not. Following the
+algorithmic-redundancy line of arXiv:1309.0212 (redundant computation makes
+corrupted iterates *detectable and repairable*), the driver evaluates cheap
+solver invariants on a fixed cadence and, on a violation, routes the run
+through the same Alg. 2 reconstruction a fail-stop uses — rolling everyone
+back to the clean stored stage and rebuilding the flagged nodes' entries
+from the redundancy queue.
+
+The detectors (evaluated every ``check_every`` iterations, one extra SpMV +
+one preconditioner apply per check):
+
+  residual       ‖r − (b − A·x)‖ / ‖b‖ — the recurrence residual must track
+                 the true residual (van der Vorst/Ye drift, paper Eq. 2).
+                 Catches corruption of x or r: a consistent CG update leaves
+                 the deviation vector d = r − (b − A x) *invariant*, so an
+                 injected e_x (d = −A e_x) or e_r (d = e_r) persists until
+                 checked, and its per-node-slab norms localize the corrupted
+                 node (± one halo for e_x).
+  orthogonality  |rᵀp − rz| / (‖r‖·‖p‖) — entering an iteration, CG's local
+                 orthogonality gives rᵀp = rᵀz exactly (p = z + β·p_prev,
+                 rᵀp_prev = O(ε)). A corrupted direction p breaks the
+                 identity; the violation persists for the following
+                 iterations (the Krylov structure is broken), so a check
+                 period away it is still visible. NOTE corruption of p does
+                 NOT break the residual detector — x and r are updated with
+                 the *same* corrupted direction, so r ≡ b − A x is
+                 preserved; this second invariant is what catches it.
+  z-invariant    ‖z − P·r‖ / ‖z‖ — the carried z must be the preconditioned
+                 residual. Catches a bit flip landing in z between its
+                 computation and its use in p = z + β·p_prev (the injection
+                 model for target="z"; see ``corrupt``). Localizes exactly
+                 (P·r is recomputed clean).
+  queue-checksum per-push per-node-slab checksums carried in the state
+                 (``ESRPState.q_sums`` / ``rq_sums``, written at push time
+                 inside the same ``lax.cond``) vs a recompute. Catches
+                 corruption of the redundancy copies themselves — which
+                 never perturbs the trajectory but would poison a later
+                 Alg. 2 read; the same checksums are verified at read time
+                 in ``comm.shard.ShardedFailureRuntime.assemble_pair``.
+
+Tolerances are relative, recorded in the reports, and define the detection
+floor: a flip below the invariant noise (low-order mantissa bits) is
+undetectable but also numerically harmless at that tolerance. All
+comparisons are written NaN-safe (``not (v <= tol)``): an exponent-bit flip
+that drives the state to inf/NaN *fires* the detectors rather than
+vacuously passing them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.failures import SDCEvent
+from repro.sparse.partition import Partition
+
+
+@dataclasses.dataclass(frozen=True)
+class SDCPolicy:
+    """Invariant-check cadence and the (recorded) detection tolerances."""
+
+    check_every: int = 16        # invariant-check period (iterations)
+    res_rtol: float = 1e-7       # ‖r − (b − Ax)‖ / ‖b‖
+    orth_rtol: float = 1e-8      # |rᵀp − rz| / (‖r‖·‖p‖)
+    z_rtol: float = 1e-8         # ‖z − P r‖ / ‖z‖
+    queue_rtol: float = 1e-9     # per-slab checksum relative mismatch
+    flag_frac: float = 0.05      # slab is flagged when its deviation norm
+    #                              exceeds this fraction of the max slab
+    max_repairs: int = 8         # hard stop against a repair loop that
+    #                              cannot clear the violation
+
+    def __post_init__(self):
+        if self.check_every < 1:
+            raise ValueError(
+                f"SDCPolicy.check_every must be >= 1, got {self.check_every}")
+
+
+@dataclasses.dataclass
+class Detection:
+    """One fired invariant check (input to the driver's repair routing)."""
+
+    detector: str                # "residual" | "orthogonality" |
+    #                              "z-invariant" | "queue-checksum"
+    violation: float             # the relative violation that fired
+    tol: float                   # the tolerance it was compared against
+    flagged: tuple[int, ...]     # localized node set (repair reconstructs
+    #                              these; rollback cleans everything else)
+    queue_slots: tuple[int, ...] = ()   # queue-checksum: corrupted q slots
+    rq_slots: tuple[int, ...] = ()      # queue-checksum: corrupted rq slots
+
+
+def slab_sums(v: jax.Array, n_slabs: int) -> jax.Array:
+    """Per-node-slab checksum of a distributed vector (plain slab sum; the
+    push-time and check-time values go through this same helper so a
+    mismatch beyond reduction-order noise means the stored copy changed)."""
+    return v.reshape(n_slabs, -1).sum(axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# injection
+# --------------------------------------------------------------------------- #
+def _uint_dtype(dtype) -> tuple[object, int]:
+    itemsize = jnp.dtype(dtype).itemsize
+    return {8: jnp.uint64, 4: jnp.uint32, 2: jnp.uint16}[itemsize], \
+        itemsize * 8
+
+def _flip(v: jax.Array, idx: np.ndarray, bit: int) -> jax.Array:
+    """XOR bit ``bit`` of the entries at flat indices ``idx``. Elementwise
+    on the (possibly sharded) array — under the mesh each device flips only
+    the entries its own shard holds."""
+    ut, nbits = _uint_dtype(v.dtype)
+    iv = jax.lax.bitcast_convert_type(v, ut)
+    mask = jnp.zeros_like(iv).at[jnp.asarray(idx)].set(
+        ut(1) << ut(min(bit, nbits - 1)))
+    return jax.lax.bitcast_convert_type(iv ^ mask, v.dtype)
+
+
+def _corrupt_values(v: jax.Array, idx: np.ndarray, ev: SDCEvent) -> jax.Array:
+    if ev.kind == "bitflip":
+        return _flip(v, idx, ev.bit)
+    bump = ev.scale * jnp.max(jnp.abs(v))
+    return v.at[jnp.asarray(idx)].add(bump)
+
+
+def _entry_indices(part: Partition, node: int, ev: SDCEvent) -> np.ndarray:
+    """Deterministic corrupted-entry choice inside one node's slab."""
+    lo, hi = part.node_rows(node)
+    rng = np.random.default_rng((ev.seed, ev.iter, node))
+    return rng.integers(lo, hi, size=ev.count)
+
+
+def corrupt(st, ev: SDCEvent, part: Partition):
+    """Apply one SDCEvent to an ESRPState (mid-iteration, after the storage
+    prelude — the same injection point fail-stop events use).
+
+    target p/r/x: flip entries of the live vector entering the iteration
+    (the corrupted values feed the iteration's own update and silently
+    propagate). target z: the carried z is consumed into p = z + β·p_prev
+    within the same fused update, so a flip landing on z between compute
+    and use corrupts *both* — the injection applies the flip to z and adds
+    the identical value delta to p (its additive image through the p
+    update). target "queue": flip entries of the newest valid redundancy
+    copy — the host-visible ``q`` slot slab, and, on the mesh runtime, the
+    listed *holder* devices' physical ``rq`` rows; the live trajectory is
+    untouched, only a later recovery read would be poisoned.
+    """
+    idx = np.concatenate([_entry_indices(part, s, ev) for s in ev.nodes])
+    pcg = st.pcg
+    if ev.target == "p":
+        return st._replace(pcg=pcg._replace(p=_corrupt_values(pcg.p, idx, ev)))
+    if ev.target == "r":
+        return st._replace(pcg=pcg._replace(r=_corrupt_values(pcg.r, idx, ev)))
+    if ev.target == "x":
+        return st._replace(pcg=pcg._replace(x=_corrupt_values(pcg.x, idx, ev)))
+    if ev.target == "z":
+        z_bad = _corrupt_values(pcg.z, idx, ev)
+        delta = z_bad - pcg.z
+        return st._replace(pcg=pcg._replace(z=z_bad, p=pcg.p + delta))
+    # target == "queue"
+    tags = np.asarray(st.q_tags)
+    valid = np.nonzero(tags >= 0)[0]
+    slot = int(valid[-1]) if valid.size else 2
+    st = st._replace(q=st.q.at[slot].set(_corrupt_values(st.q[slot], idx, ev)))
+    if not isinstance(st.rq, tuple):
+        # the physical device-resident copies: flip inside the listed holder
+        # devices' (width, bn) queue rows
+        w, bn = st.rq.shape[2], st.rq.shape[3]
+        for d in ev.nodes:
+            rng = np.random.default_rng((ev.seed, ev.iter, d, 1))
+            flat = rng.integers(0, w * bn, size=ev.count)
+            row = st.rq[slot, d].reshape(-1)
+            st = st._replace(rq=st.rq.at[slot, d].set(
+                _corrupt_values(row, flat, ev).reshape(w, bn)))
+    return st
+
+
+# --------------------------------------------------------------------------- #
+# invariant evaluation
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _invariant_values(ops, pcg, b, n_slabs):
+    """Device computation for one check: the residual-deviation slab norms,
+    the orthogonality violation and its slab partials, the z-invariant slab
+    norms, and the norms the relative tolerances divide by."""
+    d = pcg.r - (b - ops.matvec(pcg.x))
+    dev_slab = jnp.linalg.norm(d.reshape(n_slabs, -1), axis=1)
+    rp = (pcg.r @ pcg.p if ops.dot is None else ops.dot(pcg.r, pcg.p))
+    orth_slab = (pcg.r * (pcg.p - pcg.z)).reshape(n_slabs, -1).sum(axis=1)
+    dz = pcg.z - ops.precond(pcg.r)
+    z_slab = jnp.linalg.norm(dz.reshape(n_slabs, -1), axis=1)
+    return (dev_slab, jnp.abs(rp - pcg.rz), orth_slab, z_slab,
+            jnp.linalg.norm(pcg.r), jnp.linalg.norm(pcg.p),
+            jnp.linalg.norm(pcg.z))
+
+
+def _flag_slabs(slab: np.ndarray, frac: float) -> tuple[int, ...]:
+    top = np.nanmax(slab) if np.isfinite(slab).any() else np.inf
+    if not np.isfinite(top):
+        # inf/NaN deviation: every non-finite slab is suspect
+        return tuple(int(s) for s in np.nonzero(~np.isfinite(slab))[0])
+    return tuple(int(s) for s in np.nonzero(slab >= frac * top)[0])
+
+
+def _queue_mismatch(stored, arrays, n_slabs, rtol, reducer):
+    """Corrupted (slot, node) pairs among the slots with a valid tag."""
+    bad = []
+    for slot, tag, stored_row in arrays:
+        if tag < 0:
+            continue
+        actual = np.asarray(reducer(slot))
+        ref = np.asarray(stored_row)
+        scale = np.abs(ref) + 1.0
+        mism = ~(np.abs(actual - ref) <= rtol * scale)    # NaN-safe
+        for node in np.nonzero(mism)[0]:
+            bad.append((slot, int(node)))
+    return bad
+
+
+def run_checks(ops, st, b, part: Partition, bnorm: float,
+               policy: SDCPolicy) -> Detection | None:
+    """Evaluate every invariant on the current state; return the
+    most-localizable fired Detection (queue checksums first — exact
+    localization, no rollback needed — then residual, z-invariant,
+    orthogonality), or None when all invariants hold."""
+    n = part.n_nodes
+    q_sums = getattr(st, "q_sums", ())
+    rq_sums = getattr(st, "rq_sums", ())
+
+    if not isinstance(q_sums, tuple):
+        tags = np.asarray(st.q_tags)
+        bad_q = _queue_mismatch(
+            q_sums, [(s, int(tags[s]), q_sums[s]) for s in range(3)],
+            n, policy.queue_rtol,
+            lambda s: slab_sums(st.q[s], n))
+        bad_rq = []
+        if not isinstance(rq_sums, tuple):
+            bad_rq = _queue_mismatch(
+                rq_sums, [(s, int(tags[s]), rq_sums[s]) for s in range(3)],
+                n, policy.queue_rtol,
+                lambda s: st.rq[s].sum(axis=(1, 2)))
+        if bad_q or bad_rq:
+            nodes = tuple(sorted({d for _, d in bad_q + bad_rq}))
+            return Detection(
+                detector="queue-checksum", violation=float("nan"),
+                tol=policy.queue_rtol, flagged=nodes,
+                queue_slots=tuple(sorted({s for s, _ in bad_q})),
+                rq_slots=tuple(sorted({s for s, _ in bad_rq})))
+
+    (dev_slab, orth, orth_slab, z_slab, rnorm, pnorm,
+     znorm) = jax.device_get(_invariant_values(ops, st.pcg, b, n))
+    tiny = np.finfo(np.asarray(bnorm).dtype if hasattr(bnorm, "dtype")
+                    else np.float64).tiny
+
+    res_rel = float(np.linalg.norm(dev_slab)) / max(float(bnorm), tiny)
+    if not (res_rel <= policy.res_rtol):                   # NaN-safe
+        return Detection(detector="residual", violation=res_rel,
+                         tol=policy.res_rtol,
+                         flagged=_flag_slabs(dev_slab, policy.flag_frac))
+
+    z_rel = float(np.linalg.norm(z_slab)) / max(float(znorm), tiny)
+    if not (z_rel <= policy.z_rtol):
+        return Detection(detector="z-invariant", violation=z_rel,
+                         tol=policy.z_rtol,
+                         flagged=_flag_slabs(z_slab, policy.flag_frac))
+
+    denom = float(rnorm) * float(pnorm)
+    orth_rel = float(orth) / max(denom, tiny)
+    if not np.isfinite(denom):
+        # ‖r‖·‖p‖ overflowed (r passed the residual check, so this is ‖p‖):
+        # a clean finite direction cannot — the ratio that would hide the
+        # violation (huge/inf → 0) is an overflow artifact, not a pass
+        orth_rel = float("inf")
+    if not (orth_rel <= policy.orth_rtol):
+        # a corrupted direction contaminates every slab through the global
+        # α/β scalars — no sound per-slab localization exists. Flag the slab
+        # with the largest |rᵀ(p − z)| partial (the corrupted entries
+        # dominate it for the flips above the detection floor); repair
+        # correctness never depends on the guess, because the rollback
+        # discards ALL live vectors and rebuilds from clean storage.
+        a = np.abs(orth_slab)
+        a = np.where(np.isfinite(a), a, np.inf)
+        return Detection(detector="orthogonality", violation=orth_rel,
+                         tol=policy.orth_rtol,
+                         flagged=(int(np.argmax(a)),))
+    return None

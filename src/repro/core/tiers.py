@@ -1,0 +1,106 @@
+"""Storage tiers behind the redundancy queue (cost-model layer).
+
+The paper's queue-of-3 lives on the neighbour nodes' memory — the ASpMV
+piggyback makes its push nearly free and its recovery read run at
+interconnect speed. The NVRAM recovery literature (arXiv:2204.11584) shows
+the interesting axis is *where* that redundant state lives: recovery cost is
+dominated by the tier's bandwidth/latency, not by the reconstruction math.
+
+``StorageTier`` abstracts that placement. The data path of the solver is
+unchanged — the queue arrays stay device-resident so the trajectory is
+bit-identical across tiers — but each tier carries a distinct bandwidth/
+latency cost model and a distinct push volume:
+
+  device-neighbour   today's ``ESRPState.rq`` ppermute path: pushes move
+                     only the plan's *extra* tiles (beyond natural SpMV
+                     traffic), reads run at interconnect speed.
+  replicated-host    every node mirrors its p-slab into host memory each
+                     push (PCIe-class bandwidth); recovery fetches the
+                     failed rows back over the same link.
+  simulated-nvram    same full-slab push, but persistent-memory bandwidth
+                     (asymmetric: writes slower than reads) plus a device
+                     latency floor.
+
+The driver threads the chosen tier through ``EventReport`` (per-event fetch
+bytes + modeled fetch seconds) and ``SolveReport`` (push count/bytes/modeled
+seconds), and ``benchmarks/run.py --only failures --tiers`` sweeps recovery
+time vs tier × φ × T from the same measured runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageTier:
+    """One redundancy-storage placement with its cost model.
+
+    read_gbps / write_gbps: sustained bandwidth of the recovery read and
+    the storage push (GB/s); latency_s: per-transfer latency floor;
+    full_slab_push: True when a push writes each node's whole p-slab to the
+    tier (host/NVRAM mirroring) rather than only the plan's extra redundant
+    tiles (the device-neighbour ASpMV piggyback).
+    """
+
+    name: str
+    read_gbps: float
+    write_gbps: float
+    latency_s: float
+    full_slab_push: bool
+
+    def read_s(self, nbytes: int) -> float:
+        """Modeled seconds to fetch ``nbytes`` from this tier."""
+        return self.latency_s + nbytes / (self.read_gbps * 1e9)
+
+    def write_s(self, nbytes: int) -> float:
+        """Modeled seconds to push ``nbytes`` into this tier."""
+        return self.latency_s + nbytes / (self.write_gbps * 1e9)
+
+    def push_bytes(self, plan, m: int, itemsize: int) -> int:
+        """Bytes one storage push moves into this tier.
+
+        Device-neighbour: only the extra redundant tiles beyond the natural
+        SpMV traffic (the ASpMV piggyback — paper §2.2.1); the natural tiles
+        move with the SpMV whether or not redundancy is on. Full-slab tiers
+        mirror the entire length-``m`` direction vector.
+        """
+        if self.full_slab_push or plan is None:
+            return m * itemsize
+        nat, tot = plan.bytes_per_aspmv(itemsize)
+        return tot - nat
+
+    def fetch_bytes(self, n_failed_rows: int, itemsize: int) -> int:
+        """Bytes a recovery fetches: the p^(j-1)/p^(j) pair restricted to
+        the failed rows (Alg. 2's inputs; static data reloads are accounted
+        separately via ``EventReport.precond_reload_bytes``)."""
+        return 2 * n_failed_rows * itemsize
+
+
+# Bandwidth/latency figures are order-of-magnitude class numbers for the
+# three placements (interconnect / PCIe host copy / persistent memory with
+# asymmetric write bandwidth); the sweep compares tiers relative to each
+# other, not against a specific part.
+DEVICE_NEIGHBOUR = StorageTier("device-neighbour", read_gbps=100.0,
+                               write_gbps=100.0, latency_s=2e-6,
+                               full_slab_push=False)
+REPLICATED_HOST = StorageTier("replicated-host", read_gbps=12.0,
+                              write_gbps=12.0, latency_s=2e-5,
+                              full_slab_push=True)
+SIMULATED_NVRAM = StorageTier("simulated-nvram", read_gbps=6.0,
+                              write_gbps=2.0, latency_s=1e-4,
+                              full_slab_push=True)
+
+TIERS: dict[str, StorageTier] = {t.name: t for t in
+                                 (DEVICE_NEIGHBOUR, REPLICATED_HOST,
+                                  SIMULATED_NVRAM)}
+
+
+def resolve_tier(tier) -> StorageTier:
+    """Accept a tier name or a StorageTier instance."""
+    if isinstance(tier, StorageTier):
+        return tier
+    if tier in TIERS:
+        return TIERS[tier]
+    raise ValueError(
+        f"unknown storage tier {tier!r}; known: {sorted(TIERS)} "
+        f"(or pass a StorageTier instance)")

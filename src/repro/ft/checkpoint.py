@@ -6,9 +6,17 @@ every T_disk >> T steps). Plain npz + a json manifest per save — no external
 checkpoint library in this environment. Arrays are saved device-host via
 numpy; restore returns numpy arrays that jax consumes directly (sharding is
 re-applied by the caller's jit in_shardings).
+
+Every payload is checksummed (sha256 over the raw npz bytes) at save time
+and verified at load time: under a silent-data-corruption threat model a
+checkpoint that restores corrupted bytes is *worse* than no checkpoint —
+the run resumes from poisoned state with no detector left to notice (the
+in-memory invariant checks only guard live solver state). A mismatch raises
+``CorruptCheckpointError`` instead of silently unflattening garbage.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 
@@ -16,9 +24,21 @@ import jax
 import numpy as np
 
 
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint payload failed its integrity check on load."""
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _digest(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def save(path: str, step: int, **trees) -> None:
@@ -29,11 +49,13 @@ def save(path: str, step: int, **trees) -> None:
     manifest = {"step": step, "trees": {}}
     for name, tree in trees.items():
         leaves, treedef = _flatten(tree)
-        np.savez(os.path.join(tmp, f"{name}.npz"),
+        payload = os.path.join(tmp, f"{name}.npz")
+        np.savez(payload,
                  **{f"leaf_{i}": np.asarray(a) for i, a in enumerate(leaves)})
         manifest["trees"][name] = {
             "n_leaves": len(leaves),
             "treedef": str(treedef),
+            "sha256": _digest(payload),
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -54,11 +76,30 @@ def latest_step(path: str):
 
 def restore(path: str, step: int, templates: dict) -> dict:
     """templates: {name: pytree with the target structure}. Returns
-    {name: restored pytree} (+ "step")."""
+    {name: restored pytree} (+ "step"). Verifies each payload's stored
+    checksum before unflattening; raises CorruptCheckpointError on
+    mismatch."""
     d = os.path.join(path, f"step_{step:08d}")
+    manifest_path = os.path.join(d, "manifest.json")
+    manifest = None
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
     out = {"step": step}
     for name, template in templates.items():
-        data = np.load(os.path.join(d, f"{name}.npz"))
+        payload = os.path.join(d, f"{name}.npz")
+        entry = (manifest or {}).get("trees", {}).get(name, {})
+        expected = entry.get("sha256")
+        if expected is not None:
+            actual = _digest(payload)
+            if actual != expected:
+                raise CorruptCheckpointError(
+                    f"checkpoint payload {payload!r} (step {step}, tree "
+                    f"{name!r}) failed its integrity check: stored sha256 "
+                    f"{expected[:16]}…, got {actual[:16]}… — the bytes "
+                    f"changed after save; refusing to restore corrupted "
+                    f"state")
+        data = np.load(payload)
         leaves, treedef = _flatten(template)
         restored = [data[f"leaf_{i}"] for i in range(len(leaves))]
         out[name] = jax.tree_util.tree_unflatten(treedef, restored)

@@ -85,6 +85,26 @@ class Partition:
         return self.owner_of_row(rows) == self.owner_of_row(cols)
 
 
+def shrunk_partition(part: Partition, n_new: int,
+                     precond_block: int = 1) -> Partition:
+    """The elastic re-partition: the same rows (re-padded up to the new
+    divisibility unit) spread over ``n_new`` < N nodes.
+
+    The new global size is the smallest multiple of
+    ``n_new · lcm(bm, bn, precond_block)`` that holds the current M — the
+    same padding rule ``build_problem`` applies at construction, so the
+    appended rows are decoupled identity rows that never perturb the
+    solution (see core.elastic).
+    """
+    if not 1 <= n_new < part.n_nodes:
+        raise ValueError(
+            f"shrunk partition needs 1 <= n_new < {part.n_nodes}, "
+            f"got {n_new}")
+    unit = n_new * int(np.lcm.reduce([part.bm, part.bn, precond_block]))
+    m_new = ((part.m + unit - 1) // unit) * unit
+    return Partition(m=m_new, n_nodes=n_new, bm=part.bm, bn=part.bn)
+
+
 def neighbor(s: int, k: int, n_nodes: int) -> int:
     """Designated redundancy destination ``d_{s,k}`` — Eq. (1) of the paper.
 

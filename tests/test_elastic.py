@@ -1,0 +1,151 @@
+"""Elastic shrunk-mesh recovery (core.elastic + driver integration).
+
+When no replacement node exists, the run reconstructs on the original
+layout (Alg. 2 — queue and plan are still valid for N nodes), then
+re-partitions onto the survivors and continues. Under test:
+
+  * ``shrunk_partition`` re-pads to the new divisibility unit, and the
+    appended rows are decoupled identity rows (b = 0 there), so the shrunk
+    system's solution restricted to the first M entries IS the original
+    solution;
+  * a multi-node simultaneous event (φ = 2) shrinks 4 → 2 and still
+    converges to the reference solution, for EVERY preconditioner;
+  * staggered shrinks (4 → 3 → 2) chain — each event re-partitions again;
+  * the report records the shrink (EventReport.elastic_n_nodes,
+    SolveReport.final_n_nodes) and elastic composes with SDC checks on the
+    shrunk mesh;
+  * validation: elastic needs esrp and the default problem-built ops, and
+    an event naming a node beyond the shrunk mesh raises.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import elastic
+from repro.core.driver import solve_resilient
+from repro.core.failures import FailureEvent, SDCEvent
+from repro.sparse.matrices import build_problem
+from repro.sparse.partition import shrunk_partition
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return build_problem("poisson2d", n_nodes=4, nx=24, ny=24)
+
+
+@pytest.fixture(scope="module")
+def reference(problem):
+    return solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10)
+
+
+def _assert_matches(rep, problem, reference, tol=1e-9):
+    assert rep.converged
+    m = problem.part.m
+    x = np.asarray(rep.x)
+    # padding rows are decoupled identities with b = 0: they stay exactly 0
+    np.testing.assert_array_equal(x[m:], 0.0)
+    err = float(np.linalg.norm(x[:m] - np.asarray(reference.x)))
+    assert err <= tol * max(float(jnp.linalg.norm(reference.x)), 1.0), err
+
+
+# --------------------------------------------------------------------------- #
+def test_shrunk_partition_padding_rule():
+    from repro.sparse.partition import Partition
+    part = Partition(m=576, n_nodes=4, bm=8, bn=8)
+    p3 = shrunk_partition(part, 3)            # lcm(8,8)·3 = 24 | 576
+    assert (p3.m, p3.n_nodes) == (576, 3)
+    p3b = shrunk_partition(part, 3, precond_block=5)   # unit 120 ∤ 576
+    assert p3b.m == 600 and p3b.m % (3 * 40) == 0
+    with pytest.raises(ValueError, match="1 <= n_new"):
+        shrunk_partition(part, 4)
+    with pytest.raises(ValueError, match="1 <= n_new"):
+        shrunk_partition(part, 0)
+
+
+def test_shrink_problem_appends_identity_rows(problem):
+    shrunk = elastic.shrink_problem(problem, 3)
+    m, m_new = problem.part.m, shrunk.part.m
+    assert shrunk.part.n_nodes == 3 and m_new >= m
+    # same system on the first m entries, identity + zero rhs on the pad
+    np.testing.assert_array_equal(np.asarray(shrunk.b)[:m],
+                                  np.asarray(problem.b))
+    np.testing.assert_array_equal(np.asarray(shrunk.b)[m:], 0.0)
+    rows, cols, vals = shrunk.coo
+    pad = rows >= m
+    np.testing.assert_array_equal(rows[pad], cols[pad])
+    np.testing.assert_array_equal(vals[pad], 1.0)
+    assert shrunk.precond_name == problem.precond_name
+    # cached: the second shrink to the same count is the same object
+    assert elastic.shrink_problem(problem, 3) is shrunk
+
+
+def test_elastic_single_node_shrink(problem, reference):
+    rep = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10,
+                          elastic=True,
+                          scenario=[FailureEvent(iter=35, nodes=(2,))])
+    assert rep.final_n_nodes == 3
+    assert rep.events[0].elastic_n_nodes == 3
+    _assert_matches(rep, problem, reference)
+
+
+@pytest.mark.parametrize("precond,nx,T,fail_iter", [
+    ("jacobi", 24, 10, 15), ("ssor", 24, 10, 15), ("chebyshev", 24, 10, 15),
+    ("ic0", 64, 4, 8),     # ic0 converges in ~6 iterations on the 24² grid —
+    #                        too fast for any completed storage stage; the
+    #                        64² grid takes ~15, so the T=4 stage (stars at
+    #                        j=5) completes before the event at 8
+])
+def test_elastic_multi_node_per_preconditioner(precond, nx, T, fail_iter):
+    """≥1 multi-node scenario per preconditioner: φ=2 sustains a 2-node
+    simultaneous loss; the run continues 4 → 2 and converges."""
+    p = build_problem("poisson2d", n_nodes=4, nx=nx, ny=nx, precond=precond)
+    ref = solve_resilient(p, strategy="esrp", T=T, phi=2, rtol=1e-10)
+    rep = solve_resilient(p, strategy="esrp", T=T, phi=2, rtol=1e-10,
+                          elastic=True,
+                          scenario=[FailureEvent(iter=fail_iter,
+                                                 nodes=(1, 2))])
+    assert rep.converged
+    assert rep.final_n_nodes == 2
+    m = p.part.m
+    err = float(np.linalg.norm(np.asarray(rep.x)[:m] - np.asarray(ref.x)))
+    assert err <= 1e-9 * max(float(jnp.linalg.norm(ref.x)), 1.0), (precond,
+                                                                   err)
+
+
+def test_elastic_staggered_chain(problem, reference):
+    """4 → 3 → 2 across two events; the second event's node id must refer
+    to the SHRUNK mesh."""
+    rep = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10,
+                          elastic=True,
+                          scenario=[FailureEvent(iter=20, nodes=(3,)),
+                                    FailureEvent(iter=50, nodes=(1,))])
+    assert [e.elastic_n_nodes for e in rep.events] == [3, 2]
+    assert rep.final_n_nodes == 2
+    _assert_matches(rep, problem, reference)
+
+
+def test_elastic_with_sdc_on_shrunk_mesh(problem, reference):
+    rep = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10,
+                          elastic=True,
+                          scenario=[FailureEvent(iter=20, nodes=(3,)),
+                                    SDCEvent(iter=45, nodes=(0,),
+                                             target="p")])
+    assert rep.final_n_nodes == 3
+    assert [e.kind for e in rep.events].count("sdc-repair") == 1
+    _assert_matches(rep, problem, reference)
+
+
+def test_elastic_validation(problem):
+    with pytest.raises(ValueError, match="esrp strategy"):
+        solve_resilient(problem, strategy="imcr", elastic=True,
+                        scenario=[FailureEvent(iter=10, nodes=(1,))])
+    with pytest.raises(ValueError, match="default problem-built ops"):
+        solve_resilient(problem, strategy="esrp", elastic=True,
+                        matvec=lambda v: v,
+                        scenario=[FailureEvent(iter=10, nodes=(1,))])
+    # node id beyond the shrunk mesh: valid at scenario-build time (4
+    # nodes), detected at fire time (3 nodes left)
+    with pytest.raises(ValueError, match="outside the current"):
+        solve_resilient(problem, strategy="esrp", T=10, elastic=True,
+                        scenario=[FailureEvent(iter=10, nodes=(0,)),
+                                  FailureEvent(iter=30, nodes=(3,))])

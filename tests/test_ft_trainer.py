@@ -167,6 +167,38 @@ def test_checkpoint_roundtrip(tmp_path, setup):
     assert int(out["opt"].step) == int(opt.step)
 
 
+def test_checkpoint_detects_corrupted_payload(tmp_path, setup):
+    """A checkpoint whose bytes changed after save must raise a descriptive
+    CorruptCheckpointError on restore, not silently unflatten garbage."""
+    model, ts, pipe, specs, params, opt, _ = setup
+    checkpoint.save(str(tmp_path), 3, params=params, opt=opt)
+    payload = tmp_path / "step_00000003" / "params.npz"
+    blob = bytearray(payload.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF                    # one flipped byte
+    payload.write_bytes(bytes(blob))
+    with pytest.raises(checkpoint.CorruptCheckpointError,
+                       match=r"params.*integrity"):
+        checkpoint.restore(str(tmp_path), 3, {"params": params, "opt": opt})
+    # the untouched tree still restores fine on its own
+    out = checkpoint.restore(str(tmp_path), 3, {"opt": opt})
+    assert int(out["opt"].step) == int(opt.step)
+
+
+def test_checkpoint_legacy_manifest_without_checksums(tmp_path, setup):
+    """Manifests written before the checksum field restore unverified
+    (backward compatibility) instead of failing."""
+    import json
+    model, ts, pipe, specs, params, opt, _ = setup
+    checkpoint.save(str(tmp_path), 5, params=params)
+    man = tmp_path / "step_00000005" / "manifest.json"
+    doc = json.loads(man.read_text())
+    for entry in doc["trees"].values():
+        entry.pop("sha256")
+    man.write_text(json.dumps(doc))
+    out = checkpoint.restore(str(tmp_path), 5, {"params": params})
+    assert _max_diff(out["params"], params) == 0.0
+
+
 def test_data_pipeline_deterministic_skippable():
     cfg = smoke_config("internlm2_1_8b")
     pipe = TokenPipeline(cfg, global_batch=2, seq_len=16, seed=3)

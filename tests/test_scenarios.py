@@ -165,6 +165,12 @@ def test_scenario_validation():
     assert ok[1].nodes == (2, 3)
     # legacy shorthand still builds a one-event scenario
     assert normalize_scenario(None, 30, [4], n) == [FailureEvent(30, (4,))]
+    # iter=0 is a valid event (fires before any storage push; the driver
+    # restarts cleanly) — only negatives are rejected, with a clear message
+    assert normalize_scenario([FailureEvent(0, (1,))], None, None,
+                              n)[0].iter == 0
+    with pytest.raises(ValueError, match="must be >= 0"):
+        FailureEvent(-1, (1,))
     assert normalize_scenario(None, None, None, n) == []
     with pytest.raises(ValueError):   # both APIs at once
         normalize_scenario([FailureEvent(10, (1,))], 10, [1], n)
@@ -190,6 +196,18 @@ def test_scenario_validation():
         # — the requested failure never fired and the run reported a clean
         # solve
         normalize_scenario(None, None, [3], n)
+
+
+def test_iter_zero_event_restarts_cleanly(problem, reference):
+    """An event at iteration 0 fires before any storage push completed:
+    the driver restarts from scratch (target_iter = -1) and still
+    converges at the reference iteration."""
+    r = solve_resilient(problem, strategy="esrp", T=20, rtol=1e-10,
+                        scenario=[FailureEvent(0, (2,))])
+    assert r.events[0].target_iter == -1
+    assert r.events[0].wasted_iters == 0
+    assert r.converged
+    assert r.converged_iter == reference.converged_iter
 
 
 def test_failed_nodes_without_fail_at_raises(problem):

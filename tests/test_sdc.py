@@ -1,0 +1,238 @@
+"""Silent-data-corruption detection + repair (core.sdc + driver routing).
+
+The contract under test (beyond fail-stop — ISSUE 6 tentpole):
+  * every SDCEvent target (p, r, x, z, queue) × kind (bitflip, perturb),
+    single- and multi-node, is DETECTED within one invariant-check period
+    and REPAIRED through the same Alg. 2 reconstruction fail-stop uses —
+    the run rejoins the clean reference trajectory (same converged
+    iteration; solution matches within a norm-wise tolerance, since the
+    rollback re-executes a stretch whose reductions may re-associate);
+  * detection is attributed: EventReport records the detector, the
+    detection iteration, the latency, and the measured violation vs the
+    recorded tolerance it was compared against;
+  * queue corruption never perturbs the trajectory — repair is slot
+    invalidation, not rollback;
+  * the detectors NEVER fire on a clean run: failure-free solves across
+    every preconditioner, the jnp and interpret backends, and a cadence
+    sweep report zero detections (the false-positive floor);
+  * validation: SDC composes with esrp/none only, needs T >= 2 under esrp,
+    and a "queue" target is meaningless without a queue.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sdc
+from repro.core.driver import solve_resilient
+from repro.core.failures import SDCEvent
+from repro.sparse.matrices import build_problem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return build_problem("poisson2d", n_nodes=4, nx=24, ny=24)
+
+
+@pytest.fixture(scope="module")
+def reference(problem):
+    return solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10)
+
+
+def _repairs(rep):
+    return [e for e in rep.events if e.kind == "sdc-repair"]
+
+
+def _assert_rejoined(rep, reference, tol=1e-10):
+    assert rep.converged
+    assert rep.converged_iter == reference.converged_iter
+    err = float(jnp.linalg.norm(rep.x - reference.x))
+    scale = float(jnp.linalg.norm(reference.x))
+    assert err <= tol * max(scale, 1.0), err
+
+
+# --------------------------------------------------------------------------- #
+# detect + repair, every target
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("target", ["p", "r", "x", "z", "queue"])
+@pytest.mark.parametrize("it", [30, 33])   # 30: a storage iteration (T=10),
+#                                            so the very next count is a
+#                                            check-before-store boundary;
+#                                            33: mid-stage, caught by the
+#                                            cadence/next-storage check
+def test_sdc_detected_and_repaired(problem, reference, target, it):
+    rep = solve_resilient(
+        problem, strategy="esrp", T=10, rtol=1e-10,
+        scenario=[SDCEvent(iter=it, nodes=(1,), target=target)])
+    inj = [e for e in rep.events if e.kind == "sdc-inject"]
+    reps = _repairs(rep)
+    assert len(inj) == 1 and inj[0].sdc_target == target
+    assert len(reps) == 1, [e.detector for e in reps]
+    er = reps[0]
+    # detected within one invariant-check period (checks also run at every
+    # storage iteration, so the bound here is min(check_every, stage gap))
+    assert 0 < er.detect_latency <= sdc.SDCPolicy().check_every
+    assert er.detect_iter == it + er.detect_latency
+    assert er.detector in ("residual", "orthogonality", "z-invariant",
+                           "queue-checksum")
+    assert not (er.sdc_violation <= er.sdc_tol)   # NaN-safe: it really fired
+    _assert_rejoined(rep, reference)
+
+
+def test_p_corruption_needs_the_orthogonality_invariant(problem, reference):
+    """x and r are updated with the SAME corrupted direction, so r ≡ b − Ax
+    is preserved and the residual detector is blind to p corruption — the
+    rᵀp = rz identity is what catches it."""
+    rep = solve_resilient(
+        problem, strategy="esrp", T=10, rtol=1e-10,
+        scenario=[SDCEvent(iter=33, nodes=(2,), target="p")])
+    (er,) = _repairs(rep)
+    assert er.detector == "orthogonality"
+    _assert_rejoined(rep, reference)
+
+
+def test_queue_corruption_never_perturbs_the_trajectory(problem, reference):
+    """The corrupted copies ARE the redundancy: repair invalidates their
+    slot (no rollback, zero wasted iterations) and the live trajectory is
+    bit-identical to the reference."""
+    rep = solve_resilient(
+        problem, strategy="esrp", T=10, rtol=1e-10,
+        scenario=[SDCEvent(iter=33, nodes=(1,), target="queue")])
+    (er,) = _repairs(rep)
+    assert er.detector == "queue-checksum"
+    assert er.wasted_iters == 0
+    assert rep.converged_iter == reference.converged_iter
+    np.testing.assert_array_equal(np.asarray(rep.x),
+                                  np.asarray(reference.x))
+
+
+@pytest.mark.parametrize("kind,count", [("bitflip", 1), ("perturb", 4)])
+def test_multi_node_corruption(problem, reference, kind, count):
+    rep = solve_resilient(
+        problem, strategy="esrp", T=10, rtol=1e-10,
+        scenario=[SDCEvent(iter=33, nodes=(1, 3), target="r", kind=kind,
+                           count=count, scale=1e-3)])
+    assert len(_repairs(rep)) == 1
+    _assert_rejoined(rep, reference)
+
+
+def test_low_order_bitflip_below_detection_floor_is_harmless(problem,
+                                                             reference):
+    """A mantissa-tail flip (bit 0) sits below every invariant tolerance:
+    undetectable by design, and numerically harmless — the run still
+    converges to the reference solution at the solve tolerance."""
+    rep = solve_resilient(
+        problem, strategy="esrp", T=10, rtol=1e-10,
+        scenario=[SDCEvent(iter=33, nodes=(1,), target="x", bit=0)])
+    assert rep.converged
+    assert _repairs(rep) == []
+    err = float(jnp.linalg.norm(rep.x - reference.x))
+    assert err <= 1e-8 * float(jnp.linalg.norm(reference.x))
+
+
+def test_none_strategy_detects_and_restarts(problem):
+    """strategy="none" has no queue to rebuild from: a detected corruption
+    is repaired by a clean restart (target_iter = -1), still converging."""
+    rep = solve_resilient(
+        problem, strategy="none", rtol=1e-10,
+        scenario=[SDCEvent(iter=33, nodes=(2,), target="x")])
+    (er,) = _repairs(rep)
+    assert er.target_iter == -1
+    assert rep.converged
+
+
+def test_staggered_failstop_then_sdc(problem, reference):
+    from repro.core.failures import FailureEvent
+    rep = solve_resilient(
+        problem, strategy="esrp", T=10, rtol=1e-10,
+        scenario=[FailureEvent(iter=25, nodes=(3,)),
+                  SDCEvent(iter=45, nodes=(0,), target="r")])
+    kinds = [e.kind for e in rep.events]
+    assert kinds.count("fail-stop") == 1
+    assert kinds.count("sdc-repair") == 1
+    _assert_rejoined(rep, reference)
+
+
+def test_max_repairs_guard(problem):
+    """A zero-tolerance policy fires on reduction noise every check: the
+    repair loop must hard-stop instead of spinning forever."""
+    pol = sdc.SDCPolicy(check_every=4, res_rtol=0.0, max_repairs=2)
+    with pytest.raises(RuntimeError, match="repair fired"):
+        solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10,
+                        sdc_policy=pol)
+
+
+# --------------------------------------------------------------------------- #
+# false positives (satellite: the detectors never fire on a clean run)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("precond", ["jacobi", "ssor", "chebyshev", "ic0"])
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_no_false_positives_clean_run(precond, backend):
+    p = build_problem("poisson2d", n_nodes=4, nx=16, ny=16, precond=precond)
+    for check_every in (5, 16):
+        rep = solve_resilient(
+            p, strategy="esrp", T=10, rtol=1e-9, backend=backend,
+            sdc_policy=sdc.SDCPolicy(check_every=check_every))
+        assert rep.converged
+        if rep.converged_iter > check_every:   # ic0 can converge in 1 iter
+            assert rep.sdc_checks > 0
+        assert rep.sdc_check_every == check_every
+        assert _repairs(rep) == [], (precond, backend, check_every,
+                                     [e.detector for e in _repairs(rep)])
+
+
+# --------------------------------------------------------------------------- #
+# validation + unit pieces
+# --------------------------------------------------------------------------- #
+def test_sdc_validation(problem):
+    ev = [SDCEvent(iter=30, nodes=(1,), target="p")]
+    with pytest.raises(ValueError, match="esrp and none"):
+        solve_resilient(problem, strategy="imcr", scenario=ev)
+    with pytest.raises(ValueError, match="T=1"):
+        solve_resilient(problem, strategy="esrp", T=1, scenario=ev)
+    with pytest.raises(ValueError, match="no .*queue"):
+        solve_resilient(problem, strategy="none",
+                        scenario=[SDCEvent(iter=30, nodes=(1,),
+                                           target="queue")])
+    with pytest.raises(ValueError, match="check_every"):
+        sdc.SDCPolicy(check_every=0)
+    with pytest.raises(ValueError, match="target"):
+        SDCEvent(iter=3, nodes=(0,), target="q")
+    with pytest.raises(ValueError, match="kind"):
+        SDCEvent(iter=3, nodes=(0,), kind="zap")
+    with pytest.raises(ValueError, match="bit"):
+        SDCEvent(iter=3, nodes=(0,), bit=64)
+
+
+def test_bitflip_is_an_involution():
+    v = jnp.asarray(np.random.default_rng(0).standard_normal(32))
+    idx = np.asarray([3, 17])
+    flipped = sdc._flip(v, idx, 62)
+    assert float(jnp.max(jnp.abs(flipped - v))) > 0
+    np.testing.assert_array_equal(np.asarray(sdc._flip(flipped, idx, 62)),
+                                  np.asarray(v))
+    # untouched entries are bit-identical
+    mask = np.ones(32, bool)
+    mask[idx] = False
+    np.testing.assert_array_equal(np.asarray(flipped)[mask],
+                                  np.asarray(v)[mask])
+
+
+def test_overflowed_direction_norm_still_fires(problem):
+    """‖p‖ overflowing to inf must FIRE the orthogonality detector, not
+    hide the violation behind huge/inf → 0 (regression: a bit-62 exponent
+    flip produced exactly this)."""
+    ops = problem.solver_ops("jnp")
+    from repro.core import esrp
+    st = esrp.esrp_init(ops.matvec, ops.precond, problem.b, dot=ops.dot,
+                        n_slabs=4)
+    for _ in range(12):
+        st, _ = esrp.run_chunk(st, ops, 10, 1, jnp.asarray(0.0), 0, True,
+                               problem.b)
+    huge = st.pcg.p.at[5].set(8.7e303)
+    st = st._replace(pcg=st.pcg._replace(p=huge))
+    det = sdc.run_checks(ops, st, problem.b, problem.part,
+                         float(jnp.linalg.norm(problem.b)),
+                         sdc.SDCPolicy())
+    assert det is not None and det.detector == "orthogonality"
+    assert det.violation == float("inf")

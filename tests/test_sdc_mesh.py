@@ -1,0 +1,122 @@
+"""SDC detection + repair on the 8-device mesh runtime.
+
+Subprocess suite (``--xla_force_host_platform_device_count=8``, same
+pattern as test_sharded_scenarios):
+
+  * every SDC target (p, r, x, z, queue) injected on the mesh is detected
+    within one check period and repaired — the run rejoins the clean
+    sharded reference trajectory (norm-wise; the rollback re-executes a
+    stretch whose mesh reductions may re-associate);
+  * queue corruption on the mesh also corrupts the *physical holder
+    devices'* ``rq`` rows; the read-time checksum in ``assemble_pair``
+    excludes the corrupted holder from the copy sources when a fail-stop
+    recovery reads the queue BEFORE any invariant check ran — and the
+    stored (mismatched) checksum survives the recovery restack, so the
+    next check still flags and invalidates the corrupted slot.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+
+from repro.comm.shard import (ShardedFailureRuntime, nodes_mesh,
+                              place_problem, sharded_solver_ops)
+from repro.core.driver import solve_resilient
+from repro.core.failures import FailureEvent, SDCEvent
+from repro.sparse.matrices import build_problem
+
+mesh = nodes_mesh(8)
+problem = build_problem("poisson2d", n_nodes=8, nx=40, ny=40)
+placed = place_problem(problem, mesh)
+with mesh:
+    ops = sharded_solver_ops(placed, mesh)
+    ref = solve_resilient(placed, strategy="esrp", T=10, phi=2, rtol=1e-10,
+                          ops=ops)
+xref = np.asarray(ref.x)
+xscale = max(float(np.linalg.norm(xref)), 1.0)
+
+# --- 1) every target detected + repaired on the mesh ----------------------
+for tgt in ("p", "r", "x", "z", "queue"):
+    frt = ShardedFailureRuntime(placed, mesh)
+    with mesh:
+        rep = solve_resilient(placed, strategy="esrp", T=10, phi=2,
+                              rtol=1e-10, ops=ops, failure_runtime=frt,
+                              scenario=[SDCEvent(iter=33, nodes=(2,),
+                                                 target=tgt)])
+    reps = [e for e in rep.events if e.kind == "sdc-repair"]
+    assert rep.converged, tgt
+    assert rep.converged_iter == ref.converged_iter, (
+        tgt, rep.converged_iter, ref.converged_iter)
+    assert len(reps) == 1, (tgt, [e.detector for e in rep.events])
+    er = reps[0]
+    assert 0 < er.detect_latency <= 16, (tgt, er.detect_latency)
+    err = float(np.linalg.norm(np.asarray(rep.x) - xref))
+    assert err <= 1e-10 * xscale, (tgt, err)
+    if tgt == "queue":
+        assert er.detector == "queue-checksum", er.detector
+        assert er.wasted_iters == 0
+print("MESH_SDC_TARGETS_OK")
+
+# --- 2) read-time checksum: a fail-stop that reads a corrupted holder -----
+# Corrupt holder device 3's physical rq rows at 33 (no check boundary
+# before 35 with check_every=16 and the stage gap), then fail node 2 at 35:
+# assemble_pair must EXCLUDE holder 3 (phi=2 provides another copy), and
+# the stored mismatched checksum must survive the recovery restack so the
+# next check (40) still flags + invalidates the corrupted slot.
+from repro.core.sdc import SDCPolicy
+frt = ShardedFailureRuntime(placed, mesh)
+with mesh:
+    rep = solve_resilient(placed, strategy="esrp", T=10, phi=2, rtol=1e-10,
+                          ops=ops, failure_runtime=frt,
+                          sdc_policy=SDCPolicy(check_every=16),
+                          scenario=[SDCEvent(iter=33, nodes=(3,),
+                                             target="queue"),
+                                    FailureEvent(iter=35, nodes=(2,))])
+assert rep.converged
+kinds = [e.kind for e in rep.events]
+assert kinds.count("fail-stop") == 1, kinds
+fs = next(e for e in rep.events if e.kind == "fail-stop")
+assert fs.queue_src_nodes, "mesh recovery must name its physical sources"
+assert 3 not in fs.queue_src_nodes, fs.queue_src_nodes
+qreps = [e for e in rep.events
+         if e.kind == "sdc-repair" and e.detector == "queue-checksum"]
+assert len(qreps) == 1, kinds
+err = float(np.linalg.norm(np.asarray(rep.x) - xref))
+assert err <= 1e-10 * xscale, err
+print("READ_TIME_CHECKSUM_OK")
+
+# --- 3) multi-node SDC on the mesh ----------------------------------------
+frt = ShardedFailureRuntime(placed, mesh)
+with mesh:
+    rep = solve_resilient(placed, strategy="esrp", T=10, phi=2, rtol=1e-10,
+                          ops=ops, failure_runtime=frt,
+                          scenario=[SDCEvent(iter=45, nodes=(1, 4, 6),
+                                             target="r")])
+assert rep.converged and rep.converged_iter == ref.converged_iter
+err = float(np.linalg.norm(np.asarray(rep.x) - xref))
+assert err <= 1e-10 * xscale, err
+print("MESH_MULTI_NODE_SDC_OK")
+
+print("SDC_MESH_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sdc_on_eight_device_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], cwd=".",
+                         env=env, capture_output=True, text=True,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    for tag in ("MESH_SDC_TARGETS_OK", "READ_TIME_CHECKSUM_OK",
+                "MESH_MULTI_NODE_SDC_OK", "SDC_MESH_OK"):
+        assert tag in out.stdout, (tag, out.stdout)

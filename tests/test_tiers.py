@@ -1,0 +1,123 @@
+"""Redundancy-storage tiers (core.tiers + driver accounting).
+
+The tier is a COST MODEL layered behind the queue: the data path is
+bit-identical across tiers (assert so), only the recovery-time accounting
+changes. Under test:
+
+  * read_s/write_s = latency + bytes / bandwidth, and the three built-in
+    tiers order as device-neighbour < replicated-host < simulated-nvram;
+  * push_bytes: the device-neighbour tier ships only the EXTRA tiles of
+    the augmented SpMV (tot − nat — the natural traffic is the SpMV's
+    own); full-slab tiers ship the whole vector;
+  * the driver threads the tier through SolveReport (push_count ×
+    per-push volume, model seconds) and per-event fetch accounting;
+  * push_count replays the Alg. 3 storage schedule over the executed
+    ranges — a rollback re-executes a stretch, so its pushes recount.
+"""
+import numpy as np
+import pytest
+
+from repro.core.aspmv import build_plan
+from repro.core.driver import solve_resilient, _count_pushes
+from repro.core.failures import FailureEvent
+from repro.core.tiers import (DEVICE_NEIGHBOUR, REPLICATED_HOST,
+                              SIMULATED_NVRAM, TIERS, StorageTier,
+                              resolve_tier)
+from repro.sparse.matrices import build_problem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return build_problem("poisson2d", n_nodes=4, nx=24, ny=24)
+
+
+def test_cost_model_arithmetic():
+    t = StorageTier(name="t", read_gbps=2.0, write_gbps=1.0,
+                    latency_s=1e-3, full_slab_push=True)
+    nbytes = 2_000_000_000
+    assert t.read_s(nbytes) == pytest.approx(1e-3 + 1.0)
+    assert t.write_s(nbytes) == pytest.approx(1e-3 + 2.0)
+    assert t.fetch_bytes(100, 8) == 2 * 100 * 8    # the p^(j-1)/p^(j) pair
+
+
+def test_builtin_tiers_order():
+    nbytes = 1 << 20
+    costs = [tier.write_s(nbytes) for tier in
+             (DEVICE_NEIGHBOUR, REPLICATED_HOST, SIMULATED_NVRAM)]
+    assert costs == sorted(costs)
+    assert set(TIERS) == {"device-neighbour", "replicated-host",
+                          "simulated-nvram"}
+
+
+def test_resolve_tier():
+    assert resolve_tier("replicated-host") is REPLICATED_HOST
+    assert resolve_tier(DEVICE_NEIGHBOUR) is DEVICE_NEIGHBOUR
+    with pytest.raises(ValueError, match="unknown storage tier"):
+        resolve_tier("floppy-disk")
+
+
+def test_push_bytes_extra_vs_full_slab(problem):
+    plan = build_plan(problem.a, problem.part, phi=1)
+    nat, tot = plan.bytes_per_aspmv(8)
+    m_bytes = problem.part.m * 8
+    assert DEVICE_NEIGHBOUR.push_bytes(plan, problem.part.m, 8) == tot - nat
+    assert REPLICATED_HOST.push_bytes(plan, problem.part.m, 8) == m_bytes
+    # without a plan (e.g. strategy "none") the neighbour tier degrades to
+    # the full slab too
+    assert DEVICE_NEIGHBOUR.push_bytes(None, problem.part.m, 8) == m_bytes
+
+
+def test_count_pushes_replays_schedule():
+    # T=10: pushes at j % 10 in {0, 1}, j > 2
+    assert _count_pushes([(0, 25)], 10) == 4        # 10, 11, 20, 21
+    assert _count_pushes([(0, 25), (20, 25)], 10) == 6   # re-executed 20, 21
+    assert _count_pushes([(0, 3)], 1) == 0          # j > 2 gate
+    assert _count_pushes([(3, 6)], 1) == 3          # ESR: every iteration
+
+
+@pytest.mark.parametrize("tier", ["device-neighbour", "replicated-host",
+                                  "simulated-nvram"])
+def test_driver_threads_tier_accounting(problem, tier):
+    rep = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10,
+                          storage_tier=tier,
+                          scenario=[FailureEvent(iter=35, nodes=(2,))])
+    assert rep.converged and rep.tier == tier
+    assert rep.push_count > 0
+    per_push = rep.push_bytes // rep.push_count
+    t = resolve_tier(tier)
+    assert rep.push_s_model == pytest.approx(
+        rep.push_count * t.write_s(per_push))
+    (ev,) = rep.events
+    assert ev.tier == tier
+    assert ev.fetch_bytes == 2 * problem.part.rows_per_node * 8
+    assert ev.fetch_s_model == pytest.approx(t.read_s(ev.fetch_bytes))
+    assert rep.fetch_s_model == pytest.approx(ev.fetch_s_model)
+
+
+def test_tier_is_cost_model_only(problem):
+    """The trajectory must be bit-identical across tiers — placement is
+    accounting, not arithmetic."""
+    xs = []
+    for tier in TIERS:
+        rep = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10,
+                              storage_tier=tier,
+                              scenario=[FailureEvent(iter=35, nodes=(1,))])
+        xs.append(np.asarray(rep.x))
+    np.testing.assert_array_equal(xs[0], xs[1])
+    np.testing.assert_array_equal(xs[0], xs[2])
+
+
+def test_rollback_recounts_pushes(problem):
+    """An event mid-stage (35) rolls back to the stage boundary it just
+    left — no push is re-executed, so the counts match the clean run. An
+    event at 40 strikes right AFTER the new stage's first push, whose pair
+    is not yet consecutive: recovery falls back to the previous stage (31)
+    and iteration 40's push physically re-executes on the way back up."""
+    clean = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10)
+    mid = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10,
+                          scenario=[FailureEvent(iter=35, nodes=(1,))])
+    assert mid.push_count == clean.push_count
+    boundary = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-10,
+                               scenario=[FailureEvent(iter=40, nodes=(1,))])
+    assert boundary.events[0].target_iter == 31
+    assert boundary.push_count > clean.push_count
