@@ -142,16 +142,22 @@ def bench_kernels():
     print(f"kernel_fused_pcg,{us:.0f},interpret_err={err:.1e}")
 
 
-def bench_ft():
-    """ESRP-for-training overheads (us/step, push volume per stage)."""
+def bench_ft(trace=False):
+    """ESRP-for-training overheads (us/step, push volume per stage).
+    Timing routes through a span tracer (one ``measure:ft_*`` span per
+    config); ``trace=True`` also threads it into the trainer (storage/
+    recovery spans, per-step loss counter) and exports artifacts/obs/
+    ft_trace.json."""
     import jax
     from repro.configs import smoke_config
     from repro.models.lm import LM
+    from repro.obs import Tracer, write_chrome_trace
     from repro.train.optimizer import AdamWConfig, init_opt_state
     from repro.train.train_step import make_train_step
     from repro.data.pipeline import TokenPipeline
     from repro.ft.esrp_trainer import ESRPTrainer, FTConfig
 
+    tracer = Tracer("bench_ft")
     cfg = smoke_config("internlm2_1_8b")
     model = LM(cfg)
     params, specs = model.init(jax.random.PRNGKey(0))
@@ -160,18 +166,24 @@ def bench_ft():
     pipe = TokenPipeline(cfg, global_batch=4, seq_len=64, seed=7)
     for mode, compress in (("none", False), ("esrp", False),
                            ("esrp", True), ("imcr", False)):
+        label = mode + ("_bf16" if compress else "")
         tr = ESRPTrainer(model, ts, pipe,
                          FTConfig(mode=mode, T=10, phi=1, n_ranks=8,
-                                  compress=compress), specs)
-        tr.run(params, opt, n_steps=3)        # warmup: amortize jit compile
+                                  compress=compress), specs,
+                         obs=tracer if trace else None)
+        with tracer.span(f"warmup:ft_{label}", cat="warmup"):
+            tr.run(params, opt, n_steps=3)    # warmup: amortize jit compile
         tr.push_bytes = tr.push_count = 0
-        t0 = time.perf_counter()
-        tr.run(params, opt, n_steps=40)
-        dt = time.perf_counter() - t0
-        label = mode + ("_bf16" if compress else "")
+        with tracer.span(f"measure:ft_{label}", cat="measure") as m_sp:
+            tr.run(params, opt, n_steps=40)
+        dt = m_sp.dur_s
         print(f"ft_{label},{1e6 * dt / 40:.0f},"
               f"push_MB_per_stage="
               f"{tr.push_bytes / max(tr.push_count, 1) / 1e6:.2f}")
+    if trace:
+        os.makedirs("artifacts/obs", exist_ok=True)
+        path = write_chrome_trace(tracer, "artifacts/obs/ft_trace.json")
+        print(f"# wrote {path} ({len(tracer.events)} events)")
 
 
 def bench_iteration(full: bool):
@@ -425,7 +437,7 @@ def bench_recovery(full):
           f"({len(rows)} rows)")
 
 
-def bench_failures(full, sharded=False, tiers=False):
+def bench_failures(full, sharded=False, tiers=False, trace=False):
     """Failure-scenario sweep: simultaneous vs staggered vs burst × φ × T
     for ESRP and IMCR — the multi-failure experiment of Pachajoa et al.
     (arXiv:1907.13077) on top of the paper's protocol.
@@ -457,6 +469,15 @@ def bench_failures(full, sharded=False, tiers=False):
     Writes artifacts/bench/failures.csv (per-row sweep) and a
     machine-readable BENCH_failures.json next to it so the recovery-cost
     trajectory is trackable across PRs.
+
+    All wall-clock rows are read back out of a span tracer (one
+    ``measure:*`` span per timed solve), so the CSV columns and the
+    exported trace can never disagree. With ``trace=True`` (``--trace``)
+    the tracer is also threaded through every solve (per-iteration metrics
+    ring, recovery spans) and exported to artifacts/obs/ as
+    failures_trace.json (Chrome/Perfetto) + failures_events.jsonl +
+    failures_metrics.txt. BENCH_failures.json always embeds the roofline
+    FLOP/byte attribution of the dispatched kernels (CI fails without it).
     """
     import json
 
@@ -465,8 +486,12 @@ def bench_failures(full, sharded=False, tiers=False):
     from repro.core.driver import solve_resilient
     from repro.core.failures import FailureEvent
     from repro.core.tiers import TIERS, resolve_tier
+    from repro.obs import (Tracer, metrics_snapshot, solver_rooflines,
+                           write_chrome_trace, write_jsonl)
     from repro.sparse.matrices import build_problem
 
+    tracer = Tracer("bench_failures")
+    obs = tracer if trace else None
     n_nodes = 8
     kind, kw = "poisson2d", dict(nx=96 if full else 48)
     p = build_problem(kind, n_nodes=n_nodes, **kw)
@@ -503,9 +528,12 @@ def bench_failures(full, sharded=False, tiers=False):
         exact = bool((np.asarray(r.x) == np.asarray(rm.x)).all()
                      and r.converged_iter == rm.converged_iter)
         return r.converged_iter, exact, 1e3 * r.recovery_s
-    solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)        # warmup
-    ref = solve_resilient(p, strategy="none", rtol=1e-8, chunk=32)
-    C, t0 = ref.converged_iter, ref.runtime_s
+    with tracer.span("warmup:reference", cat="warmup"):
+        solve_resilient(p, strategy="none", rtol=1e-8, chunk=32, obs=obs)
+    with tracer.span("measure:reference", cat="measure") as ref_sp:
+        ref = solve_resilient(p, strategy="none", rtol=1e-8, chunk=32,
+                              obs=obs)
+    C, t0 = ref.converged_iter, ref_sp.dur_s
     Ts = (10, 20, 50) if full else (10, 20)
     phis = (1, 2, 4) if full else (1, 2)
 
@@ -533,10 +561,17 @@ def bench_failures(full, sharded=False, tiers=False):
                     # post-failure chunk tails + reconstruction closures;
                     # report the warm second run (same policy as precond's
                     # us_per_iter note — compile time is not recovery cost)
-                    solve_resilient(p, strategy=strategy, T=T, phi=phi,
-                                    rtol=1e-8, chunk=32, scenario=events)
-                    r = solve_resilient(p, strategy=strategy, T=T, phi=phi,
-                                        rtol=1e-8, chunk=32, scenario=events)
+                    label = f"{strategy}:{scen}:T{T}:phi{phi}"
+                    with tracer.span(f"warmup:{label}", cat="warmup"):
+                        solve_resilient(p, strategy=strategy, T=T, phi=phi,
+                                        rtol=1e-8, chunk=32, scenario=events,
+                                        obs=obs)
+                    with tracer.span(f"measure:{label}",
+                                     cat="measure") as m_sp:
+                        r = solve_resilient(p, strategy=strategy, T=T,
+                                            phi=phi, rtol=1e-8, chunk=32,
+                                            scenario=events, obs=obs)
+                    runtime_s = m_sp.dur_s
                     row = dict(
                         strategy=strategy, T=T, phi=phi, scenario=scen,
                         n_events=len(events),
@@ -544,11 +579,14 @@ def bench_failures(full, sharded=False, tiers=False):
                         converged_iter=r.converged_iter,
                         wasted_iters=r.wasted_iters,
                         recovery_ms=1e3 * r.recovery_s,
-                        runtime_s=r.runtime_s,
-                        overhead_pct=100 * (r.runtime_s - t0) / t0,
+                        runtime_s=runtime_s,
+                        overhead_pct=100 * (runtime_s - t0) / t0,
                         rel_residual=r.rel_residual, drift=r.drift,
                         targets=[e.target_iter for e in r.events],
                         per_event_wasted=[e.wasted_iters for e in r.events],
+                        # the full schema-versioned report (NaN-free JSON;
+                        # per-event recovery breakdown included)
+                        report=r.to_json(),
                         # measured recovery re-priced per storage tier: the
                         # redundant-pair fetch is the tier-dependent step
                         tier_recovery_ms={
@@ -569,7 +607,7 @@ def bench_failures(full, sharded=False, tiers=False):
                     lines.append(
                         f"{strategy},{T},{phi},{scen},{len(events)},"
                         f"{r.converged_iter},{r.wasted_iters},"
-                        f"{1e3 * r.recovery_s:.2f},{r.runtime_s:.3f},"
+                        f"{1e3 * r.recovery_s:.2f},{runtime_s:.3f},"
                         f"{row['overhead_pct']:.1f},{r.rel_residual:.2e},"
                         f"{r.drift:.2e},"
                         f"{'|'.join(str(t) for t in row['targets'])}"
@@ -584,9 +622,12 @@ def bench_failures(full, sharded=False, tiers=False):
             for phi in phis:
                 events = scenarios(T, phi)["simultaneous"]
                 for name in TIERS:
-                    r = solve_resilient(p, strategy="esrp", T=T, phi=phi,
-                                        rtol=1e-8, chunk=32, scenario=events,
-                                        storage_tier=name)
+                    with tracer.span(f"measure:tier:{name}:T{T}:phi{phi}",
+                                     cat="measure"):
+                        r = solve_resilient(p, strategy="esrp", T=T, phi=phi,
+                                            rtol=1e-8, chunk=32,
+                                            scenario=events,
+                                            storage_tier=name, obs=obs)
                     t = resolve_tier(name)
                     tier_rows.append(dict(
                         tier=name, T=T, phi=phi, scenario="simultaneous",
@@ -649,7 +690,12 @@ def bench_failures(full, sharded=False, tiers=False):
     summary = dict(
         problem=dict(kind=kind, n_nodes=n_nodes, m=p.m, **kw),
         reference=dict(converged_iter=C, runtime_s=t0,
-                       rel_residual=ref.rel_residual, drift=ref.drift),
+                       rel_residual=ref.rel_residual, drift=ref.drift,
+                       report=ref.to_json()),
+        # FLOP/byte attribution of the dispatched kernels from their lowered
+        # HLO (repro.obs.rooflines) — the CI validator requires >= 3 priced
+        # kernels here
+        rooflines=solver_rooflines(p.solver_ops("auto"), p.b),
         sweep=dict(Ts=list(Ts), phis=list(phis),
                    strategies=["esrp", "imcr"]),
         rows=rows,
@@ -669,6 +715,18 @@ def bench_failures(full, sharded=False, tiers=False):
         json.dump(summary, f, indent=1, default=float)
     print(f"# wrote artifacts/bench/failures.csv + BENCH_failures.json "
           f"({len(rows)} rows)")
+    if trace:
+        os.makedirs("artifacts/obs", exist_ok=True)
+        trace_path = write_chrome_trace(tracer,
+                                        "artifacts/obs/failures_trace.json")
+        jsonl_path = "artifacts/obs/failures_events.jsonl"
+        if os.path.exists(jsonl_path):    # write_jsonl appends by design
+            os.remove(jsonl_path)
+        write_jsonl(tracer, jsonl_path)
+        with open("artifacts/obs/failures_metrics.txt", "w") as f:
+            f.write(metrics_snapshot(tracer))
+        print(f"# wrote {trace_path} ({len(tracer.events)} events) "
+              f"+ failures_events.jsonl + failures_metrics.txt")
 
 
 ALL = {
@@ -681,7 +739,7 @@ ALL = {
     "precond": bench_precond,
     "recovery": bench_recovery,
     "failures": bench_failures,
-    "ft": lambda full: bench_ft(),
+    "ft": lambda full: bench_ft(),          # --trace routed in main()
     "roofline": lambda full: bench_roofline(),
 }
 
@@ -707,6 +765,10 @@ def main() -> None:
                          "(storage_tier threaded through the driver); "
                          "writes failures_tiers.csv and the tiers section "
                          "of BENCH_failures.json")
+    ap.add_argument("--trace", action="store_true",
+                    help="failures/ft sweeps: thread an obs.Tracer through "
+                         "the solves and export Chrome-trace + JSONL + "
+                         "metrics snapshot under artifacts/obs/")
     args = ap.parse_args()
     if args.sharded:
         # must precede the first jax import (bench functions import lazily)
@@ -718,7 +780,10 @@ def main() -> None:
     for name in names:
         print(f"\n== {name} ==")
         if name == "failures":
-            ALL[name](args.full, sharded=args.sharded, tiers=args.tiers)
+            ALL[name](args.full, sharded=args.sharded, tiers=args.tiers,
+                      trace=args.trace)
+        elif name == "ft":
+            bench_ft(trace=args.trace)
         else:
             ALL[name](args.full)
 

@@ -46,6 +46,11 @@ def main():
                     help="also inject silent data corruption (bit flip in "
                          "p, perturbed queue copy) and show detection + "
                          "repair via the invariant checks")
+    ap.add_argument("--trace", action="store_true",
+                    help="thread the telemetry tracer through the staggered "
+                         "scenario solve; prints the per-phase wall-time "
+                         "breakdown and writes "
+                         "artifacts/obs/poisson_resilient_trace.json")
     args = ap.parse_args()
 
     kw = dict(nx=args.nx) if args.kind != "banded" else dict(
@@ -82,7 +87,7 @@ def main():
     scenario = [FailureEvent(fail_at, tuple(failed)),
                 FailureEvent(fail_at + args.T, ((args.phi + 1) % args.nodes,))]
     r = solve_resilient(problem, strategy="esrp", T=args.T, phi=args.phi,
-                        rtol=args.rtol, scenario=scenario)
+                        rtol=args.rtol, scenario=scenario, obs=args.trace)
     assert r.rel_residual < args.rtol
     print(f"\nstaggered scenario ({len(scenario)} events), C="
           f"{r.converged_iter}, overhead {100 * (r.runtime_s - t0) / t0:.1f}%:")
@@ -90,6 +95,53 @@ def main():
         print(f"  iter {e.iter:4d} nodes {e.nodes}: rollback -> "
               f"{e.target_iter} ({e.wasted_iters} wasted, "
               f"{1e3 * e.recovery_s:.1f} ms reconstruction)")
+
+    if args.trace:
+        import os
+
+        from repro.obs import span_tree, write_chrome_trace
+
+        tr = r.trace
+        os.makedirs("artifacts/obs", exist_ok=True)
+        path = write_chrome_trace(
+            tr, "artifacts/obs/poisson_resilient_trace.json")
+        print(f"\nper-phase breakdown ({path}, {len(tr.events)} events, "
+              f"push {tr.counters.get('tier_push_bytes', 0) / 1e6:.2f} MB / "
+              f"fetch {tr.counters.get('tier_fetch_bytes', 0) / 1e3:.1f} KB):")
+
+        def show(nodes, depth=0):
+            # repeated phases (chunk dispatch/settle, resume) aggregate to
+            # one line; each failure event expands to its full recovery tree
+            agg, order = {}, []
+            for n in nodes:
+                if n["dur_us"] is None:
+                    continue
+                if n["name"].startswith("event:"):
+                    order.append(("solo", n))
+                    continue
+                if n["name"] not in agg:
+                    agg[n["name"]] = [n["cat"], 0, 0.0]
+                    order.append(("agg", n["name"]))
+                agg[n["name"]][1] += 1
+                agg[n["name"]][2] += n["dur_us"]
+            for kind, item in order:
+                pad = "  " * depth
+                if kind == "agg":
+                    cat, calls, us = agg[item]
+                    print(f"  {pad}{item:<30s}{us / 1e3:9.2f} ms  "
+                          f"x{calls:<3d} [{cat}]")
+                else:
+                    print(f"  {pad}{item['name']:<30s}"
+                          f"{item['dur_us'] / 1e3:9.2f} ms       "
+                          f"[{item['cat']}]")
+                    show(item["children"], depth + 1)
+
+        roots = span_tree(tr.events)
+        solve_root = roots[0] if roots else None
+        if solve_root is not None:
+            print(f"  {'solve':<30s}{solve_root['dur_us'] / 1e3:9.2f} ms"
+                  f"       [{solve_root['cat']}]")
+            show(solve_root["children"], 1)
 
     if args.sdc:
         xref = np.asarray(ref.x)

@@ -26,6 +26,7 @@ instead of blocking between chunks.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Optional
@@ -42,7 +43,19 @@ from repro.core.failures import (FailureEvent, SDCEvent, failed_row_mask,
 from repro.core.ops import SolverOps, make_closure_ops
 from repro.core.pcg import PCGState, residual_drift
 from repro.core.tiers import resolve_tier
+from repro.obs.trace import Tracer, jsonable
 from repro.sparse.matrices import Problem
+
+# version stamp of the report JSON layout (EventReport/SolveReport.to_json);
+# bump on any field rename/removal so downstream BENCH consumers can branch
+REPORT_SCHEMA_VERSION = 1
+
+
+def _tspan(tr: Optional[Tracer], name: str, cat: str = "solver", **args):
+    """Span on ``tr``, or a no-op context (yielding None) when obs is off."""
+    if tr is None:
+        return contextlib.nullcontext()
+    return tr.span(name, cat=cat, **args)
 
 
 @dataclasses.dataclass
@@ -77,6 +90,15 @@ class EventReport:
     fetch_s_model: float = 0.0   # tier cost model applied to fetch_bytes
     elastic_n_nodes: int = 0     # >0: node count the run continued on after
     #                              this event (elastic shrunk-mesh recovery)
+
+    def to_json(self) -> dict:
+        """JSON-safe dict (NaN/inf -> None, device scalars -> Python) with a
+        ``schema_version`` stamp — the serialization the BENCH writers and
+        the JSONL event log embed."""
+        out = {f.name: jsonable(getattr(self, f.name))
+               for f in dataclasses.fields(self)}
+        out["schema_version"] = REPORT_SCHEMA_VERSION
+        return out
 
 
 @dataclasses.dataclass
@@ -123,6 +145,22 @@ class SolveReport:
     #                              drift above are host-side norms whose flat
     #                              reduction may differ from the mesh's by
     #                              1 ulp even on identical vectors
+    trace: Optional[object] = dataclasses.field(default=None, repr=False)
+    #                              the obs.Tracer of this solve (obs=on only):
+    #                              spans, counters, per-iteration history —
+    #                              export via repro.obs.export
+
+    def to_json(self) -> dict:
+        """JSON-safe dict with a ``schema_version`` stamp. The device-array
+        ``x`` and the live ``trace`` handle are dropped (neither serializes
+        usefully; the tracer has its own exporters); NaN/inf coerce to None
+        so ``json.dumps(..., allow_nan=False)`` always succeeds."""
+        skip = {"x", "trace", "events"}
+        out = {f.name: jsonable(getattr(self, f.name))
+               for f in dataclasses.fields(self) if f.name not in skip}
+        out["events"] = [e.to_json() for e in self.events]
+        out["schema_version"] = REPORT_SCHEMA_VERSION
+        return out
 
 
 def _find_convergence(norms: np.ndarray, thresh: float) -> int:
@@ -170,6 +208,12 @@ def solve_resilient(
     elastic: bool = False,             # no replacement nodes: after each
     #                                    fail-stop event, re-partition onto
     #                                    the shrunk node count and continue
+    obs=None,                          # observability: an obs.Tracer to
+    #                                    record into, or True for a fresh
+    #                                    one (returned as report.trace).
+    #                                    Default off: the obs=off hot path
+    #                                    is bit-identical and compiles to
+    #                                    the identical jaxpr (tested)
 ) -> SolveReport:
     part = problem.part
     pending = normalize_scenario(scenario, fail_at, failed_nodes,
@@ -238,6 +282,10 @@ def solve_resilient(
     # the device state without the host ever declaring convergence
     thresh = float(thresh_dev)
 
+    tr: Optional[Tracer] = obs if isinstance(obs, Tracer) else (
+        Tracer("solve_resilient") if obs else None)
+    mtr = tr is not None              # static: arms the chunk metrics ring
+
     plan: Optional[RedundancyPlan] = None
     push = None
     if strategy == "esrp":
@@ -253,17 +301,17 @@ def solve_resilient(
         st = imcr.imcr_init(matvec, precond, b, dot=dot)
         run = lambda s, n: imcr.run_chunk(s, ops, T, phi,
                                           part.rows_per_node, n,
-                                          thresh_dev, gated)
+                                          thresh_dev, gated, mtr)
     elif strategy == "esrp":
         st = esrp.esrp_init(matvec, precond, b, dot=dot, n_slabs=qsum_slabs)
         if failure_runtime is not None:
             st = failure_runtime.init_queue(st)
         run = lambda s, n: esrp.run_chunk(s, ops, T, n, thresh_dev,
-                                          rr_every, gated, b, push)
+                                          rr_every, gated, b, push, mtr)
     elif strategy == "none":
         st = esrp.esrp_init(matvec, precond, b, dot=dot)  # T=max: no stores
         run = lambda s, n: esrp.run_chunk(s, ops, 1 << 30, n, thresh_dev,
-                                          rr_every, gated, b)
+                                          rr_every, gated, b, None, mtr)
     else:
         raise ValueError(strategy)
 
@@ -275,6 +323,26 @@ def solve_resilient(
     # rr gating applies to the esrp/none runners only; imcr's chunk runner
     # has no replacement gate, so its resume must not add one either
     resume_rr = rr_every if strategy != "imcr" else 0
+
+    # per-push tier volume: needed live (the settle-time byte counters), not
+    # just in the end-of-run accounting; rebound on elastic re-partition
+    per_push = (tier.push_bytes(plan, part.m, itemsize)
+                if strategy == "esrp" and plan is not None else 0)
+    solve_sp = None
+    if tr is not None:
+        # roofline attribution of the dispatched kernels, priced once per
+        # (backend, variant, shape) at build time and attached to the trace
+        # metadata — the analyzer runs over lowered HLO, no execution
+        tr.meta.setdefault("rooflines", {}).update(
+            _solver_rooflines_cached(problem, ops, b, backend))
+        nat0, tot0 = plan.bytes_per_aspmv(itemsize) if plan is not None \
+            else (0, 0)
+        solve_sp = tr.begin(
+            "solve", cat="solver", strategy=strategy, T=T, phi=phi,
+            backend=backend, variant=getattr(ops, "variant", ""),
+            tier=tier.name, m=part.m, n_nodes=part.n_nodes, rtol=rtol,
+            aspmv_natural_bytes=nat0, aspmv_total_bytes=tot0,
+            per_push_bytes=per_push)
 
     t0 = time.perf_counter()
     total_iters = 0
@@ -300,29 +368,59 @@ def solve_resilient(
         """Block on one chunk's norm record; True iff it converged. The
         chunk runner froze the state at first convergence, so on a hit the
         live ``st`` already is the state at iteration base + hit + 1 — no
-        re-run needed, only the count is fixed up."""
+        re-run needed, only the count is fixed up.
+
+        With obs on the record also carries the chunk's metrics-ring rows
+        (same readback, zero extra dispatches): rows past the executed
+        count repeated the frozen carry and are trimmed before they land in
+        the tracer's iteration history."""
         nonlocal total_iters, converged
-        norms, base, n_disp = entry
-        hit = _find_convergence(np.asarray(norms), thresh)
-        # iterations past a convergence hit ran frozen — no pushes happened
-        push_ranges.append((base, base + (hit + 1 if hit >= 0 else n_disp)))
-        if hit >= 0:
-            total_iters = base + hit + 1
-            converged = True
+        record, base, n_disp = entry
+        norms_d, aux_d = record if mtr else (record, None)
+        with _tspan(tr, "chunk_settle", base=base, n=n_disp):
+            norms = np.asarray(norms_d)
+            hit = _find_convergence(norms, thresh)
+            # iterations past a convergence hit ran frozen — no pushes
+            executed = hit + 1 if hit >= 0 else n_disp
+            push_ranges.append((base, base + executed))
+            if hit >= 0:
+                total_iters = base + hit + 1
+                converged = True
+            if tr is not None and executed > 0:
+                aux = np.asarray(aux_d)[:executed]
+                tr.record_iters(np.arange(base, base + executed),
+                                rnorm=norms[:executed], rz=aux[:, 0],
+                                push=aux[:, 1], star=aux[:, 2],
+                                orth=aux[:, 3])
+                n_push = int(round(float(aux[:, 1].sum())))
+                if n_push and per_push:
+                    tr.add_counter("tier_push_bytes", n_push * per_push,
+                                   pushes=n_push, tier=tier.name)
         return converged
 
-    while not converged:
+    try:
+      while not converged:
         if resume_numeric_only:
             # post-recovery: re-run the reconstruction-point iteration without
             # its storage prelude (its push already happened pre-failure) but
             # WITH the rr_every replacement gate (see _resume_step). Jitted so
             # the jnp backend fuses exactly like inside run_chunk — keeps the
             # cross-backend trajectory bit-identity through recovery.
-            pcg = _resume_step(st.pcg, ops, b, resume_rr, gated)
-            st = st._replace(pcg=pcg)
-            total_iters = int(pcg.j)
-            resume_numeric_only = False
-            if float(jnp.linalg.norm(pcg.r)) < thresh:
+            with _tspan(tr, "resume_step", iter=total_iters):
+                pcg = _resume_step(st.pcg, ops, b, resume_rr, gated)
+                st = st._replace(pcg=pcg)
+                total_iters = int(pcg.j)
+                resume_numeric_only = False
+                rnorm = float(jnp.linalg.norm(pcg.r))
+                if tr is not None:
+                    # the re-run iteration's metrics row (the chunk ring
+                    # never sees it); its push/star already happened on the
+                    # pre-failure pass — dedup keeps this later row
+                    tr.record_iters(
+                        [total_iters - 1], rnorm=[rnorm],
+                        rz=[float(pcg.rz)], push=[0.0], star=[0.0],
+                        orth=[float(jnp.abs(pcg.r @ pcg.p - pcg.rz))])
+            if rnorm < thresh:
                 converged = True
                 break
             continue
@@ -340,9 +438,10 @@ def solve_resilient(
                 strategy == "esrp") - total_iters)
         entry = None
         if n > 0:
-            st, norms = run(st, n)               # async dispatch
+            with _tspan(tr, "chunk_dispatch", base=total_iters, n=n):
+                st, record = run(st, n)          # async dispatch
             run_calls += 1
-            entry = (norms, total_iters, n)
+            entry = (record, total_iters, n)
             total_iters += n
 
         if inflight is not None:
@@ -376,9 +475,12 @@ def solve_resilient(
                 # corruption struck mid-iteration; nothing stops, nothing is
                 # reported to the solver — only an invariant check can catch
                 # it downstream
-                st = _inject_sdc(problem, st, ev,
-                                 T if strategy == "esrp" else (1 << 30),
-                                 ops, b, resume_rr, gated, push)
+                with _tspan(tr, "event:sdc-inject", cat="event",
+                            iter=ev.iter, nodes=list(ev.nodes),
+                            target=ev.target):
+                    st = _inject_sdc(problem, st, ev,
+                                     T if strategy == "esrp" else (1 << 30),
+                                     ops, b, resume_rr, gated, push)
                 total_iters = int(st.pcg.j)
                 push_ranges.append((ev.iter, ev.iter + 1))
                 sdc_wait.append((ev.iter, ev.target))
@@ -403,66 +505,86 @@ def solve_resilient(
                 ev_src: tuple[int, ...] = ()
                 ev_fetch = 0
                 ev_fetch_s = 0.0
-                if strategy == "imcr":
-                    st, ev_wasted, target, rec_t = _imcr_failure(
-                        st, part, failed, phi, matvec, precond, b,
-                        dot=dot, fruntime=failure_runtime)
-                elif strategy == "none":
-                    # no redundancy of any kind: nothing can rebuild the lost
-                    # entries — cleanly restart from scratch, counting the work
-                    st, ev_wasted, target, rec_t = _none_failure(
-                        st, matvec, precond, b, dot=dot)
-                else:
-                    (st, ev_wasted, target, ev_inner, rec_t, ev_pff, ev_reload,
-                     ev_src) = _esrp_failure(
-                        problem, plan, st, failed, T, ops, pff_precond,
-                        fruntime=failure_runtime, push=push,
-                        n_slabs=qsum_slabs)
-                    inner_rel = ev_inner
-                    push_ranges.append((ev.iter, ev.iter + 1))  # the prelude push
-                    if target >= 0:
-                        ev_fetch = tier.fetch_bytes(
-                            len(failed) * part.rows_per_node, itemsize)
-                        ev_fetch_s = tier.read_s(ev_fetch)
-                recovery_s += rec_t
-                wasted += ev_wasted
-                er = EventReport(
-                    iter=ev.iter, nodes=ev.nodes, target_iter=target,
-                    wasted_iters=ev_wasted, recovery_s=rec_t,
-                    inner_rel=ev_inner, pff_iters=ev_pff,
-                    precond_reload_bytes=ev_reload, queue_src_nodes=ev_src,
-                    tier=tier.name, fetch_bytes=ev_fetch,
-                    fetch_s_model=ev_fetch_s)
-                if elastic:
-                    # no replacement node exists: re-partition the problem onto
-                    # the surviving count and rebuild everything layout-bound
-                    # (ops, plan, thresholds); the recovered state extends with
-                    # exactly-consistent zero padding rows (core.elastic)
-                    n_new = part.n_nodes - len(ev.nodes)
-                    problem = elastic_mod.shrink_problem(problem, n_new)
-                    part = problem.part
-                    st = elastic_mod.remap_state(st, part.m, part.n_nodes)
-                    ops = problem.solver_ops(backend)
-                    matvec, precond = ops.matvec, ops.precond
-                    dot = getattr(ops, "dot", None)
-                    b = problem.b
-                    bnorm = float(jnp.linalg.norm(b))
-                    thresh_dev = jnp.asarray(rtol * bnorm, b.dtype)
-                    thresh = float(thresh_dev)
-                    plan = shrink_plan(plan, problem.a, part)
-                    if qsum_slabs:
-                        qsum_slabs = part.n_nodes
-                    er.elastic_n_nodes = n_new
-                    # the run/resume closures read ops/b/thresh_dev late-bound —
-                    # rebinding the locals above re-targets them to the shrunk
-                    # layout
-                event_reports.append(er)
-                total_iters = int(st.pcg.j)
-                resume_numeric_only = target >= 0
+                with _tspan(tr, "event:fail-stop", cat="event",
+                            iter=ev.iter, nodes=list(ev.nodes),
+                            strategy=strategy) as ev_sp:
+                    if strategy == "imcr":
+                        st, ev_wasted, target, rec_t = _imcr_failure(
+                            st, part, failed, phi, matvec, precond, b,
+                            dot=dot, fruntime=failure_runtime, tracer=tr)
+                    elif strategy == "none":
+                        # no redundancy of any kind: nothing can rebuild the
+                        # lost entries — cleanly restart from scratch,
+                        # counting the work
+                        st, ev_wasted, target, rec_t = _none_failure(
+                            st, matvec, precond, b, dot=dot)
+                    else:
+                        (st, ev_wasted, target, ev_inner, rec_t, ev_pff,
+                         ev_reload, ev_src) = _esrp_failure(
+                            problem, plan, st, failed, T, ops, pff_precond,
+                            fruntime=failure_runtime, push=push,
+                            n_slabs=qsum_slabs, tracer=tr)
+                        inner_rel = ev_inner
+                        push_ranges.append((ev.iter, ev.iter + 1))  # prelude push
+                        if target >= 0:
+                            ev_fetch = tier.fetch_bytes(
+                                len(failed) * part.rows_per_node, itemsize)
+                            ev_fetch_s = tier.read_s(ev_fetch)
+                    recovery_s += rec_t
+                    wasted += ev_wasted
+                    er = EventReport(
+                        iter=ev.iter, nodes=ev.nodes, target_iter=target,
+                        wasted_iters=ev_wasted, recovery_s=rec_t,
+                        inner_rel=ev_inner, pff_iters=ev_pff,
+                        precond_reload_bytes=ev_reload, queue_src_nodes=ev_src,
+                        tier=tier.name, fetch_bytes=ev_fetch,
+                        fetch_s_model=ev_fetch_s)
+                    if elastic:
+                        # no replacement node exists: re-partition the problem
+                        # onto the surviving count and rebuild everything
+                        # layout-bound (ops, plan, thresholds); the recovered
+                        # state extends with exactly-consistent zero padding
+                        # rows (core.elastic)
+                        n_new = part.n_nodes - len(ev.nodes)
+                        with _tspan(tr, "elastic_repartition", cat="recovery",
+                                    n_nodes=n_new):
+                            problem = elastic_mod.shrink_problem(problem, n_new)
+                            part = problem.part
+                            st = elastic_mod.remap_state(st, part.m,
+                                                         part.n_nodes)
+                            ops = problem.solver_ops(backend)
+                            matvec, precond = ops.matvec, ops.precond
+                            dot = getattr(ops, "dot", None)
+                            b = problem.b
+                            bnorm = float(jnp.linalg.norm(b))
+                            thresh_dev = jnp.asarray(rtol * bnorm, b.dtype)
+                            thresh = float(thresh_dev)
+                            plan = shrink_plan(plan, problem.a, part)
+                            per_push = tier.push_bytes(plan, part.m, itemsize)
+                            if qsum_slabs:
+                                qsum_slabs = part.n_nodes
+                            er.elastic_n_nodes = n_new
+                        # the run/resume closures read ops/b/thresh_dev
+                        # late-bound — rebinding the locals above re-targets
+                        # them to the shrunk layout
+                    if tr is not None:
+                        if ev_fetch:
+                            tr.add_counter("tier_fetch_bytes", ev_fetch,
+                                           tier=tier.name)
+                        ev_sp.args.update(
+                            target_iter=target, wasted_iters=ev_wasted,
+                            recovery_s=rec_t, fetch_bytes=ev_fetch)
+                    event_reports.append(er)
+                    total_iters = int(st.pcg.j)
+                    resume_numeric_only = target >= 0
 
         if at_check:
             sdc_checks += 1
-            det = sdc.run_checks(ops, st, b, part, bnorm, sdc_policy)
+            with _tspan(tr, "sdc_check", cat="sdc",
+                        iter=total_iters) as ck_sp:
+                det = sdc.run_checks(ops, st, b, part, bnorm, sdc_policy)
+                if ck_sp is not None:
+                    ck_sp.args["fired"] = det is not None
             if det is not None:
                 sdc_repairs += 1
                 if sdc_repairs > sdc_policy.max_repairs:
@@ -482,6 +604,12 @@ def solve_resilient(
                             if (tg == "queue") != want_q]
                 latency = total_iters - attr[0] if attr else -1
                 J = int(st.pcg.j)
+                if tr is not None:
+                    tr.instant("sdc_detect", cat="sdc",
+                               detector=det.detector, iter=J,
+                               latency=latency,
+                               violation=float(det.violation),
+                               tol=float(det.tol))
                 ev_inner = float("nan")
                 ev_pff = -1
                 rec_t = 0.0
@@ -489,49 +617,66 @@ def solve_resilient(
                 ev_src = ()
                 ev_fetch = 0
                 ev_fetch_s = 0.0
-                if want_q:
-                    # the corrupted copies ARE the redundancy — nothing can
-                    # rebuild them; invalidate their slot so no recovery
-                    # ever reads them (the next push refreshes the queue).
-                    # The live trajectory is untouched: queue corruption
-                    # never feeds forward.
-                    st = _invalidate_queue_slots(st, det)
-                    target = J
-                elif strategy == "none":
-                    st, ev_wasted, target, rec_t = _none_failure(
-                        st, matvec, precond, b, dot=dot)
-                elif len(det.flagged) >= part.n_nodes:
-                    # catastrophic (all slabs non-finite): no survivors to
-                    # reconstruct from — restart clean
-                    st = esrp.esrp_init(matvec, precond, b, dot=dot,
-                                        n_slabs=qsum_slabs)
-                    if failure_runtime is not None:
-                        st = failure_runtime.init_queue(st, reset=True)
-                    ev_wasted, target = J, -1
-                else:
-                    (st, ev_wasted, target, ev_inner, rec_t, ev_pff, _,
-                     ev_src) = _esrp_failure(
-                        problem, plan, st, list(det.flagged), T, ops,
-                        pff_precond, fruntime=failure_runtime, push=push,
-                        sdc_mode=True, n_slabs=qsum_slabs)
-                    inner_rel = ev_inner
-                    if target >= 0:
-                        ev_fetch = tier.fetch_bytes(
-                            len(det.flagged) * part.rows_per_node, itemsize)
-                        ev_fetch_s = tier.read_s(ev_fetch)
-                recovery_s += rec_t
-                wasted += ev_wasted
-                event_reports.append(EventReport(
-                    iter=J, nodes=tuple(det.flagged), target_iter=target,
-                    wasted_iters=ev_wasted, recovery_s=rec_t,
-                    inner_rel=ev_inner, pff_iters=ev_pff,
-                    queue_src_nodes=ev_src, kind="sdc-repair",
-                    detector=det.detector, detect_iter=J,
-                    detect_latency=latency, sdc_violation=det.violation,
-                    sdc_tol=det.tol, tier=tier.name, fetch_bytes=ev_fetch,
-                    fetch_s_model=ev_fetch_s))
-                total_iters = int(st.pcg.j)
-                resume_numeric_only = (not want_q) and target >= 0
+                with _tspan(tr, "event:sdc-repair", cat="event", iter=J,
+                            detector=det.detector,
+                            nodes=list(det.flagged)) as rp_sp:
+                    if want_q:
+                        # the corrupted copies ARE the redundancy — nothing
+                        # can rebuild them; invalidate their slot so no
+                        # recovery ever reads them (the next push refreshes
+                        # the queue). The live trajectory is untouched:
+                        # queue corruption never feeds forward.
+                        st = _invalidate_queue_slots(st, det)
+                        target = J
+                    elif strategy == "none":
+                        st, ev_wasted, target, rec_t = _none_failure(
+                            st, matvec, precond, b, dot=dot)
+                    elif len(det.flagged) >= part.n_nodes:
+                        # catastrophic (all slabs non-finite): no survivors
+                        # to reconstruct from — restart clean
+                        st = esrp.esrp_init(matvec, precond, b, dot=dot,
+                                            n_slabs=qsum_slabs)
+                        if failure_runtime is not None:
+                            st = failure_runtime.init_queue(st, reset=True)
+                        ev_wasted, target = J, -1
+                    else:
+                        (st, ev_wasted, target, ev_inner, rec_t, ev_pff, _,
+                         ev_src) = _esrp_failure(
+                            problem, plan, st, list(det.flagged), T, ops,
+                            pff_precond, fruntime=failure_runtime, push=push,
+                            sdc_mode=True, n_slabs=qsum_slabs, tracer=tr)
+                        inner_rel = ev_inner
+                        if target >= 0:
+                            ev_fetch = tier.fetch_bytes(
+                                len(det.flagged) * part.rows_per_node,
+                                itemsize)
+                            ev_fetch_s = tier.read_s(ev_fetch)
+                    recovery_s += rec_t
+                    wasted += ev_wasted
+                    if tr is not None:
+                        if ev_fetch:
+                            tr.add_counter("tier_fetch_bytes", ev_fetch,
+                                           tier=tier.name)
+                        rp_sp.args.update(target_iter=target,
+                                          wasted_iters=ev_wasted,
+                                          latency=latency)
+                    event_reports.append(EventReport(
+                        iter=J, nodes=tuple(det.flagged), target_iter=target,
+                        wasted_iters=ev_wasted, recovery_s=rec_t,
+                        inner_rel=ev_inner, pff_iters=ev_pff,
+                        queue_src_nodes=ev_src, kind="sdc-repair",
+                        detector=det.detector, detect_iter=J,
+                        detect_latency=latency, sdc_violation=det.violation,
+                        sdc_tol=det.tol, tier=tier.name, fetch_bytes=ev_fetch,
+                        fetch_s_model=ev_fetch_s))
+                    total_iters = int(st.pcg.j)
+                    resume_numeric_only = (not want_q) and target >= 0
+    finally:
+        if tr is not None:
+            # close anything an exception unwound past, then the solve span
+            tr.close(solve_sp, converged=converged, iters=total_iters,
+                     recovery_s=recovery_s, wasted_iters=wasted,
+                     run_calls=run_calls)
     runtime = time.perf_counter() - t0
 
     pcg = st.pcg
@@ -541,11 +686,10 @@ def solve_resilient(
     nat_bytes = tot_bytes = 0
     if plan is not None:
         nat_bytes, tot_bytes = plan.bytes_per_aspmv(itemsize)
-    push_count = per_push = 0
+    push_count = 0
     if strategy == "esrp" and plan is not None:
         push_count = _count_pushes(push_ranges, T)
-        per_push = tier.push_bytes(plan, part.m, itemsize)
-    return SolveReport(
+    report = SolveReport(
         strategy=strategy, T=T, phi=phi, converged_iter=total_iters,
         rel_residual=rel, runtime_s=runtime, recovery_s=recovery_s,
         wasted_iters=wasted, target_iter=target, inner_rel=inner_rel,
@@ -564,7 +708,27 @@ def solve_resilient(
         sdc_checks=sdc_checks,
         sdc_check_every=sdc_policy.check_every if sdc_on else 0,
         final_n_nodes=part.n_nodes,
-        x=pcg.x)
+        x=pcg.x, trace=tr)
+    if tr is not None:
+        tr.record("solve_report", report.to_json())
+    return report
+
+
+def _solver_rooflines_cached(problem: Problem, ops, b, backend: str) -> dict:
+    """Roofline attribution of the SolverOps kernels, cached on the problem
+    per (backend, variant, shape, dtype) — the HLO lowering+analysis runs
+    once per distinct compiled program, like the jitted runners themselves."""
+    from repro.obs.rooflines import solver_rooflines
+
+    cache = getattr(problem, "_roofline_cache", None)
+    if cache is None:
+        cache = {}
+        problem._roofline_cache = cache
+    key = (backend, getattr(ops, "variant", ""), tuple(np.shape(b)),
+           str(np.dtype(b.dtype)))
+    if key not in cache:
+        cache[key] = solver_rooflines(ops, b)
+    return cache[key]
 
 
 # --------------------------------------------------------------------------- #
@@ -661,7 +825,7 @@ def _none_failure(st: esrp.ESRPState, matvec, precond, b, dot=None):
 def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
                   failed: list[int], T: int, solver_ops,
                   pff_precond: bool = True, fruntime=None, push=None,
-                  sdc_mode: bool = False, n_slabs: int = 0):
+                  sdc_mode: bool = False, n_slabs: int = 0, tracer=None):
     """Failure strikes during iteration J right after its (A)SpMV: run the
     iteration-J storage prelude (including, on the sharded runtime, the
     physical redundancy sends that were already in flight), lose the failed
@@ -696,21 +860,23 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
                                                                   True, push)
 
     # --- the failure: all dynamic data on failed nodes is lost -------------
-    if sdc_mode and fruntime is not None:
-        st = fruntime.lose_live(st, failed)
-        reload_bytes = 0
-    elif fruntime is not None:
-        st = fruntime.lose_esrp(st, failed)
-        reload_desc, reload_bytes = fruntime.precond_reload(failed)
-        del reload_desc
-    else:
-        mask = failed_row_mask(part, failed)
-        lose = lambda v: zero_failed(v, mask)
-        pcg = st.pcg._replace(x=lose(st.pcg.x), r=lose(st.pcg.r),
-                              z=lose(st.pcg.z), p=lose(st.pcg.p))
-        st = st._replace(pcg=pcg, x_s=lose(st.x_s), r_s=lose(st.r_s),
-                         z_s=lose(st.z_s), p_s=lose(st.p_s))
-        reload_bytes = 0
+    with _tspan(tracer, "inject", cat="recovery", nodes=list(failed),
+                sdc_mode=sdc_mode):
+        if sdc_mode and fruntime is not None:
+            st = fruntime.lose_live(st, failed)
+            reload_bytes = 0
+        elif fruntime is not None:
+            st = fruntime.lose_esrp(st, failed)
+            reload_desc, reload_bytes = fruntime.precond_reload(failed)
+            del reload_desc
+        else:
+            mask = failed_row_mask(part, failed)
+            lose = lambda v: zero_failed(v, mask)
+            pcg = st.pcg._replace(x=lose(st.pcg.x), r=lose(st.pcg.r),
+                                  z=lose(st.pcg.z), p=lose(st.pcg.p))
+            st = st._replace(pcg=pcg, x_s=lose(st.x_s), r_s=lose(st.r_s),
+                             z_s=lose(st.z_s), p_s=lose(st.p_s))
+            reload_bytes = 0
     pcg = st.pcg
 
     if not sdc_mode:
@@ -750,11 +916,19 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     # every node's own queue rows are intact and were checksum-verified by
     # this very check pass (the queue detector runs first), so the pair
     # reads straight from ``q`` on both runtimes.
-    if fruntime is not None and not sdc_mode:
-        p_prev, p_curr, src_nodes = fruntime.assemble_pair(
-            st, prev_slot, curr_slot, failed)
-    else:
-        p_prev, p_curr, src_nodes = st.q[prev_slot], st.q[curr_slot], ()
+    fetch_bytes = 2 * len(failed) * part.rows_per_node * \
+        np.dtype(problem.b.dtype).itemsize
+    with _tspan(tracer, "queue_fetch", cat="recovery",
+                slots=[int(prev_slot), int(curr_slot)],
+                bytes=int(fetch_bytes)) as qf_sp:
+        if fruntime is not None and not sdc_mode:
+            p_prev, p_curr, src_nodes = fruntime.assemble_pair(
+                st, prev_slot, curr_slot, failed)
+        else:
+            p_prev, p_curr, src_nodes = st.q[prev_slot], st.q[curr_slot], ()
+        if qf_sp is not None:
+            jax.block_until_ready(p_curr)
+            qf_sp.args["sources"] = list(src_nodes)
 
     # static-data reload (excluded from the recovery timing, paper §4) —
     # cached per (problem, failed-set) so repeated benchmark runs also reuse
@@ -766,24 +940,27 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
         problem._recon_cache = cache
     key = (tuple(failed), pff_precond)
     if key not in cache:
-        ops = esr.ReconstructionOps.build(problem, failed,
-                                          pff_precond=pff_precond)
-        # warm the jitted reconstruction (compile excluded from timing)
-        esr.reconstruct(ops, p_prev=p_prev, p_curr=p_curr,
-                        beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv
-                        )[0].block_until_ready()
+        with _tspan(tracer, "reconstruction_build", cat="build",
+                    nodes=list(failed), pff_precond=pff_precond):
+            ops = esr.ReconstructionOps.build(problem, failed,
+                                              pff_precond=pff_precond)
+            # warm the jitted reconstruction (compile excluded from timing)
+            esr.reconstruct(ops, p_prev=p_prev, p_curr=p_curr,
+                            beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv
+                            )[0].block_until_ready()
         cache[key] = ops
     ops = cache[key]
     t0 = time.perf_counter()
     x_f, r_f, z_f, inner_rel = esr.reconstruct(
         ops, p_prev=p_prev, p_curr=p_curr,
-        beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv)
-    f_rows = jnp.asarray(ops.f_rows)
-    x = x_surv.at[f_rows].set(x_f)
-    r = r_surv.at[f_rows].set(r_f)
-    z = z_surv.at[f_rows].set(z_f)
-    p = p_surv.at[f_rows].set(p_curr[f_rows])
-    jax.block_until_ready(x)
+        beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv, tracer=tracer)
+    with _tspan(tracer, "scatter", cat="recovery", target_iter=target):
+        f_rows = jnp.asarray(ops.f_rows)
+        x = x_surv.at[f_rows].set(x_f)
+        r = r_surv.at[f_rows].set(r_f)
+        z = z_surv.at[f_rows].set(z_f)
+        p = p_surv.at[f_rows].set(p_curr[f_rows])
+        jax.block_until_ready(x)
     rec_t = time.perf_counter() - t0
 
     new_pcg = PCGState(x=x, r=r, z=z, p=p, rz=rz, beta=beta_prev,
@@ -829,7 +1006,7 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
 
 
 def _imcr_failure(st: imcr.IMCRState, part, failed: list[int], phi: int,
-                  matvec, precond, b, dot=None, fruntime=None):
+                  matvec, precond, b, dot=None, fruntime=None, tracer=None):
     """IMCR: zero the failed nodes' live data, then everyone rolls back to the
     last checkpoint (replacements fetch their parts from surviving buddies).
 
@@ -854,7 +1031,9 @@ def _imcr_failure(st: imcr.IMCRState, part, failed: list[int], phi: int,
     if tag < 0:                      # failure before the first checkpoint
         return imcr.imcr_init(matvec, precond, b, dot=dot), J, -1, 0.0
     t0 = time.perf_counter()
-    pcg = imcr.recover(st)           # fetch-from-buddy (restore the copies)
-    jax.block_until_ready(pcg.x)
+    with _tspan(tracer, "buddy_restore", cat="recovery", tag=tag,
+                nodes=list(failed)):
+        pcg = imcr.recover(st)       # fetch-from-buddy (restore the copies)
+        jax.block_until_ready(pcg.x)
     rec_t = time.perf_counter() - t0
     return st._replace(pcg=pcg), J - tag, tag, rec_t

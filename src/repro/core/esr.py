@@ -40,6 +40,7 @@ r, x, so either source yields the same algebra.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 
@@ -142,38 +143,84 @@ class ReconstructionOps:
             p_offdiag=p_offdiag, p_solve=p_solve)
 
 
+def _span(tracer, name: str, **args):
+    """Recovery-phase span, or a no-op context when observability is off."""
+    if tracer is None:
+        return contextlib.nullcontext()
+    return tracer.span(name, cat="recovery", **args)
+
+
 def reconstruct(ops: ReconstructionOps, *, p_prev: jax.Array, p_curr: jax.Array,
                 beta_prev: jax.Array, r_surv: jax.Array, x_surv: jax.Array,
-                inner_rtol: float = 1e-14, inner_max_iters: int = 20_000):
+                inner_rtol: float = 1e-14, inner_max_iters: int = 20_000,
+                tracer=None):
     """Run Alg. 2. Inputs are full-length vectors; only surviving (resp.
     redundant-copy) entries are read, enforced by masking. Returns the failed
     nodes' compact (x_f, r_f, z_f) plus the inner-solve relative residual.
+
+    ``tracer`` (an obs.Tracer, or None) gets one nested span per Alg. 2
+    phase — lines 4-5 (off-diagonal apply), the line-6 P_ff solve, the
+    line-7 RHS assembly, the line-8 A_ff solve. Per-phase wall times are
+    only meaningful with a host sync at each boundary, so the spans
+    block_until_ready their segment's outputs; tracer=None skips both the
+    spans and the syncs (the default async hot path is untouched).
     """
+    sync = jax.block_until_ready if tracer is not None else (lambda x: x)
     mask = jnp.asarray(ops.mask)
     f_rows = jnp.asarray(ops.f_rows)
     b = ops.problem.precond_block
 
-    p_prev_f = p_prev[f_rows]
-    p_curr_f = p_curr[f_rows]
-    z_f = p_curr_f - beta_prev * p_prev_f                       # line 4
-    if ops.p_solve is None:
-        # block-Jacobi closed forms: P_{f,I\f} == 0 and P_ff^{-1} = A_bb
-        v = z_f                                                 # line 5
-        r_f = jnp.einsum("nij,nj->ni", ops.diag_f,
-                         v.reshape(-1, b)).reshape(-1)           # line 6
-    else:
-        # genuine off-diagonal coupling: apply the real P row strip to the
-        # surviving entries (the closure masks I_f), then run a real local
-        # P_ff solve through the preconditioner's kernels
-        v = z_f - ops.p_offdiag(r_surv)                         # line 5
-        r_f = ops.p_solve(v, inner_rtol, inner_max_iters)       # line 6
+    itemsize = np.dtype(r_surv.dtype).itemsize
+    with _span(tracer, "alg2_line5_offdiag", n_failed_rows=int(ops.f_rows.size),
+               bytes=int((ops.f_rows.size + r_surv.size) * itemsize),
+               jacobi_closed_form=ops.p_solve is None):
+        p_prev_f = p_prev[f_rows]
+        p_curr_f = p_curr[f_rows]
+        z_f = p_curr_f - beta_prev * p_prev_f                   # line 4
+        if ops.p_solve is None:
+            # block-Jacobi closed form: P_{f,I\f} == 0, so line 5 is v = z_f
+            v = sync(z_f)                                       # line 5
+        else:
+            # genuine off-diagonal coupling: apply the real P row strip to
+            # the surviving entries (the closure masks I_f)
+            v = sync(z_f - ops.p_offdiag(r_surv))               # line 5
 
-    x_masked = jnp.where(mask, jnp.zeros_like(x_surv), x_surv)  # x_{I\f} only
-    w = ops.b_f - r_f - ops.a_rows_f.matvec(x_masked)           # line 7
+    with _span(tracer, "alg2_line6_pff_solve",
+               jacobi_closed_form=ops.p_solve is None) as sp6:
+        if ops.p_solve is None:
+            # block-Jacobi closed form: P_ff^{-1} = A_bb, one block matvec
+            r_f = sync(jnp.einsum("nij,nj->ni", ops.diag_f,
+                                  v.reshape(-1, b)).reshape(-1))  # line 6
+        else:
+            # real local P_ff solve through the preconditioner's kernels
+            r_f = sync(ops.p_solve(v, inner_rtol, inner_max_iters))  # line 6
+            stats = getattr(ops.p_solve, "stats", None)
+            if sp6 is not None and stats:
+                sp6.args.update({k: jsonable_stat(v2)
+                                 for k, v2 in dict(stats).items()})
 
-    state, rel = run_pcg(ops.a_ff.matvec, ops.precond_f, w,
-                         rtol=inner_rtol, max_iters=inner_max_iters)  # line 8
-    return state.x, r_f, z_f, rel
+    with _span(tracer, "alg2_line7_w"):
+        x_masked = jnp.where(mask, jnp.zeros_like(x_surv), x_surv)
+        w = sync(ops.b_f - r_f - ops.a_rows_f.matvec(x_masked))    # line 7
+
+    with _span(tracer, "alg2_line8_aff_solve",
+               inner_rtol=inner_rtol) as sp8:
+        state, rel = run_pcg(ops.a_ff.matvec, ops.precond_f, w,
+                             rtol=inner_rtol,
+                             max_iters=inner_max_iters)            # line 8
+        x_f = sync(state.x)
+        if sp8 is not None:
+            sp8.args["inner_rel"] = float(rel)
+            sp8.args["inner_iters"] = int(state.j)
+    return x_f, r_f, z_f, rel
+
+
+def jsonable_stat(v):
+    """Best-effort scalar coercion for p_solve iteration stats."""
+    try:
+        return float(np.asarray(v).reshape(()))
+    except Exception:                                  # noqa: BLE001
+        return str(v)
 
 
 def scatter_failed(full_surv: jax.Array, compact_f: jax.Array,

@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ops import SolverOps
-from repro.core.pcg import (PCGState, pcg_init, pcg_iterate_ops,
+from repro.core.pcg import (METRIC_FIELDS, PCGState, iteration_metrics,
+                            pcg_init, pcg_iterate_ops,
                             scan_with_convergence_freeze)
 
 
@@ -215,11 +216,12 @@ def esrp_step(st: ESRPState, ops: SolverOps, T: int,
     return st._replace(pcg=numeric_step(st.pcg, ops, b, rr_every, gated))
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6, 8))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6, 8, 9))
 def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
               thresh: jax.Array | None = None,
               rr_every: int = 0, gated: bool = True,
-              b: jax.Array | None = None, push=None):
+              b: jax.Array | None = None, push=None,
+              metrics: bool = False):
     """Run n_iters ESRP iterations, recording ||r|| after each (the paper
     checks convergence every iteration; the driver scans the record).
 
@@ -229,15 +231,28 @@ def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
     *is* the state at first convergence — and can overlap the norm-record
     readback of one chunk with the dispatch of the next. thresh=None runs
     all n_iters unconditionally.
+
+    ``metrics`` (static, obs=on) extends the scan record with the on-device
+    metrics ring: the return becomes (state, (norms, aux)) with one
+    ``pcg.METRIC_FIELDS`` row per iteration (the executed iteration's
+    storage flags + the post-iteration rz / orthogonality residual), read
+    back together with the norm record. metrics=False compiles to exactly
+    the pre-telemetry jaxpr (tested).
     """
 
     def step(s):
         s2 = esrp_step(s, ops, T, b=b, rr_every=rr_every, gated=gated,
                        push=push)
-        return s2, jnp.linalg.norm(s2.pcg.r)
+        rnorm = jnp.linalg.norm(s2.pcg.r)
+        if not metrics:
+            return s2, rnorm
+        do_push, star = storage_flags(s.pcg.j, T)
+        return s2, rnorm, iteration_metrics(s2.pcg, do_push, star)
 
+    aux0 = (jnp.zeros((len(METRIC_FIELDS),), st.pcg.rz.dtype)
+            if metrics else None)
     return scan_with_convergence_freeze(
-        st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh)
+        st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh, aux0)
 
 
 def recovery_point(st: ESRPState, T: int):

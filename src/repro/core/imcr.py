@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ops import SolverOps
-from repro.core.pcg import (PCGState, pcg_init, pcg_iterate_ops,
+from repro.core.pcg import (METRIC_FIELDS, PCGState, iteration_metrics,
+                            pcg_init, pcg_iterate_ops,
                             scan_with_convergence_freeze)
 
 
@@ -78,22 +79,35 @@ def imcr_step(st: IMCRState, ops: SolverOps, T: int, phi: int,
     return st._replace(pcg=pcg_iterate_ops(st.pcg, ops))
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 7))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 7, 8))
 def run_chunk(st: IMCRState, ops: SolverOps, T: int, phi: int,
               rows_per_node: int, n_iters: int,
-              thresh: jax.Array | None = None, gated: bool = True):
+              thresh: jax.Array | None = None, gated: bool = True,
+              metrics: bool = False):
     """Run n_iters IMCR iterations, recording ||r|| after each. Same
     convergence-freeze protocol as esrp.run_chunk (shared via
     ``pcg.scan_with_convergence_freeze``): once the carried ||r|| drops
     below ``thresh`` the remaining iterations pass the state through, so
-    the driver never re-runs the final chunk."""
+    the driver never re-runs the final chunk.
+
+    ``metrics`` (static) arms the same on-device metrics ring as
+    esrp.run_chunk — here the "push" column records the buddy-checkpoint
+    schedule (j % T == 0, j > 2) and "star" is always 0 (IMCR has no
+    starred-locals anchor)."""
 
     def step(s):
         s2 = imcr_step(s, ops, T, phi, rows_per_node, gated)
-        return s2, jnp.linalg.norm(s2.pcg.r)
+        rnorm = jnp.linalg.norm(s2.pcg.r)
+        if not metrics:
+            return s2, rnorm
+        do_ck = (s.pcg.j % T == 0) & (s.pcg.j > 2)
+        return s2, rnorm, iteration_metrics(s2.pcg, do_ck,
+                                            jnp.zeros((), bool))
 
+    aux0 = (jnp.zeros((len(METRIC_FIELDS),), st.pcg.rz.dtype)
+            if metrics else None)
     return scan_with_convergence_freeze(
-        st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh)
+        st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh, aux0)
 
 
 def check_survivable(failed: list[int], phi: int, n_nodes: int) -> None:

@@ -84,9 +84,29 @@ def pcg_step(state: PCGState, matvec: Callable,
     return pcg_iterate_ops(state, make_closure_ops(matvec, precond))
 
 
+# Per-iteration telemetry columns of the on-device metrics ring (obs=on):
+# the iteration's rz, its storage push/star flags, and the orthogonality
+# invariant residual |r^T p - rz| — the same signal core.sdc's host-side
+# orthogonality check thresholds, here recorded every iteration.
+METRIC_FIELDS = ("rz", "push", "star", "orth")
+
+
+def iteration_metrics(pcg, push, star) -> jax.Array:
+    """One (len(METRIC_FIELDS),) on-device metrics row for the iteration
+    that just produced ``pcg``. Stacked into a single small vector so the
+    chunk scan carries one extra row per iteration next to the ||r|| record
+    and the whole ring reads back with the existing chunk readback (zero
+    extra dispatches)."""
+    dt = pcg.rz.dtype
+    orth = jnp.abs(pcg.r @ pcg.p - pcg.rz)
+    return jnp.stack([pcg.rz, jnp.asarray(push).astype(dt),
+                      jnp.asarray(star).astype(dt), orth])
+
+
 def scan_with_convergence_freeze(st, step: Callable, rnorm0: jax.Array,
                                  n_iters: int,
-                                 thresh: jax.Array | None):
+                                 thresh: jax.Array | None,
+                                 aux0: jax.Array | None = None):
     """Scan ``n_iters`` of ``step`` (state -> (state, ||r||)), recording
     ||r|| after each iteration — the chunked-convergence protocol shared by
     the ESRP and IMCR chunk runners.
@@ -96,7 +116,26 @@ def scan_with_convergence_freeze(st, step: Callable, rnorm0: jax.Array,
     through untouched (``lax.cond``), so the caller's returned state *is*
     the state at first convergence and no chunk ever needs re-running.
     thresh=None runs all n_iters unconditionally.
+
+    ``aux0`` arms the metrics ring (obs=on): ``step`` then returns
+    (state, ||r||, aux) and the record becomes ``(norms, auxes)`` — frozen
+    iterations repeat the carried aux row, which the driver trims away with
+    the executed count. aux0=None keeps the exact pre-telemetry trace (the
+    jaxpr-identity tests compare against this path).
     """
+    if aux0 is not None:
+        def body_aux(carry, _):
+            s, rnorm, aux = carry
+            if thresh is None:
+                s, rnorm, aux = step(s)
+            else:
+                s, rnorm, aux = jax.lax.cond(
+                    rnorm < thresh, lambda s: (s, rnorm, aux), step, s)
+            return (s, rnorm, aux), (rnorm, aux)
+
+        (st, _, _), record = jax.lax.scan(body_aux, (st, rnorm0, aux0), None,
+                                          length=n_iters)
+        return st, record
 
     def body(carry, _):
         s, rnorm = carry

@@ -33,6 +33,7 @@ replicated scalars, the step counter survives on any rank).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, NamedTuple, Optional
@@ -73,7 +74,7 @@ class ESRPTrainer:
     """Wraps a pjit-able train_step with ESRP storage/recovery."""
 
     def __init__(self, model, train_step: Callable, pipeline, ft: FTConfig,
-                 param_specs=None):
+                 param_specs=None, obs=None):
         self.model = model
         self.train_step = jax.jit(train_step)
         self.pipeline = pipeline
@@ -82,6 +83,13 @@ class ESRPTrainer:
         self._plan: Optional[BuddyPlan] = None
         self.push_bytes = 0
         self.push_count = 0
+        self.obs = obs                # obs.Tracer: storage/failure/recovery
+        #                               spans + per-step loss counter
+
+    def _span(self, name: str, cat: str, **args):
+        if self.obs is None:
+            return contextlib.nullcontext()
+        return self.obs.span(name, cat=cat, **args)
 
     # ------------------------------------------------------------------ #
     def init_buffers(self, params, opt: OptState) -> FTBuffers:
@@ -101,28 +109,34 @@ class ESRPTrainer:
         paper's starred duplicates, no communication)."""
         if self.ft.mode == "none":
             return bufs
-        dtype = jnp.bfloat16 if self.ft.compress else None
-        p_copies = self._plan.push(params)     # esrp: retained, not sent
-        mu_copies = self._mplan.push(opt.mu, dtype)
-        nu_copies = self._mplan.push(opt.nu, dtype)
-        local = (jax.tree.map(jnp.copy, params),
-                 jax.tree.map(jnp.copy, opt.mu),
-                 jax.tree.map(jnp.copy, opt.nu))
-        slot = 1 - bufs.active                 # write the non-active slot
-        sl = list(bufs.slot_local)
-        sp = list(bufs.slot_params)
-        sm = list(bufs.slot_mu)
-        sn = list(bufs.slot_nu)
-        ss = list(bufs.slot_step)
-        sl[slot], sp[slot], sm[slot], sn[slot], ss[slot] = (
-            local, p_copies, mu_copies, nu_copies, step)
-        # communication accounting: moments always travel; params only under
-        # imcr (esrp retains them from the existing FSDP all-gather)
-        scale = 0.5 if self.ft.compress else 1.0   # bf16 moment redundancy
-        self.push_bytes += int(self._mplan.bytes_per_push(opt.mu) * 2 * scale)
-        if self.ft.mode == "imcr":
-            self.push_bytes += self._plan.bytes_per_push(params)
-        self.push_count += 1
+        with self._span("ft_storage_push", cat="storage", step=step,
+                        mode=self.ft.mode) as push_sp:
+            dtype = jnp.bfloat16 if self.ft.compress else None
+            p_copies = self._plan.push(params)     # esrp: retained, not sent
+            mu_copies = self._mplan.push(opt.mu, dtype)
+            nu_copies = self._mplan.push(opt.nu, dtype)
+            local = (jax.tree.map(jnp.copy, params),
+                     jax.tree.map(jnp.copy, opt.mu),
+                     jax.tree.map(jnp.copy, opt.nu))
+            slot = 1 - bufs.active                 # write the non-active slot
+            sl = list(bufs.slot_local)
+            sp = list(bufs.slot_params)
+            sm = list(bufs.slot_mu)
+            sn = list(bufs.slot_nu)
+            ss = list(bufs.slot_step)
+            sl[slot], sp[slot], sm[slot], sn[slot], ss[slot] = (
+                local, p_copies, mu_copies, nu_copies, step)
+            # communication accounting: moments always travel; params only
+            # under imcr (esrp retains them from the existing FSDP all-gather)
+            scale = 0.5 if self.ft.compress else 1.0   # bf16 moment push
+            pushed = int(self._mplan.bytes_per_push(opt.mu) * 2 * scale)
+            if self.ft.mode == "imcr":
+                pushed += self._plan.bytes_per_push(params)
+            self.push_bytes += pushed
+            self.push_count += 1
+            if push_sp is not None:
+                push_sp.args["bytes"] = pushed
+                self.obs.add_counter("ft_push_bytes", pushed, step=step)
         return FTBuffers(sl, sp, sm, sn, ss, active=slot)
 
     # ------------------------------------------------------------------ #
@@ -192,13 +206,21 @@ class ESRPTrainer:
             if pending and step == pending[0].iter:
                 ev = pending.pop(0)
                 failed = list(ev.nodes)
-                params, opt, bufs = self.inject_failure(params, opt, bufs,
-                                                        failed)
-                params, opt, step = self.recover(bufs, failed)
+                with self._span("ft_inject", cat="event", step=step,
+                                ranks=failed):
+                    params, opt, bufs = self.inject_failure(params, opt,
+                                                            bufs, failed)
+                with self._span("ft_recover", cat="recovery",
+                                ranks=failed) as rec_sp:
+                    params, opt, step = self.recover(bufs, failed)
+                    if rec_sp is not None:
+                        rec_sp.args["restart_step"] = step
                 continue
             batch = self.pipeline.batch_at(step)
             params, opt, metrics = self.train_step(params, opt, batch)
             losses[step] = float(metrics["loss"])
+            if self.obs is not None:
+                self.obs.counter("ft_step", step=step, loss=losses[step])
             step += 1
         return params, opt, losses
 

@@ -7,11 +7,12 @@ reduced configs end-to-end; the serve cells of the dry-run prove the full
 configs lower/compile on the production meshes.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-        --smoke --batch 4 --prompt-len 32 --new-tokens 64
+        --smoke --batch 4 --prompt-len 32 --new-tokens 64 --trace
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -32,6 +33,12 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=64)
     ap.add_argument("--mesh", default="none",
                     choices=["none", "single", "multi"])
+    ap.add_argument("--trace", action="store_true",
+                    help="span-trace prefill/decode; writes "
+                         "artifacts/obs/serve_trace.json + serve_metrics.txt")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="with --trace: write the text metrics snapshot "
+                         "here instead of artifacts/obs/serve_metrics.txt")
     args = ap.parse_args()
 
     if args.mesh != "none":
@@ -52,20 +59,51 @@ def main():
     prefill = jax.jit(make_prefill_step(model))
     decode = jax.jit(make_decode_step(model))
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer("serve")
+        tracer.meta.update(arch=cfg.name, batch=args.batch,
+                           prompt_len=args.prompt_len,
+                           new_tokens=args.new_tokens, mesh=args.mesh)
+
+    def span(name, **sargs):
+        if tracer is None:
+            import contextlib
+            return contextlib.nullcontext()
+        return tracer.span(name, cat="serve", **sargs)
+
     t0 = time.time()
-    tok, caches = prefill(params, {"tokens": prompts}, caches)
-    jax.block_until_ready(tok)
+    with span("prefill", batch=args.batch, prompt_len=args.prompt_len):
+        tok, caches = prefill(params, {"tokens": prompts}, caches)
+        jax.block_until_ready(tok)
     t_prefill = time.time() - t0
     t1 = time.time()
-    for i in range(args.new_tokens - 1):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        tok, caches = decode(params, tok, caches, pos)
-    jax.block_until_ready(tok)
+    with span("decode", new_tokens=args.new_tokens - 1):
+        for i in range(args.new_tokens - 1):
+            pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+            tok, caches = decode(params, tok, caches, pos)
+            if tracer is not None:
+                tracer.counter("tokens_decoded",
+                               tokens=args.batch * (i + 1))
+        jax.block_until_ready(tok)
     t_decode = time.time() - t1
     n_new = args.batch * (args.new_tokens - 1)
     print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
           f"{t_prefill * 1000:.0f} ms; decode {n_new} tokens in "
           f"{t_decode:.2f}s ({n_new / t_decode:.1f} tok/s)")
+
+    if tracer is not None:
+        from repro.obs import metrics_snapshot, write_chrome_trace
+        tracer.add_counter("tokens_total", n_new)
+        os.makedirs("artifacts/obs", exist_ok=True)
+        path = write_chrome_trace(tracer, "artifacts/obs/serve_trace.json")
+        snap = metrics_snapshot(tracer)
+        metrics_path = args.metrics_out or "artifacts/obs/serve_metrics.txt"
+        with open(metrics_path, "w") as fh:
+            fh.write(snap)
+        print(f"[serve] wrote {path} + {metrics_path}")
+        print(snap, end="")
 
 
 if __name__ == "__main__":

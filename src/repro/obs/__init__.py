@@ -1,0 +1,32 @@
+"""Solver telemetry: sync-free iteration metrics, nested lifecycle spans,
+Chrome-trace/Perfetto + JSONL exporters, and roofline-attributed kernel costs.
+
+The subsystem is strictly opt-in: the solver's hot loop compiles with zero
+added ops unless a ``Tracer`` is threaded through ``solve_resilient(obs=...)``
+(asserted at jaxpr level in tests/test_obs.py). With a tracer attached:
+
+  * every chunk's norm readback also carries a small on-device metrics ring
+    (per-iteration ||r||, rz, storage-push/star flags, the orthogonality
+    invariant residual) — a full convergence/event history at zero extra
+    dispatches;
+  * solver lifecycle phases (chunk dispatch/settle, storage pushes, failure
+    injection, the Alg. 2 recovery broken into its line-5/6/8 inner phases
+    plus the queue fetch, SDC detect -> repair, elastic re-partition) land as
+    nested wall-time spans with byte counters from ``aspmv.RedundancyPlan``
+    and ``core.tiers``;
+  * the lowered HLO of each dispatched kernel is priced once at build time by
+    the seed roofline analyzer (``roofline/hlo_analysis``) and attached as
+    FLOP/byte metadata to the trace and to BENCH_*.json.
+"""
+from repro.obs.export import (chrome_trace, metrics_snapshot, span_tree,
+                              validate_chrome_trace, walk_spans,
+                              write_chrome_trace, write_jsonl)
+from repro.obs.rooflines import kernel_roofline, solver_rooflines
+from repro.obs.trace import SCHEMA_VERSION, Span, Tracer, jsonable
+
+__all__ = [
+    "SCHEMA_VERSION", "Span", "Tracer", "jsonable",
+    "chrome_trace", "write_chrome_trace", "write_jsonl",
+    "validate_chrome_trace", "span_tree", "walk_spans", "metrics_snapshot",
+    "kernel_roofline", "solver_rooflines",
+]

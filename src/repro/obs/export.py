@@ -1,0 +1,162 @@
+"""Trace exporters + validators: Chrome-trace/Perfetto JSON, append-only
+JSONL event log, Prometheus-style text metrics snapshot, span-tree assembly.
+
+The Chrome JSON object format (https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU)
+is what Perfetto's legacy importer and chrome://tracing both read: a
+``traceEvents`` list of {name, cat, ph, ts, pid, tid, args} with B/E duration
+pairs, "C" counters, and "i" instants. ``validate_chrome_trace`` enforces the
+subset this repo emits — sorted timestamps and stack-disciplined B/E pairs
+per (pid, tid) — and is what the CI bench-smoke job runs over the emitted
+artifact (``python -m repro.obs.validate``).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.obs.trace import SCHEMA_VERSION, Tracer, jsonable
+
+_PHASES = {"B", "E", "C", "i", "X", "M"}
+
+
+def chrome_trace(tracer: Tracer) -> dict:
+    """The exportable Chrome-trace JSON object for ``tracer``."""
+    meta = dict(tracer.meta)
+    meta["counters"] = jsonable(tracer.counters)
+    return {"traceEvents": list(tracer.events),
+            "displayTimeUnit": "ms",
+            "metadata": jsonable(meta)}
+
+
+def write_chrome_trace(tracer: Tracer, path: str) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(chrome_trace(tracer), f)
+    return path
+
+
+def write_jsonl(tracer: Tracer, path: str) -> str:
+    """Append-only JSONL event log: one meta line, then one line per trace
+    event, then the non-trace records (solve reports). Appending (not
+    truncating) lets a sweep accumulate runs into one log."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps({"type": "meta",
+                            **jsonable(dict(tracer.meta))}) + "\n")
+        for ev in tracer.events:
+            f.write(json.dumps({"type": "event", **ev}) + "\n")
+        for rec in tracer.records:
+            f.write(json.dumps(rec) + "\n")
+    return path
+
+
+# --------------------------------------------------------------------------- #
+def validate_chrome_trace(doc) -> list[str]:
+    """Schema/sortedness/B-E-matching errors in a Chrome-trace object (the
+    parsed JSON dict). Empty list = valid."""
+    errors: list[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["missing traceEvents list"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    last_ts: dict[tuple, float] = {}
+    stacks: dict[tuple, list[str]] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        name = ev.get("name")
+        if ph not in _PHASES:
+            errors.append(f"event {i} ({name!r}): unknown ph {ph!r}")
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            errors.append(f"event {i} ({name!r}): non-numeric ts {ts!r}")
+            continue
+        key = (ev.get("pid", 0), ev.get("tid", 0))
+        if key in last_ts and ts < last_ts[key]:
+            errors.append(f"event {i} ({name!r}): ts {ts} < previous "
+                          f"{last_ts[key]} on track {key}")
+        last_ts[key] = ts
+        stack = stacks.setdefault(key, [])
+        if ph == "B":
+            stack.append(name)
+        elif ph == "E":
+            if not stack:
+                errors.append(f"event {i} ({name!r}): E without open B")
+            elif stack[-1] != name:
+                errors.append(f"event {i}: E {name!r} closes open B "
+                              f"{stack[-1]!r}")
+                stack.pop()
+            else:
+                stack.pop()
+    for key, stack in stacks.items():
+        if stack:
+            errors.append(f"track {key}: unclosed span(s) {stack}")
+    return errors
+
+
+def span_tree(events: list[dict]) -> list[dict]:
+    """Reconstruct the nested span forest from B/E events. Each node is
+    {name, cat, ts, dur_us, args, children}; instants/counters are skipped.
+    Used by the well-formedness tests (every recovery span must sit under
+    its event span) and by the ``--trace`` per-phase breakdown printers."""
+    roots: list[dict] = []
+    stacks: dict[tuple, list[dict]] = {}
+    for ev in events:
+        ph = ev.get("ph")
+        if ph not in ("B", "E"):
+            continue
+        key = (ev.get("pid", 0), ev.get("tid", 0))
+        stack = stacks.setdefault(key, [])
+        if ph == "B":
+            node = dict(name=ev.get("name"), cat=ev.get("cat", ""),
+                        ts=ev.get("ts"), dur_us=None, args=ev.get("args", {}),
+                        children=[])
+            (stack[-1]["children"] if stack else roots).append(node)
+            stack.append(node)
+        elif stack:
+            node = stack.pop()
+            node["dur_us"] = ev["ts"] - node["ts"]
+            node["args"] = ev.get("args", node["args"])
+    return roots
+
+
+def walk_spans(nodes: list[dict]):
+    """Depth-first iterator over a ``span_tree`` forest."""
+    for node in nodes:
+        yield node
+        yield from walk_spans(node["children"])
+
+
+# --------------------------------------------------------------------------- #
+def metrics_snapshot(tracer: Tracer) -> str:
+    """Prometheus-style text snapshot: aggregate span wall time + call counts
+    by (name, cat), plus the cumulative counters — the serving stack's
+    metrics hook (``launch/serve.py --trace``)."""
+    agg: dict[tuple[str, str], list[float]] = {}
+    for node in walk_spans(span_tree(tracer.events)):
+        if node["dur_us"] is None:
+            continue
+        key = (node["name"], node["cat"])
+        tot = agg.setdefault(key, [0, 0.0])
+        tot[0] += 1
+        tot[1] += node["dur_us"] / 1e6
+    lines = [f"# obs metrics snapshot: tracer={tracer.name} "
+             f"schema_version={SCHEMA_VERSION}",
+             "# TYPE obs_span_seconds_total counter",
+             "# TYPE obs_span_calls_total counter",
+             "# TYPE obs_counter gauge"]
+    for (name, cat), (calls, secs) in sorted(agg.items()):
+        labels = f'{{name="{name}",cat="{cat}"}}'
+        lines.append(f"obs_span_seconds_total{labels} {secs:.9f}")
+        lines.append(f"obs_span_calls_total{labels} {calls}")
+    for name, value in sorted(tracer.counters.items()):
+        lines.append(f'obs_counter{{name="{name}"}} {value}')
+    return "\n".join(lines) + "\n"

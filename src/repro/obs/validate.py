@@ -1,0 +1,75 @@
+"""CLI trace/bench validator (the CI bench-smoke gate).
+
+    PYTHONPATH=src python -m repro.obs.validate artifacts/obs/failures_trace.json \
+        --bench artifacts/bench/BENCH_failures.json
+
+Exit 0 iff: the trace parses, passes the Chrome-trace schema checks (sorted
+timestamps, stack-matched B/E pairs), and — with ``--bench`` — the BENCH
+json carries roofline FLOP/byte metadata for at least ``--min-kernels``
+kernels (default 3, the PR acceptance bar).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.export import validate_chrome_trace
+
+_ROOFLINE_FIELDS = ("flops", "hbm_bytes", "flop_per_byte")
+
+
+def check_bench_rooflines(doc: dict, min_kernels: int = 3) -> list[str]:
+    roofs = doc.get("rooflines")
+    if not isinstance(roofs, dict) or not roofs:
+        return ["BENCH json lacks a 'rooflines' section"]
+    errors = []
+    priced = 0
+    for name, rec in roofs.items():
+        if not isinstance(rec, dict):
+            errors.append(f"roofline {name!r}: not an object")
+            continue
+        if "error" in rec:
+            continue                     # a kernel may not lower off-mesh
+        missing = [f for f in _ROOFLINE_FIELDS
+                   if not isinstance(rec.get(f), (int, float))]
+        if missing:
+            errors.append(f"roofline {name!r}: missing/non-numeric {missing}")
+        else:
+            priced += 1
+    if priced < min_kernels:
+        errors.append(f"only {priced} kernels carry roofline fields "
+                      f"(need >= {min_kernels})")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome-trace JSON to validate")
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_*.json that must carry roofline fields")
+    ap.add_argument("--min-kernels", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    errors = []
+    with open(args.trace) as f:
+        doc = json.load(f)
+    errors += [f"{args.trace}: {e}" for e in validate_chrome_trace(doc)]
+    n_events = len(doc.get("traceEvents", []))
+    if not n_events:
+        errors.append(f"{args.trace}: empty traceEvents")
+    if args.bench:
+        with open(args.bench) as f:
+            bench = json.load(f)
+        errors += [f"{args.bench}: {e}"
+                   for e in check_bench_rooflines(bench, args.min_kernels)]
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    if not errors:
+        print(f"OK {args.trace}: {n_events} events"
+              + (f"; {args.bench}: rooflines present" if args.bench else ""))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

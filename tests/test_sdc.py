@@ -204,6 +204,33 @@ def test_sdc_validation(problem):
         SDCEvent(iter=3, nodes=(0,), bit=64)
 
 
+def test_detect_latency_lands_in_the_trace(problem, reference):
+    """obs=on: the ``sdc_detect`` instant carries the SAME attributed
+    latency as the EventReport, bounded by the check cadence (ISSUE 7
+    satellite — latency is a first-class trace signal)."""
+    rep = solve_resilient(
+        problem, strategy="esrp", T=10, rtol=1e-10,
+        scenario=[SDCEvent(iter=33, nodes=(1,), target="r")], obs=True)
+    (er,) = _repairs(rep)
+    instants = [e for e in rep.trace.events
+                if e["name"] == "sdc_detect" and e["ph"] == "i"]
+    assert len(instants) == 1
+    a = instants[0]["args"]
+    assert a["latency"] == er.detect_latency
+    assert 0 < a["latency"] <= sdc.SDCPolicy().check_every
+    assert a["detector"] == er.detector
+    assert a["iter"] == er.detect_iter
+    # it really fired: a non-finite violation serializes to None (jsonable)
+    assert a["violation"] is None or not (a["violation"] <= a["tol"])
+    # the repair event span follows the instant and nests the recovery
+    from repro.obs import span_tree, walk_spans
+    reps = [n for n in walk_spans(span_tree(rep.trace.events))
+            if n["name"] == "event:sdc-repair"]
+    assert len(reps) == 1
+    assert reps[0]["args"]["detector"] == er.detector
+    _assert_rejoined(rep, reference)
+
+
 def test_bitflip_is_an_involution():
     v = jnp.asarray(np.random.default_rng(0).standard_normal(32))
     idx = np.asarray([3, 17])
