@@ -700,6 +700,11 @@ def bench_failures(full, sharded=False, tiers=False, trace=False):
                    strategies=["esrp", "imcr"]),
         rows=rows,
         tiers=dict(names=list(TIERS),
+                   # constants provenance: "placeholder" class numbers or a
+                   # scripts/calibrate_tiers.py measurement record (loaded
+                   # via REPRO_TIER_CALIBRATION)
+                   provenance={t.name: t.provenance
+                               for t in TIERS.values()},
                    swept=bool(tier_rows), rows=tier_rows),
         aggregate=dict(
             n_rows=len(rows),
@@ -729,6 +734,117 @@ def bench_failures(full, sharded=False, tiers=False, trace=False):
               f"+ failures_events.jsonl + failures_metrics.txt")
 
 
+def bench_serve(full, trace=False):
+    """Streaming solver service: aggregate throughput + p50/p99 request
+    latency vs micro-batch width B, with failures injected under load.
+
+    The request stream is identical for every width (same seed, same RHS
+    set) and ``fail_every=2`` lands a FailureEvent in every second
+    micro-batch — so exactly half the requests ride through a failure +
+    Alg. 2 recovery at *every* B (the per-request failure exposure is
+    width-invariant and the comparison is fair). Each width gets one warmup
+    pass covering both the failing and clean micro-batch compiles before
+    the timed drain.
+
+    Writes artifacts/bench/serve.csv + BENCH_serve.json; the JSON embeds
+    the B>=8-vs-B=1 aggregate-throughput speedup (acceptance: > 2x). With
+    ``trace``, the widest sweep runs under an obs.Tracer and exports
+    artifacts/obs/serve_trace.json + serve_metrics.txt."""
+    import json
+
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.failures import FailureEvent
+    from repro.serve.solver_service import SolverService
+    from repro.sparse.matrices import build_problem
+
+    _ensure_dir()
+    nx = 40 if full else 28
+    n_req = 32 if full else 16
+    widths = [1, 2, 4, 8, 16] if full else [1, 2, 4, 8]
+    problem = build_problem("poisson2d", n_nodes=8, nx=nx)
+    scenario = [FailureEvent(25, (1,))]
+    rng = np.random.default_rng(11)
+    reqs = rng.standard_normal((n_req, problem.part.m))
+    kw = dict(strategy="esrp", T=20, phi=1, rtol=1e-8)
+
+    tracer = None
+    if trace:
+        from repro.obs import Tracer
+        tracer = Tracer("bench_serve")
+        tracer.meta.update(bench="serve", nx=nx, requests=n_req,
+                           widths=widths)
+
+    rows = []
+    for B in widths:
+        traced = trace and B == widths[-1]
+        # warmup must compile the SAME chunk-runner variant the timed pass
+        # dispatches: a tracer arms the metrics ring (a static argument of
+        # the jitted runners), so the traced width warms under a throwaway
+        # tracer or the timed drain would pay the recompile
+        # B=1 runs the exact per-member bundle (the honest sequential
+        # baseline — fused einsums only pay off once they amortize over
+        # members); B>1 runs the fused throughput mode the service defaults
+        # to. Warmup must compile the same variants.
+        fused = B > 1
+        warm = SolverService(problem, batch=B, scenario=scenario,
+                             fail_every=1, obs=traced, fused=fused, **kw)
+        for k in range(2 * B):            # one failing + one clean compile
+            warm.submit(reqs[k % n_req])
+        warm.run()
+        svc = SolverService(problem, batch=B, scenario=scenario,
+                            fail_every=2, obs=tracer if traced else None,
+                            fused=fused, **kw)
+        for k in range(n_req):
+            svc.submit(reqs[k])
+        svc.run()
+        st = svc.stats()
+        st["batch"] = B
+        rows.append(st)
+        us_per_req = st["solve_wall_s"] / st["requests"] * 1e6
+        print(f"serve_B{B},{us_per_req:.0f},"
+              f"rps={st['throughput_rps']:.2f};"
+              f"p50_ms={st['latency_p50_ms']:.0f};"
+              f"p99_ms={st['latency_p99_ms']:.0f};"
+              f"converged={st['all_converged']}")
+
+    thr = {r["batch"]: r["throughput_rps"] for r in rows}
+    wide = [b for b in thr if b >= 8]
+    speedup = max(thr[b] for b in wide) / thr[1] if wide else float("nan")
+    cols = ["batch", "requests", "microbatches", "mean_fill",
+            "solve_wall_s", "throughput_rps", "latency_p50_ms",
+            "latency_p99_ms", "latency_mean_ms", "queue_wait_p50_ms",
+            "iters_total", "all_converged"]
+    with open("artifacts/bench/serve.csv", "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[c]) for c in cols) + "\n")
+    with open("artifacts/bench/BENCH_serve.json", "w") as f:
+        json.dump(dict(
+            bench="serve", problem="poisson2d", nx=nx, n_nodes=8,
+            requests=n_req, fail_every=2, scenario_iter=25,
+            rows=rows,
+            speedup_b8_vs_b1=speedup,
+            criteria=dict(metric="aggregate throughput at B>=8 vs B=1 "
+                                 "sequential", threshold=2.0,
+                          value=speedup, passed=bool(speedup > 2.0)),
+        ), f, indent=1)
+    print(f"# wrote artifacts/bench/serve.csv + BENCH_serve.json "
+          f"(B>=8 vs B=1 speedup {speedup:.2f}x)")
+    if tracer is not None:
+        from repro.obs import metrics_snapshot, write_chrome_trace, \
+            write_jsonl
+        os.makedirs("artifacts/obs", exist_ok=True)
+        path = write_chrome_trace(tracer, "artifacts/obs/serve_trace.json")
+        jsonl_path = "artifacts/obs/serve_events.jsonl"
+        if os.path.exists(jsonl_path):    # write_jsonl appends by design
+            os.remove(jsonl_path)
+        write_jsonl(tracer, jsonl_path)
+        with open("artifacts/obs/serve_metrics.txt", "w") as f:
+            f.write(metrics_snapshot(tracer))
+        print(f"# wrote {path} + serve_events.jsonl + serve_metrics.txt")
+
+
 ALL = {
     "table2": lambda full: bench_paper_table("table2", full),
     "table3": lambda full: bench_paper_table("table3", full),
@@ -741,6 +857,7 @@ ALL = {
     "failures": bench_failures,
     "ft": lambda full: bench_ft(),          # --trace routed in main()
     "roofline": lambda full: bench_roofline(),
+    "serve": bench_serve,                   # --trace routed in main()
 }
 
 # the --only list in the module docstring is derived from ALL so it cannot
@@ -766,9 +883,9 @@ def main() -> None:
                          "writes failures_tiers.csv and the tiers section "
                          "of BENCH_failures.json")
     ap.add_argument("--trace", action="store_true",
-                    help="failures/ft sweeps: thread an obs.Tracer through "
-                         "the solves and export Chrome-trace + JSONL + "
-                         "metrics snapshot under artifacts/obs/")
+                    help="failures/ft/serve sweeps: thread an obs.Tracer "
+                         "through the solves and export Chrome-trace + "
+                         "JSONL + metrics snapshot under artifacts/obs/")
     args = ap.parse_args()
     if args.sharded:
         # must precede the first jax import (bench functions import lazily)
@@ -784,6 +901,8 @@ def main() -> None:
                       trace=args.trace)
         elif name == "ft":
             bench_ft(trace=args.trace)
+        elif name == "serve":
+            bench_serve(args.full, trace=args.trace)
         else:
             ALL[name](args.full)
 

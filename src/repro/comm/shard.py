@@ -69,7 +69,7 @@ def place_problem(problem: Problem, mesh: Mesh) -> Problem:
         diag_blocks=jax.device_put(problem.diag_blocks, row_sh))
 
 
-def sharded_matvec(a: BlockEll, mesh: Mesh):
+def sharded_matvec(a: BlockEll, mesh: Mesh, batch: int = 0):
     """General-sparsity distributed SpMV under ``shard_map``: all-gather x
     (the halo exchange), then each device runs the *sequential-k* Block-ELL
     product over its own row slab.
@@ -81,8 +81,25 @@ def sharded_matvec(a: BlockEll, mesh: Mesh):
     previous implementation used re-associated the k×bn reduction
     differently under SPMD partitioning). ``mesh_mirror_ops`` relies on
     this for the single-device reference trajectory.
+
+    ``batch`` > 0: the input is (B, M) with the row axis sharded
+    (P(None, "nodes")); ONE all-gather moves every member's halo and each
+    device runs the per-member-unrolled sequential product over its slab —
+    per member bit-identical to the unbatched sharded product.
     """
     from repro.kernels.spmv.ref import spmv_seq_ref
+
+    if batch:
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P("nodes"), P("nodes"), P(None, "nodes")),
+            out_specs=P(None, "nodes"), check_rep=False)
+        def mv_b(data, idx, x_local):
+            xg = jax.lax.all_gather(x_local, "nodes", axis=1, tiled=True)
+            return jnp.stack([spmv_seq_ref(data, idx, xg[i])
+                              for i in range(batch)])
+
+        return lambda x: mv_b(a.data, a.idx, x)
 
     @functools.partial(
         shard_map, mesh=mesh,
@@ -113,13 +130,28 @@ def _slab_dot(u, v, lane: int):
     return jnp.sum(jax.lax.optimization_barrier(p))
 
 
-def sharded_dot(mesh: Mesh, m: int, lane: int = 8):
+def sharded_dot(mesh: Mesh, m: int, lane: int = 8, batch: int = 0):
     """uᵀv for node-sharded vectors: each device reduces its own slab with
     the pinned structure of ``_slab_dot``, then ``psum`` accumulates the
     per-node partials around the ring (sequential order — ``mesh_dot`` is
-    the bit-identical single-device form)."""
+    the bit-identical single-device form).
+
+    ``batch`` > 0 takes (B, M) inputs and returns the (B,) replicated dot
+    vector: per-member pinned slab reductions (the exact unbatched
+    subgraph, unrolled) stacked into one psum."""
     n = mesh.shape["nodes"]
     lane = _dot_lane(m, n, lane)
+
+    if batch:
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=(P(None, "nodes"), P(None, "nodes")),
+                           out_specs=P(), check_rep=False)
+        def dot_b(u, v):
+            part = jnp.stack([_slab_dot(u[i], v[i], lane)
+                              for i in range(batch)])
+            return jax.lax.psum(part, "nodes")
+
+        return dot_b
 
     @functools.partial(shard_map, mesh=mesh,
                        in_specs=(P("nodes"), P("nodes")), out_specs=P(),
@@ -259,23 +291,27 @@ def _sharded_chebyshev_precond(problem: Problem, mesh: Mesh):
 def _ops_from_parts(backend, mv, precond, dot, variant, constrain):
     """Assemble the (sharded | mesh-mirror) SolverOps bundle from its parts —
     one definition of the update/dot structure, so the two runtimes cannot
-    drift apart numerically."""
+    drift apart numerically. Batch-polymorphic: with (B, M) vectors the
+    scalars arrive as (B,) and broadcast over the trailing row axis
+    (``_expand`` is the identity on the unbatched path)."""
     from repro.core.ops import SolverOps
+    from repro.core.pcg import _expand
 
     def matvec_dot(p):
         q = mv(p)
         return q, dot(p, q)
 
     def update(alpha, x, r, p, q):
-        x_new = constrain(x + alpha * p)
-        r_new = constrain(r - alpha * q)
+        a = _expand(alpha, x)
+        x_new = constrain(x + a * p)
+        r_new = constrain(r - a * q)
         z_new = constrain(precond(r_new))
         return x_new, r_new, z_new, dot(r_new, z_new)
 
     return SolverOps(backend, mv, matvec_dot, precond, update, variant, dot)
 
 
-def sharded_solver_ops(problem: Problem, mesh: Mesh):
+def sharded_solver_ops(problem: Problem, mesh: Mesh, batch: int = 0):
     """SolverOps bundle for the distributed runtime.
 
     The same ESRP/IMCR core from ``repro.core`` runs through this bundle
@@ -296,40 +332,59 @@ def sharded_solver_ops(problem: Problem, mesh: Mesh):
     compare iteration counts against the global-sweep reference with
     ``attach_local_delta``. ``mesh_mirror_ops`` builds the single-device
     bundle this one is bit-identical to in f64.
+
+    ``batch`` > 0 builds the batched-axis bundle: all vectors are (B, M)
+    with the row axis sharded (P(None, "nodes")), the SpMV gathers every
+    member's halo in one collective, the dots reduce to a replicated (B,)
+    vector, and the preconditioner applies per member (block-Jacobi only —
+    the node-local sweeps and Chebyshev recurrence pend).
     """
     cache = getattr(problem, "_sharded_ops_cache", None)
-    if cache is not None and mesh in cache:
-        return cache[mesh]
+    # unbatched entries keep the bare-mesh key (pre-batch callers index
+    # the cache by mesh); batched bundles get their own keys beside them
+    key = mesh if not batch else (mesh, batch)
+    if cache is not None and key in cache:
+        return cache[key]
     n = mesh.shape["nodes"]
-    vec = NamedSharding(mesh, P("nodes"))
-    mv = sharded_matvec(problem.a, mesh)
     variant = ""
     name = problem.precond_name
-    if name == "jacobi":
-        precond = problem.apply_precond
-    elif name == "chebyshev":
-        precond, variant = _sharded_chebyshev_precond(problem, mesh)
-    elif name in ("ssor", "ic0"):
-        precond, variant = _sharded_sweep_precond(problem, mesh)
+    if batch:
+        if name != "jacobi":
+            raise NotImplementedError(
+                f"batched sharded runtime supports the block-Jacobi "
+                f"preconditioner only (got {name!r})")
+        vec = NamedSharding(mesh, P(None, "nodes"))
+        mv = sharded_matvec(problem.a, mesh, batch=batch)
+        precond = lambda r: jnp.stack([problem.apply_precond(r[i])
+                                       for i in range(batch)])
+        dot = sharded_dot(mesh, problem.m, problem.part.bn, batch=batch)
     else:
-        raise NotImplementedError(
-            f"sharded runtime has no distributed apply for "
-            f"preconditioner {name!r}")
+        vec = NamedSharding(mesh, P("nodes"))
+        mv = sharded_matvec(problem.a, mesh)
+        if name == "jacobi":
+            precond = problem.apply_precond
+        elif name == "chebyshev":
+            precond, variant = _sharded_chebyshev_precond(problem, mesh)
+        elif name in ("ssor", "ic0"):
+            precond, variant = _sharded_sweep_precond(problem, mesh)
+        else:
+            raise NotImplementedError(
+                f"sharded runtime has no distributed apply for "
+                f"preconditioner {name!r}")
+        dot = sharded_dot(mesh, problem.m, problem.part.bn)
     constrain = lambda v: jax.lax.with_sharding_constraint(v, vec)
-    ops = _ops_from_parts("sharded", mv, precond,
-                          sharded_dot(mesh, problem.m, problem.part.bn),
-                          variant, constrain)
+    ops = _ops_from_parts("sharded", mv, precond, dot, variant, constrain)
     # re-fetch: building the bundle may have *cleared* the cache attribute
     # (twin adoption drops every closure cache, this one included)
     cache = getattr(problem, "_sharded_ops_cache", None)
     if cache is None:
         cache = {}
         problem._sharded_ops_cache = cache
-    cache[mesh] = ops
+    cache[key] = ops
     return ops
 
 
-def mesh_mirror_ops(problem: Problem, n_nodes: int):
+def mesh_mirror_ops(problem: Problem, n_nodes: int, batch: int = 0):
     """Single-device SolverOps with the *mesh's* reduction structure: the
     sequential-k SpMV, per-node partial dots summed over the node axis, and
     the same preconditioner variant the sharded runtime applies (adopting
@@ -340,12 +395,17 @@ def mesh_mirror_ops(problem: Problem, n_nodes: int):
     jnp-backend's kernel-mirrored reduction order. Use it as the reference
     for sharded parity/scenario tests; against the plain jnp backend only
     iteration-count equality holds (flat vs per-node dot association).
+
+    ``batch`` > 0 mirrors the batched sharded bundle: every op unrolls the
+    unbatched mesh-structured subgraph per member, so the batched sharded
+    trajectory rejoins this reference bit-identically per member.
     """
     cache = getattr(problem, "_mesh_mirror_cache", None)
     if cache is None:
         cache = {}
         problem._mesh_mirror_cache = cache
-    if n_nodes not in cache:
+    key = (n_nodes, batch)
+    if key not in cache:
         from repro.kernels.spmv.ref import spmv_seq_ref
 
         if n_nodes != problem.part.n_nodes:
@@ -356,6 +416,21 @@ def mesh_mirror_ops(problem: Problem, n_nodes: int):
         matvec = lambda x: spmv_seq_ref(a.data, a.idx, x)
         variant = ""
         name = problem.precond_name
+        if batch:
+            if name != "jacobi":
+                raise NotImplementedError(
+                    f"batched mesh mirror supports the block-Jacobi "
+                    f"preconditioner only (got {name!r})")
+            mv1, dot1 = matvec, mesh_dot(n_nodes, problem.m, problem.part.bn)
+            cache[key] = _ops_from_parts(
+                "mesh-mirror",
+                lambda x: jnp.stack([mv1(x[i]) for i in range(batch)]),
+                lambda r: jnp.stack([problem.apply_precond(r[i])
+                                     for i in range(batch)]),
+                lambda u, v: jnp.stack([dot1(u[i], v[i])
+                                        for i in range(batch)]),
+                "mesh-mirror", lambda v: v)
+            return cache[key]
         if name == "jacobi":
             precond = problem.apply_precond
         elif name == "chebyshev":
@@ -374,11 +449,11 @@ def mesh_mirror_ops(problem: Problem, n_nodes: int):
             problem._mesh_mirror_cache = cache    # adoption dropped the attr
         else:
             raise NotImplementedError(name)
-        cache[n_nodes] = _ops_from_parts(
+        cache[key] = _ops_from_parts(
             "mesh-mirror", matvec, precond,
             mesh_dot(n_nodes, problem.m, problem.part.bn),
             f"mesh-mirror {variant}".strip(), lambda v: v)
-    return cache[n_nodes]
+    return cache[key]
 
 
 def attach_local_delta(report, reference) -> None:
@@ -528,7 +603,7 @@ def aspmv_push(plan, part, mesh: Mesh):
     return lambda x: [f(x) for f in fns]
 
 
-def redundancy_queue(plan, part, mesh: Mesh):
+def redundancy_queue(plan, part, mesh: Mesh, batch: int = 0):
     """Device-resident ASpMV redundancy queue entry (paper §2.2.1).
 
     One push physically places, on every node d, a copy of each column tile
@@ -545,6 +620,12 @@ def redundancy_queue(plan, part, mesh: Mesh):
       push      x -> (n_nodes, width, bn): node d's row holds the tile
                 values it received/retained this push — its physical share
                 of the redundancy queue, sharded over the "nodes" axis.
+
+    ``batch`` > 0 pushes all B members' directions in the same collectives:
+    x is (B, M) (row axis sharded), the payload of each ppermute is
+    (B, width_k, bn), and the entry comes back (B, n_nodes, width, bn) with
+    the node axis sharded — per member identical to the unbatched entry
+    (every op is data movement; nothing reduces across members).
     """
     from functools import partial
 
@@ -603,6 +684,39 @@ def redundancy_queue(plan, part, mesh: Mesh):
     statics = ([put(i) for i in send_idx_k] + [put(r) for r in recv_slot_k]
                + [put(nat_idx), put(nat_slot)])
     phi = plan.phi
+
+    if batch:
+        out_sh = NamedSharding(mesh, P(None, "nodes"))
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P(None, "nodes"),) + (P("nodes"),) * len(statics),
+                 out_specs=P(None, "nodes"), check_rep=False)
+        def push_b(x_local, *stat):
+            send = stat[:phi]
+            rslot = stat[phi:2 * phi]
+            nidx, nslot = stat[2 * phi], stat[2 * phi + 1]
+            xt = x_local.reshape(batch, cpt, bn)
+            me = jax.lax.axis_index("nodes")
+            buf = jnp.zeros((batch, width + 1, bn), x_local.dtype)
+            for k in range(phi):
+                sidx = send[k][0]
+                local = jnp.clip(sidx - me * cpt, 0, cpt - 1)
+                payload = jnp.where((sidx >= 0)[None, :, None],
+                                    xt[:, local], 0.0)
+                recv = jax.lax.ppermute(payload, "nodes", perms[k])
+                slot = rslot[k][0]
+                buf = buf.at[:, jnp.where(slot >= 0, slot, width)].set(recv)
+            if wn:
+                xg = jax.lax.all_gather(xt, "nodes", axis=1, tiled=True)
+                ni, ns = nidx[0], nslot[0]
+                vals = xg[:, jnp.clip(ni, 0, ct - 1)]
+                buf = buf.at[:, jnp.where(ns >= 0, ns, width)].set(vals)
+            return buf[:, None, :width]
+
+        fn_b = lambda x: jax.lax.with_sharding_constraint(
+            push_b(x, *statics), out_sh)
+        return hold_idx, fn_b
+
     out_sh = NamedSharding(mesh, P("nodes"))
 
     @partial(shard_map, mesh=mesh,
@@ -675,7 +789,7 @@ class ShardedFailureRuntime:
     ``EventReport.precond_reload_bytes``.
     """
 
-    def __init__(self, problem: Problem, mesh: Mesh):
+    def __init__(self, problem: Problem, mesh: Mesh, batch: int = 0):
         n = mesh.shape["nodes"]
         if n != problem.part.n_nodes:
             raise ValueError(
@@ -685,6 +799,9 @@ class ShardedFailureRuntime:
         self.mesh = mesh
         self.n = n
         self.part = problem.part
+        self.batch = batch  # > 0: the runtime serves the batched (B, M)
+        #                     solve — queue entries and injections carry the
+        #                     member axis; one event strikes all B members
         self.plan = None
         self.queue_push = None
         self._hold_idx = None
@@ -693,11 +810,18 @@ class ShardedFailureRuntime:
         #                     closure must keep a stable identity across
         #                     solves (the jitted chunk runners key their
         #                     compile cache on it)
-        self._zero_rows = _node_axis_zeroer(mesh, 0)   # (M,) vectors
-        self._zero_ax1 = _node_axis_zeroer(mesh, 1)    # (3, M) and (3, n, …)
+        self._zeroers = {}  # sharded-node-axis index -> shard_map zeroer
+        #                     (vectors/queues of both the unbatched and
+        #                     batched layouts resolve their axis by ndim)
         self._wiped: dict[int, int] = {}   # device -> newest q tag when its
         #                                    held copies were zeroed
         self.last_sources: tuple[int, ...] = ()
+
+    def _zero(self, v, dead, axis: int):
+        z = self._zeroers.get(axis)
+        if z is None:
+            z = self._zeroers[axis] = _node_axis_zeroer(self.mesh, axis)
+        return z(v, dead)
 
     # -- driver hooks ------------------------------------------------------ #
     def bind_plan(self, plan) -> None:
@@ -709,7 +833,8 @@ class ShardedFailureRuntime:
         self._wiped.clear()
         entry = self._queues.get(plan.phi)
         if entry is None:
-            hold_idx, push = redundancy_queue(plan, self.part, self.mesh)
+            hold_idx, push = redundancy_queue(plan, self.part, self.mesh,
+                                              batch=self.batch)
             slot_of = [{int(t): j for j, t in enumerate(row) if t >= 0}
                        for row in hold_idx]
             entry = self._queues[plan.phi] = (hold_idx, push, slot_of)
@@ -717,14 +842,22 @@ class ShardedFailureRuntime:
 
     def init_queue(self, st, reset: bool = False):
         """Attach the empty (3, n, width, bn) device-resident queue to a
-        fresh ESRPState (placed on the node axis). reset=True also forgets
-        wiped-copy tracking (a restart rebuilds everything from scratch)."""
+        fresh ESRPState (placed on the node axis; (3, B, n, width, bn) on
+        the batched runtime). reset=True also forgets wiped-copy tracking
+        (a restart rebuilds everything from scratch)."""
         if reset:
             self._wiped.clear()
         w = self._hold_idx.shape[1]
-        rq = jax.device_put(
-            jnp.zeros((3, self.n, w, self.part.bn), self.problem.b.dtype),
-            NamedSharding(self.mesh, P(None, "nodes")))
+        if self.batch:
+            rq = jax.device_put(
+                jnp.zeros((3, self.batch, self.n, w, self.part.bn),
+                          self.problem.b.dtype),
+                NamedSharding(self.mesh, P(None, None, "nodes")))
+        else:
+            rq = jax.device_put(
+                jnp.zeros((3, self.n, w, self.part.bn),
+                          self.problem.b.dtype),
+                NamedSharding(self.mesh, P(None, "nodes")))
         st = st._replace(rq=rq)
         if not isinstance(st.q_sums, tuple):
             # per-holder checksums of the physical copies ride along with the
@@ -740,9 +873,13 @@ class ShardedFailureRuntime:
         return jnp.asarray(dead)
 
     def lose_pcg(self, pcg, failed):
-        """Zero the failed devices' shards of the live vectors (x, r, z, p)."""
+        """Zero the failed devices' shards of the live vectors (x, r, z, p).
+        The sharded node axis is resolved by rank — (M,) and batched (B, M)
+        vectors both shard their last axis — so one injection covers both
+        layouts (a fail-stop event wipes a device's rows for all B members
+        at once)."""
         dead = self._dead(failed)
-        l = lambda v: self._zero_rows(v, dead)
+        l = lambda v: self._zero(v, dead, v.ndim - 1)
         return pcg._replace(x=l(pcg.x), r=l(pcg.r), z=l(pcg.z), p=l(pcg.p))
 
     def lose_esrp(self, st, failed):
@@ -750,13 +887,15 @@ class ShardedFailureRuntime:
         the failed devices' own queue rows, and the redundancy copies they
         held for others (their ``rq`` rows)."""
         dead = self._dead(failed)
-        l = lambda v: self._zero_rows(v, dead)
+        l = lambda v: self._zero(v, dead, v.ndim - 1)
         st = st._replace(
             pcg=self.lose_pcg(st.pcg, failed),
             x_s=l(st.x_s), r_s=l(st.r_s), z_s=l(st.z_s), p_s=l(st.p_s),
-            q=self._zero_ax1(st.q, dead))
+            q=self._zero(st.q, dead, st.q.ndim - 1))
         if not isinstance(st.rq, tuple):
-            st = st._replace(rq=self._zero_ax1(st.rq, dead))
+            # (3, n, w, bn) or batched (3, B, n, w, bn): holder axis is
+            # always three from the end
+            st = st._replace(rq=self._zero(st.rq, dead, st.rq.ndim - 3))
         # keep checksums consistent with the zeroed copies (sum of zeros = 0)
         # so the wipe itself never reads as queue corruption
         col = jnp.asarray(self._dead(failed))[None, :]
@@ -772,7 +911,7 @@ class ShardedFailureRuntime:
         nothing was physically lost, the stored redundancy is still intact
         (and checksum-verified at read time)."""
         dead = self._dead(failed)
-        l = lambda v: self._zero_rows(v, dead)
+        l = lambda v: self._zero(v, dead, v.ndim - 1)
         return st._replace(pcg=self.lose_pcg(st.pcg, failed),
                            x_s=l(st.x_s), r_s=l(st.r_s), z_s=l(st.z_s),
                            p_s=l(st.p_s))
@@ -830,6 +969,12 @@ class ShardedFailureRuntime:
         slots_j = jnp.asarray(slots)
 
         def fill(slot):
+            if self.batch:
+                # (3, B, n, w, bn): gather the same (holder, slot) pairs for
+                # every member — one Alg. 2 assembly serves the whole batch
+                vals = st.rq[slot][:, src_j, slots_j]    # (B, n_tiles, bn)
+                return st.q[slot].at[:, f_rows].set(
+                    vals.reshape(self.batch, -1))
             vals = st.rq[slot][src_j, slots_j]           # (n_tiles, bn)
             return st.q[slot].at[f_rows].set(vals.reshape(-1))
 

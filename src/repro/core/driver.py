@@ -40,15 +40,17 @@ from repro.core import esr, esrp, imcr, sdc
 from repro.core.aspmv import RedundancyPlan, build_plan, shrink_plan
 from repro.core.failures import (FailureEvent, SDCEvent, failed_row_mask,
                                  normalize_scenario, zero_failed)
-from repro.core.ops import SolverOps, make_closure_ops
-from repro.core.pcg import PCGState, residual_drift
+from repro.core.ops import SolverOps, batch_ops, make_closure_ops
+from repro.core.pcg import PCGState, _vec_norm, freeze_pcg, residual_drift
 from repro.core.tiers import resolve_tier
 from repro.obs.trace import Tracer, jsonable
 from repro.sparse.matrices import Problem
 
 # version stamp of the report JSON layout (EventReport/SolveReport.to_json);
-# bump on any field rename/removal so downstream BENCH consumers can branch
-REPORT_SCHEMA_VERSION = 1
+# bump on any field rename/removal so downstream BENCH consumers can branch.
+# v2: SolveReport gained batch_index/batch_size (batched solves emit one
+# report per member).
+REPORT_SCHEMA_VERSION = 2
 
 
 def _tspan(tr: Optional[Tracer], name: str, cat: str = "solver", **args):
@@ -139,6 +141,9 @@ class SolveReport:
     sdc_check_every: int = 0     # the cadence they ran at (0 = SDC off)
     final_n_nodes: int = 0       # node count at convergence (shrinks under
     #                              elastic recovery)
+    batch_index: int = 0         # this member's row in the batched solve
+    batch_size: int = 1          # members the dispatch advanced together
+    #                              (1 = plain unbatched solve)
     x: Optional[object] = dataclasses.field(default=None, repr=False)
     #                              final iterate (device array) — lets parity
     #                              tests assert bit-identical rejoin; rel/
@@ -208,16 +213,63 @@ def solve_resilient(
     elastic: bool = False,             # no replacement nodes: after each
     #                                    fail-stop event, re-partition onto
     #                                    the shrunk node count and continue
+    batch_fused: bool = False,         # batched throughput mode: fused-
+    #                                    batched einsum ops (one op per
+    #                                    iteration for all B members) in
+    #                                    place of the per-member-unrolled
+    #                                    exact bundle. Per-member results
+    #                                    deviate from the B=1 run at ~ulp
+    #                                    (convergence unaffected); the
+    #                                    serving path opts in for >B x
+    #                                    dispatch amortization
+    rhs=None,                          # right-hand side override. A (B, M)
+    #                                    array arms the BATCHED solve: all B
+    #                                    systems (same A/P, different b)
+    #                                    advance per dispatch with
+    #                                    per-member convergence freeze, one
+    #                                    FailureEvent strikes every member,
+    #                                    one Alg. 2 pass rebuilds them all,
+    #                                    and the return is a list of B
+    #                                    per-member SolveReports. A (M,)
+    #                                    array just replaces problem.b.
     obs=None,                          # observability: an obs.Tracer to
     #                                    record into, or True for a fresh
     #                                    one (returned as report.trace).
     #                                    Default off: the obs=off hot path
     #                                    is bit-identical and compiles to
     #                                    the identical jaxpr (tested)
-) -> SolveReport:
+) -> "SolveReport | list[SolveReport]":
     part = problem.part
     pending = normalize_scenario(scenario, fail_at, failed_nodes,
                                  part.n_nodes)
+    rhs_arr = None if rhs is None else jnp.asarray(rhs, problem.b.dtype)
+    batched = rhs_arr is not None and rhs_arr.ndim == 2
+    nbatch = int(rhs_arr.shape[0]) if batched else 0
+    if rhs_arr is not None and rhs_arr.shape[-1] != part.m:
+        raise ValueError(
+            f"rhs row length {rhs_arr.shape[-1]} != problem size {part.m}")
+    if batched:
+        if scenario is not None and any(isinstance(e, SDCEvent)
+                                        for e in pending) or \
+                sdc_policy is not None:
+            raise ValueError(
+                "batched solves do not support SDC detection/repair — the "
+                "invariant checks and queue checksums are unbatched")
+        if elastic:
+            raise ValueError(
+                "batched solves do not support elastic shrunk-mesh recovery")
+        if rr_every:
+            # numeric_step's replacement branch is batch-polymorphic only
+            # through ops.dot; the batched bundles always provide one, but
+            # the trajectory-identity tests do not cover rr — keep it off
+            raise ValueError("batched solves do not support rr_every yet")
+    if failure_runtime is not None \
+            and getattr(failure_runtime, "batch", 0) != nbatch:
+        raise ValueError(
+            f"failure_runtime was built for batch="
+            f"{getattr(failure_runtime, 'batch', 0)} but this solve has "
+            f"batch={nbatch} — construct ShardedFailureRuntime(problem, "
+            f"mesh, batch=B) to match the (B, M) rhs")
     sdc_events = [e for e in pending if isinstance(e, SDCEvent)]
     if sdc_events or sdc_policy is not None:
         if strategy not in ("esrp", "none"):
@@ -266,21 +318,34 @@ def solve_resilient(
             if cache is None:
                 cache = {}
                 problem._closure_ops_cache = cache
-            key = (matvec, problem.apply_precond)
+            key = (matvec, problem.apply_precond, nbatch)
             if key not in cache:
-                cache[key] = make_closure_ops(*key)
+                base = make_closure_ops(matvec, problem.apply_precond)
+                cache[key] = batch_ops(base, nbatch) if batched else base
             ops = cache[key]
         else:
-            ops = problem.solver_ops(backend)
+            ops = problem.solver_ops(backend, batch=nbatch,
+                                     fused=batched and batch_fused)
     matvec = ops.matvec
     precond = ops.precond
-    b = problem.b
+    b = rhs_arr if rhs_arr is not None else problem.b
     bnorm = float(jnp.linalg.norm(b))
-    thresh_dev = jnp.asarray(rtol * bnorm, b.dtype)
-    # host-side scans must compare against the *same* value the chunk
-    # runner's freeze uses, or (in f32) a norm between the two would freeze
-    # the device state without the host ever declaring convergence
-    thresh = float(thresh_dev)
+    if batched:
+        # per-member threshold. Zero-RHS members (micro-batch padding) get
+        # +inf: their rnorm == 0 row freezes at iteration 0 instead of
+        # dividing by zero, and their report carries rel = 0 / converged
+        bnorm_v = _vec_norm(b)
+        thresh_dev = jnp.where(bnorm_v > 0, rtol * bnorm_v,
+                               jnp.inf).astype(b.dtype)
+        thresh = np.asarray(thresh_dev)        # (B,) host copy, same values
+        conv_iter = np.full(nbatch, -1, np.int64)   # per-member first
+        #                                  crossing (set-once, absolute count)
+    else:
+        thresh_dev = jnp.asarray(rtol * bnorm, b.dtype)
+        # host-side scans must compare against the *same* value the chunk
+        # runner's freeze uses, or (in f32) a norm between the two would
+        # freeze the device state without the host ever declaring convergence
+        thresh = float(thresh_dev)
 
     tr: Optional[Tracer] = obs if isinstance(obs, Tracer) else (
         Tracer("solve_resilient") if obs else None)
@@ -379,7 +444,21 @@ def solve_resilient(
         norms_d, aux_d = record if mtr else (record, None)
         with _tspan(tr, "chunk_settle", base=base, n=n_disp):
             norms = np.asarray(norms_d)
-            hit = _find_convergence(norms, thresh)
+            if batched:
+                # norms is (n_disp, B): the chunk is done when EVERY member
+                # is below its own threshold; individual crossings are
+                # recorded set-once (the device froze that member, so its
+                # later rows just repeat the frozen norm)
+                below = norms < thresh[None, :]
+                allb = np.nonzero(below.all(axis=1))[0]
+                hit = int(allb[0]) if allb.size else -1
+                for k in range(nbatch):
+                    if conv_iter[k] < 0:
+                        idx = np.nonzero(below[:, k])[0]
+                        if idx.size:
+                            conv_iter[k] = base + int(idx[0]) + 1
+            else:
+                hit = _find_convergence(norms, thresh)
             # iterations past a convergence hit ran frozen — no pushes
             executed = hit + 1 if hit >= 0 else n_disp
             push_ranges.append((base, base + executed))
@@ -388,11 +467,23 @@ def solve_resilient(
                 converged = True
             if tr is not None and executed > 0:
                 aux = np.asarray(aux_d)[:executed]
-                tr.record_iters(np.arange(base, base + executed),
-                                rnorm=norms[:executed], rz=aux[:, 0],
-                                push=aux[:, 1], star=aux[:, 2],
-                                orth=aux[:, 3])
-                n_push = int(round(float(aux[:, 1].sum())))
+                if batched:
+                    # per-member rows collapse to the tracks the exporters
+                    # render: the max-norm (the convergence gate), the
+                    # shared storage flags (identical across members), and
+                    # the worst-member rz / orthogonality residual
+                    tr.record_iters(np.arange(base, base + executed),
+                                    rnorm=norms[:executed].max(axis=1),
+                                    rz=aux[:, 0].max(axis=1),
+                                    push=aux[:, 1, 0], star=aux[:, 2, 0],
+                                    orth=aux[:, 3].max(axis=1))
+                    n_push = int(round(float(aux[:, 1, 0].sum())))
+                else:
+                    tr.record_iters(np.arange(base, base + executed),
+                                    rnorm=norms[:executed], rz=aux[:, 0],
+                                    push=aux[:, 1], star=aux[:, 2],
+                                    orth=aux[:, 3])
+                    n_push = int(round(float(aux[:, 1].sum())))
                 if n_push and per_push:
                     tr.add_counter("tier_push_bytes", n_push * per_push,
                                    pushes=n_push, tier=tier.name)
@@ -407,10 +498,29 @@ def solve_resilient(
             # the jnp backend fuses exactly like inside run_chunk — keeps the
             # cross-backend trajectory bit-identity through recovery.
             with _tspan(tr, "resume_step", iter=total_iters):
-                pcg = _resume_step(st.pcg, ops, b, resume_rr, gated)
+                pcg_old = st.pcg
+                pcg = _resume_step(pcg_old, ops, b, resume_rr, gated)
+                if batched:
+                    # members that were already converged (shielded from the
+                    # event by the post-recovery member select) must not be
+                    # stepped past their frozen state
+                    done = _vec_norm(pcg_old.r) < thresh_dev
+                    pcg = freeze_pcg(pcg_old, pcg, done)
                 st = st._replace(pcg=pcg)
                 total_iters = int(pcg.j)
                 resume_numeric_only = False
+                if batched:
+                    rnorm_v = np.asarray(_vec_norm(pcg.r))
+                    for k in range(nbatch):
+                        if conv_iter[k] < 0 and rnorm_v[k] < thresh[k]:
+                            conv_iter[k] = total_iters
+                    rnorm = float(rnorm_v.max())
+                    if tr is not None:
+                        tr.record_iters([total_iters - 1], rnorm=[rnorm])
+                    if bool((rnorm_v < thresh).all()):
+                        converged = True
+                        break
+                    continue
                 rnorm = float(jnp.linalg.norm(pcg.r))
                 if tr is not None:
                     # the re-run iteration's metrics row (the chunk ring
@@ -505,6 +615,13 @@ def solve_resilient(
                 ev_src: tuple[int, ...] = ()
                 ev_fetch = 0
                 ev_fetch_s = 0.0
+                # already-converged members are shielded from the event:
+                # their B=1 reference run would have ended before it fired,
+                # so injection + rollback must not disturb their frozen
+                # state — the per-member select below restores it
+                st_pre = st if batched else None
+                done_pre = (_vec_norm(st.pcg.r) < thresh_dev) if batched \
+                    else None
                 with _tspan(tr, "event:fail-stop", cat="event",
                             iter=ev.iter, nodes=list(ev.nodes),
                             strategy=strategy) as ev_sp:
@@ -523,13 +640,18 @@ def solve_resilient(
                          ev_reload, ev_src) = _esrp_failure(
                             problem, plan, st, failed, T, ops, pff_precond,
                             fruntime=failure_runtime, push=push,
-                            n_slabs=qsum_slabs, tracer=tr)
+                            n_slabs=qsum_slabs, b=b, tracer=tr)
                         inner_rel = ev_inner
                         push_ranges.append((ev.iter, ev.iter + 1))  # prelude push
                         if target >= 0:
                             ev_fetch = tier.fetch_bytes(
-                                len(failed) * part.rows_per_node, itemsize)
+                                max(1, nbatch) * len(failed) *
+                                part.rows_per_node, itemsize)
                             ev_fetch_s = tier.read_s(ev_fetch)
+                    if batched:
+                        msel = (imcr.member_select if strategy == "imcr"
+                                else esrp.member_select)
+                        st = msel(st_pre, st, done_pre)
                     recovery_s += rec_t
                     wasted += ev_wasted
                     er = EventReport(
@@ -681,23 +803,19 @@ def solve_resilient(
 
     pcg = st.pcg
     jax.block_until_ready(pcg.x)
-    drift = float(residual_drift(matvec, b, pcg.x, pcg.r))
-    rel = float(jnp.linalg.norm(pcg.r)) / float(jnp.linalg.norm(b))
     nat_bytes = tot_bytes = 0
     if plan is not None:
         nat_bytes, tot_bytes = plan.bytes_per_aspmv(itemsize)
     push_count = 0
     if strategy == "esrp" and plan is not None:
         push_count = _count_pushes(push_ranges, T)
-    report = SolveReport(
-        strategy=strategy, T=T, phi=phi, converged_iter=total_iters,
-        rel_residual=rel, runtime_s=runtime, recovery_s=recovery_s,
-        wasted_iters=wasted, target_iter=target, inner_rel=inner_rel,
-        drift=drift, aspmv_natural_bytes=nat_bytes,
+    common = dict(
+        strategy=strategy, T=T, phi=phi, runtime_s=runtime,
+        recovery_s=recovery_s, wasted_iters=wasted, target_iter=target,
+        inner_rel=inner_rel, aspmv_natural_bytes=nat_bytes,
         aspmv_total_bytes=tot_bytes, run_calls=run_calls,
         events=event_reports,
         precond_variant=getattr(ops, "variant", ""),
-        converged=converged,
         precond_reload_bytes=sum(e.precond_reload_bytes
                                  for e in event_reports),
         tier=tier.name, push_count=push_count,
@@ -707,11 +825,34 @@ def solve_resilient(
         fetch_s_model=sum(e.fetch_s_model for e in event_reports),
         sdc_checks=sdc_checks,
         sdc_check_every=sdc_policy.check_every if sdc_on else 0,
-        final_n_nodes=part.n_nodes,
-        x=pcg.x, trace=tr)
+        final_n_nodes=part.n_nodes, trace=tr)
+    if not batched:
+        drift = float(residual_drift(matvec, b, pcg.x, pcg.r))
+        rel = float(jnp.linalg.norm(pcg.r)) / float(jnp.linalg.norm(b))
+        report = SolveReport(converged_iter=total_iters, rel_residual=rel,
+                             drift=drift, converged=converged, x=pcg.x,
+                             **common)
+        if tr is not None:
+            tr.record("solve_report", report.to_json())
+        return report
+    # batched: one SolveReport per member. Shared run accounting (runtime,
+    # events, tier/push totals) repeats on every member — per-member fields
+    # are the convergence count, residuals, drift, and the iterate itself.
+    rel_v = np.asarray(_vec_norm(pcg.r))
+    bn_v = np.asarray(_vec_norm(b))
+    drift_v = np.asarray(residual_drift(matvec, b, pcg.x, pcg.r))
+    reports = []
+    for k in range(nbatch):
+        ok = conv_iter[k] >= 0
+        reports.append(SolveReport(
+            converged_iter=int(conv_iter[k]) if ok else total_iters,
+            rel_residual=(float(rel_v[k] / bn_v[k]) if bn_v[k] > 0 else 0.0),
+            drift=float(drift_v[k]), converged=bool(ok or converged),
+            batch_index=k, batch_size=nbatch, x=pcg.x[k], **common))
     if tr is not None:
-        tr.record("solve_report", report.to_json())
-    return report
+        for r in reports:
+            tr.record("solve_report", r.to_json())
+    return reports
 
 
 def _solver_rooflines_cached(problem: Problem, ops, b, backend: str) -> dict:
@@ -825,7 +966,8 @@ def _none_failure(st: esrp.ESRPState, matvec, precond, b, dot=None):
 def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
                   failed: list[int], T: int, solver_ops,
                   pff_precond: bool = True, fruntime=None, push=None,
-                  sdc_mode: bool = False, n_slabs: int = 0, tracer=None):
+                  sdc_mode: bool = False, n_slabs: int = 0, b=None,
+                  tracer=None):
     """Failure strikes during iteration J right after its (A)SpMV: run the
     iteration-J storage prelude (including, on the sharded runtime, the
     physical redundancy sends that were already in flight), lose the failed
@@ -854,6 +996,9 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     """
     part = problem.part
     matvec, precond = solver_ops.matvec, solver_ops.precond
+    # b: the RHS actually being solved (the batched driver passes its
+    # (B, M) rhs; None keeps problem.b — the unbatched default)
+    b_rhs = problem.b if b is None else b
     J = int(st.pcg.j)
     if not sdc_mode:
         st = jax.jit(esrp.esrp_prelude, static_argnums=(1, 2, 3))(st, T,
@@ -889,7 +1034,7 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     target, prev_slot, curr_slot = esrp.recovery_point(st, T)
     if target < 0:
         # before the first completed storage stage: restart from scratch
-        st2 = esrp.esrp_init(matvec, precond, problem.b, dot=solver_ops.dot,
+        st2 = esrp.esrp_init(matvec, precond, b_rhs, dot=solver_ops.dot,
                              n_slabs=n_slabs)
         if fruntime is not None:
             st2 = fruntime.init_queue(st2, reset=True)
@@ -917,7 +1062,8 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
     # this very check pass (the queue detector runs first), so the pair
     # reads straight from ``q`` on both runtimes.
     fetch_bytes = 2 * len(failed) * part.rows_per_node * \
-        np.dtype(problem.b.dtype).itemsize
+        np.dtype(problem.b.dtype).itemsize * \
+        (b_rhs.shape[0] if b_rhs.ndim == 2 else 1)
     with _tspan(tracer, "queue_fetch", cat="recovery",
                 slots=[int(prev_slot), int(curr_slot)],
                 bytes=int(fetch_bytes)) as qf_sp:
@@ -944,22 +1090,26 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
                     nodes=list(failed), pff_precond=pff_precond):
             ops = esr.ReconstructionOps.build(problem, failed,
                                               pff_precond=pff_precond)
+            bf_warm = (None if b is None
+                       else b_rhs[..., jnp.asarray(ops.f_rows)])
             # warm the jitted reconstruction (compile excluded from timing)
             esr.reconstruct(ops, p_prev=p_prev, p_curr=p_curr,
-                            beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv
+                            beta_prev=beta_prev, r_surv=r_surv,
+                            x_surv=x_surv, b_f=bf_warm
                             )[0].block_until_ready()
         cache[key] = ops
     ops = cache[key]
+    b_f = None if b is None else b_rhs[..., jnp.asarray(ops.f_rows)]
     t0 = time.perf_counter()
     x_f, r_f, z_f, inner_rel = esr.reconstruct(
-        ops, p_prev=p_prev, p_curr=p_curr,
-        beta_prev=beta_prev, r_surv=r_surv, x_surv=x_surv, tracer=tracer)
+        ops, p_prev=p_prev, p_curr=p_curr, beta_prev=beta_prev,
+        r_surv=r_surv, x_surv=x_surv, b_f=b_f, tracer=tracer)
     with _tspan(tracer, "scatter", cat="recovery", target_iter=target):
         f_rows = jnp.asarray(ops.f_rows)
-        x = x_surv.at[f_rows].set(x_f)
-        r = r_surv.at[f_rows].set(r_f)
-        z = z_surv.at[f_rows].set(z_f)
-        p = p_surv.at[f_rows].set(p_curr[f_rows])
+        x = x_surv.at[..., f_rows].set(x_f)
+        r = r_surv.at[..., f_rows].set(r_f)
+        z = z_surv.at[..., f_rows].set(z_f)
+        p = p_surv.at[..., f_rows].set(p_curr[..., f_rows])
         jax.block_until_ready(x)
     rec_t = time.perf_counter() - t0
 
@@ -1001,8 +1151,9 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
             fruntime.mark_wiped(failed, target)
     pff_stats = getattr(ops.p_solve, "stats", None) if ops.p_solve else None
     pff_iters = pff_stats["iters"] if pff_stats else -1
-    return (st2, J - target, target, float(inner_rel), rec_t, pff_iters,
-            reload_bytes, src_nodes)
+    # batched line-8 rel is per-member — report the worst one
+    return (st2, J - target, target, float(np.max(np.asarray(inner_rel))),
+            rec_t, pff_iters, reload_bytes, src_nodes)
 
 
 def _imcr_failure(st: imcr.IMCRState, part, failed: list[int], phi: int,

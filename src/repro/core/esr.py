@@ -49,7 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import failures
-from repro.core.pcg import run_pcg
+from repro.core.pcg import _expand, run_pcg, run_pcg_batched
 from repro.sparse.blockell import BlockEll
 from repro.sparse.matrices import Problem
 
@@ -153,7 +153,7 @@ def _span(tracer, name: str, **args):
 def reconstruct(ops: ReconstructionOps, *, p_prev: jax.Array, p_curr: jax.Array,
                 beta_prev: jax.Array, r_surv: jax.Array, x_surv: jax.Array,
                 inner_rtol: float = 1e-14, inner_max_iters: int = 20_000,
-                tracer=None):
+                b_f: jax.Array | None = None, tracer=None):
     """Run Alg. 2. Inputs are full-length vectors; only surviving (resp.
     redundant-copy) entries are read, enforced by masking. Returns the failed
     nodes' compact (x_f, r_f, z_f) plus the inner-solve relative residual.
@@ -164,19 +164,36 @@ def reconstruct(ops: ReconstructionOps, *, p_prev: jax.Array, p_curr: jax.Array,
     only meaningful with a host sync at each boundary, so the spans
     block_until_ready their segment's outputs; tracer=None skips both the
     spans and the syncs (the default async hot path is untouched).
+
+    Batch-polymorphic: (B, M) vector inputs with (B,) ``beta_prev`` run ONE
+    Alg. 2 pass over the shared f-slab for all B members — the static strip
+    operators are shared, lines 4/6/7 apply the per-member-unrolled scalar
+    subgraphs, and line 8 is a single batched inner solve with per-member
+    freeze (``run_pcg_batched``) — so each member's reconstruction is
+    bit-identical in f64 to its own B=1 pass. Batched mode requires the
+    block-Jacobi closed forms (``p_solve is None``).
+
+    ``b_f`` overrides the RHS entries baked into ``ops`` (line 7) — the
+    batched driver solves B different right-hand sides against the one
+    static strip set, so it passes ``rhs[:, f_rows]`` here.
     """
     sync = jax.block_until_ready if tracer is not None else (lambda x: x)
     mask = jnp.asarray(ops.mask)
     f_rows = jnp.asarray(ops.f_rows)
     b = ops.problem.precond_block
+    batched = x_surv.ndim == 2
+    if batched and ops.p_solve is not None:
+        raise NotImplementedError(
+            "batched reconstruction supports the block-Jacobi closed forms "
+            "only (preconditioners with off-diagonal coupling pend)")
 
     itemsize = np.dtype(r_surv.dtype).itemsize
     with _span(tracer, "alg2_line5_offdiag", n_failed_rows=int(ops.f_rows.size),
                bytes=int((ops.f_rows.size + r_surv.size) * itemsize),
                jacobi_closed_form=ops.p_solve is None):
-        p_prev_f = p_prev[f_rows]
-        p_curr_f = p_curr[f_rows]
-        z_f = p_curr_f - beta_prev * p_prev_f                   # line 4
+        p_prev_f = p_prev[..., f_rows]
+        p_curr_f = p_curr[..., f_rows]
+        z_f = p_curr_f - _expand(beta_prev, p_curr_f) * p_prev_f  # line 4
         if ops.p_solve is None:
             # block-Jacobi closed form: P_{f,I\f} == 0, so line 5 is v = z_f
             v = sync(z_f)                                       # line 5
@@ -189,8 +206,13 @@ def reconstruct(ops: ReconstructionOps, *, p_prev: jax.Array, p_curr: jax.Array,
                jacobi_closed_form=ops.p_solve is None) as sp6:
         if ops.p_solve is None:
             # block-Jacobi closed form: P_ff^{-1} = A_bb, one block matvec
-            r_f = sync(jnp.einsum("nij,nj->ni", ops.diag_f,
-                                  v.reshape(-1, b)).reshape(-1))  # line 6
+            # (per member when batched — keeps the scalar subgraph exact)
+            def pff_mv(vi):
+                return jnp.einsum("nij,nj->ni", ops.diag_f,
+                                  vi.reshape(-1, b)).reshape(-1)
+            r_f = sync(pff_mv(v) if not batched else
+                       jnp.stack([pff_mv(v[i])
+                                  for i in range(v.shape[0])]))   # line 6
         else:
             # real local P_ff solve through the preconditioner's kernels
             r_f = sync(ops.p_solve(v, inner_rtol, inner_max_iters))  # line 6
@@ -201,16 +223,22 @@ def reconstruct(ops: ReconstructionOps, *, p_prev: jax.Array, p_curr: jax.Array,
 
     with _span(tracer, "alg2_line7_w"):
         x_masked = jnp.where(mask, jnp.zeros_like(x_surv), x_surv)
-        w = sync(ops.b_f - r_f - ops.a_rows_f.matvec(x_masked))    # line 7
+        if not batched:
+            ax = ops.a_rows_f.matvec(x_masked)
+        else:
+            ax = jnp.stack([ops.a_rows_f.matvec(x_masked[i])
+                            for i in range(x_masked.shape[0])])
+        w = sync((ops.b_f if b_f is None else b_f) - r_f - ax)     # line 7
 
     with _span(tracer, "alg2_line8_aff_solve",
                inner_rtol=inner_rtol) as sp8:
-        state, rel = run_pcg(ops.a_ff.matvec, ops.precond_f, w,
-                             rtol=inner_rtol,
-                             max_iters=inner_max_iters)            # line 8
+        solve = run_pcg if not batched else run_pcg_batched
+        state, rel = solve(ops.a_ff.matvec, ops.precond_f, w,
+                           inner_rtol, inner_max_iters)            # line 8
         x_f = sync(state.x)
         if sp8 is not None:
-            sp8.args["inner_rel"] = float(rel)
+            sp8.args["inner_rel"] = (float(rel) if not batched
+                                     else float(np.max(np.asarray(rel))))
             sp8.args["inner_iters"] = int(state.j)
     return x_f, r_f, z_f, rel
 
@@ -225,5 +253,6 @@ def jsonable_stat(v):
 
 def scatter_failed(full_surv: jax.Array, compact_f: jax.Array,
                    ops: ReconstructionOps) -> jax.Array:
-    """Merge reconstructed failed entries into the surviving vector."""
-    return full_surv.at[jnp.asarray(ops.f_rows)].set(compact_f)
+    """Merge reconstructed failed entries into the surviving vector.
+    Batch-polymorphic: (B, M) + (B, |I_f|) scatters per member."""
+    return full_surv.at[..., jnp.asarray(ops.f_rows)].set(compact_f)

@@ -38,8 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ops import SolverOps
-from repro.core.pcg import (METRIC_FIELDS, PCGState, iteration_metrics,
-                            pcg_init, pcg_iterate_ops,
+from repro.core.pcg import (METRIC_FIELDS, PCGState, _vec_norm, freeze_pcg,
+                            iteration_metrics, pcg_init, pcg_iterate_ops,
                             scan_with_convergence_freeze)
 
 
@@ -86,7 +86,8 @@ def esrp_init(matvec, precond, b: jax.Array,
         q=jnp.zeros((3,) + b.shape, b.dtype),
         q_tags=jnp.full((3,), -1, jnp.int32),
         x_s=z, r_s=z, z_s=z, p_s=z,
-        beta_s=jnp.zeros((), b.dtype), rz_s=jnp.zeros((), b.dtype),
+        beta_s=jnp.zeros(b.shape[:-1], b.dtype),
+        rz_s=jnp.zeros(b.shape[:-1], b.dtype),
         star_tag=jnp.full((), -1, jnp.int32),
         q_sums=(jnp.zeros((3, n_slabs), b.dtype) if n_slabs > 0 else ()))
 
@@ -111,15 +112,16 @@ def push_queue(st: ESRPState, tag: jax.Array, push=None) -> ESRPState:
     tags = jnp.concatenate([st.q_tags[1:], tag[None]])
     st = st._replace(q=q, q_tags=tags)
     if not isinstance(st.q_sums, tuple):
-        n_slabs = st.q_sums.shape[1]
-        s = st.pcg.p.reshape(n_slabs, -1).sum(axis=1)
+        n_slabs = st.q_sums.shape[-1]
+        p = st.pcg.p
+        s = p.reshape(p.shape[:-1] + (n_slabs, -1)).sum(axis=-1)
         st = st._replace(
             q_sums=jnp.concatenate([st.q_sums[1:], s[None]], axis=0))
     if push is not None:
-        entry = push(st.pcg.p)                     # (n_nodes, width, bn)
+        entry = push(st.pcg.p)        # (n_nodes, width, bn), (B, ...) batched
         st = st._replace(rq=jnp.concatenate([st.rq[1:], entry[None]], axis=0))
         if not isinstance(st.rq_sums, tuple):
-            es = entry.sum(axis=(1, 2))
+            es = entry.sum(axis=(-2, -1))
             st = st._replace(
                 rq_sums=jnp.concatenate([st.rq_sums[1:], es[None]], axis=0))
     return st
@@ -134,6 +136,36 @@ def capture_stars(st: ESRPState, tag: jax.Array) -> ESRPState:
     p = st.pcg
     return st._replace(x_s=p.x, r_s=p.r, z_s=p.z, p_s=p.p,
                        beta_s=p.beta, rz_s=p.rz, star_tag=tag)
+
+
+def member_select(old: ESRPState, new: ESRPState,
+                  done: jax.Array) -> ESRPState:
+    """Per-member freeze for the batched state: members with done=True keep
+    every per-member leaf (pcg vectors/scalars, their queue rows, starred
+    locals, checksums) from ``old``; shared bookkeeping — the iteration
+    counter, queue tags, star tag — always advances with the global
+    schedule. This is the ``freeze`` callback the batched chunk scan and
+    the driver's converged-member restore both use."""
+    col = done[:, None]
+    st = new._replace(
+        pcg=freeze_pcg(old.pcg, new.pcg, done),
+        q=jnp.where(done[None, :, None], old.q, new.q),
+        x_s=jnp.where(col, old.x_s, new.x_s),
+        r_s=jnp.where(col, old.r_s, new.r_s),
+        z_s=jnp.where(col, old.z_s, new.z_s),
+        p_s=jnp.where(col, old.p_s, new.p_s),
+        beta_s=jnp.where(done, old.beta_s, new.beta_s),
+        rz_s=jnp.where(done, old.rz_s, new.rz_s))
+    if not isinstance(new.rq, tuple):
+        mask = done.reshape((1, -1) + (1,) * (new.rq.ndim - 2))
+        st = st._replace(rq=jnp.where(mask, old.rq, new.rq))
+    if not isinstance(new.q_sums, tuple):
+        st = st._replace(
+            q_sums=jnp.where(done[None, :, None], old.q_sums, new.q_sums))
+    if not isinstance(new.rq_sums, tuple):
+        st = st._replace(
+            rq_sums=jnp.where(done[None, :, None], old.rq_sums, new.rq_sums))
+    return st
 
 
 def esrp_prelude(st: ESRPState, T: int, gated: bool = True,
@@ -243,16 +275,18 @@ def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
     def step(s):
         s2 = esrp_step(s, ops, T, b=b, rr_every=rr_every, gated=gated,
                        push=push)
-        rnorm = jnp.linalg.norm(s2.pcg.r)
+        rnorm = _vec_norm(s2.pcg.r)
         if not metrics:
             return s2, rnorm
         do_push, star = storage_flags(s.pcg.j, T)
         return s2, rnorm, iteration_metrics(s2.pcg, do_push, star)
 
-    aux0 = (jnp.zeros((len(METRIC_FIELDS),), st.pcg.rz.dtype)
-            if metrics else None)
+    aux0 = (jnp.zeros((len(METRIC_FIELDS),) + st.pcg.rz.shape,
+                      st.pcg.rz.dtype) if metrics else None)
+    batched = st.pcg.x.ndim == 2
     return scan_with_convergence_freeze(
-        st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh, aux0)
+        st, step, _vec_norm(st.pcg.r), n_iters, thresh, aux0,
+        freeze=member_select if batched else None)
 
 
 def recovery_point(st: ESRPState, T: int):

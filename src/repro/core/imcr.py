@@ -22,8 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ops import SolverOps
-from repro.core.pcg import (METRIC_FIELDS, PCGState, iteration_metrics,
-                            pcg_init, pcg_iterate_ops,
+from repro.core.pcg import (METRIC_FIELDS, PCGState, _vec_norm, freeze_pcg,
+                            iteration_metrics, pcg_init, pcg_iterate_ops,
                             scan_with_convergence_freeze)
 
 
@@ -46,10 +46,11 @@ def imcr_init(matvec, precond, b: jax.Array,
               x0: jax.Array | None = None, dot=None) -> IMCRState:
     pcg = pcg_init(matvec, precond, b, x0, dot)
     z = jnp.zeros_like(b)
-    zero = jnp.zeros((), b.dtype)
+    zero = jnp.zeros(b.shape[:-1], b.dtype)   # () unbatched, (B,) batched
     return IMCRState(pcg=pcg, ck_x=z, ck_r=z, ck_z=z, ck_p=z,
                      ck_beta=zero, ck_rz=zero,
-                     ck_tag=jnp.full((), -1, jnp.int32), traffic=zero)
+                     ck_tag=jnp.full((), -1, jnp.int32),
+                     traffic=jnp.zeros((), b.dtype))
 
 
 def checkpoint(st: IMCRState, phi: int, rows_per_node: int) -> IMCRState:
@@ -59,10 +60,29 @@ def checkpoint(st: IMCRState, phi: int, rows_per_node: int) -> IMCRState:
     stacked = jnp.stack([p.x, p.r, p.z, p.p])
     for k in range(1, phi + 1):
         shift = ((k + 1) // 2) * rows_per_node * (1 if k % 2 else -1)
-        traffic = traffic + jnp.sum(jnp.roll(stacked, shift, axis=1)) * 0.0
+        # roll along the row axis (last): batched stacks are (4, B, M)
+        traffic = traffic + jnp.sum(
+            jnp.roll(stacked, shift, axis=stacked.ndim - 1)) * 0.0
     return st._replace(ck_x=p.x, ck_r=p.r, ck_z=p.z, ck_p=p.p,
                        ck_beta=p.beta, ck_rz=p.rz, ck_tag=p.j,
                        traffic=traffic)
+
+
+def member_select(old: IMCRState, new: IMCRState,
+                  done: jax.Array) -> IMCRState:
+    """Per-member freeze for the batched state (see esrp.member_select):
+    converged members keep their pcg leaves and checkpoint copies; the
+    shared iteration counter / checkpoint tag / simulated traffic follow
+    the global schedule."""
+    col = done[:, None]
+    return new._replace(
+        pcg=freeze_pcg(old.pcg, new.pcg, done),
+        ck_x=jnp.where(col, old.ck_x, new.ck_x),
+        ck_r=jnp.where(col, old.ck_r, new.ck_r),
+        ck_z=jnp.where(col, old.ck_z, new.ck_z),
+        ck_p=jnp.where(col, old.ck_p, new.ck_p),
+        ck_beta=jnp.where(done, old.ck_beta, new.ck_beta),
+        ck_rz=jnp.where(done, old.ck_rz, new.ck_rz))
 
 
 def imcr_step(st: IMCRState, ops: SolverOps, T: int, phi: int,
@@ -97,17 +117,19 @@ def run_chunk(st: IMCRState, ops: SolverOps, T: int, phi: int,
 
     def step(s):
         s2 = imcr_step(s, ops, T, phi, rows_per_node, gated)
-        rnorm = jnp.linalg.norm(s2.pcg.r)
+        rnorm = _vec_norm(s2.pcg.r)
         if not metrics:
             return s2, rnorm
         do_ck = (s.pcg.j % T == 0) & (s.pcg.j > 2)
         return s2, rnorm, iteration_metrics(s2.pcg, do_ck,
                                             jnp.zeros((), bool))
 
-    aux0 = (jnp.zeros((len(METRIC_FIELDS),), st.pcg.rz.dtype)
-            if metrics else None)
+    aux0 = (jnp.zeros((len(METRIC_FIELDS),) + st.pcg.rz.shape,
+                      st.pcg.rz.dtype) if metrics else None)
+    batched = st.pcg.x.ndim == 2
     return scan_with_convergence_freeze(
-        st, step, jnp.linalg.norm(st.pcg.r), n_iters, thresh, aux0)
+        st, step, _vec_norm(st.pcg.r), n_iters, thresh, aux0,
+        freeze=member_select if batched else None)
 
 
 def check_survivable(failed: list[int], phi: int, n_nodes: int) -> None:

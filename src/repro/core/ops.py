@@ -87,7 +87,46 @@ def pick_rows(m: int, block: int, target: int = 512) -> int:
     return best
 
 
-def make_problem_ops(problem, backend: str) -> SolverOps:
+def batch_ops(ops: SolverOps, nbatch: int) -> SolverOps:
+    """Per-member-unrolled batched bundle over an arbitrary SolverOps.
+
+    Every op applies the wrapped bundle's exact unbatched subgraph to each
+    member row and stacks — member i of the batched trajectory is
+    bit-identical in f64 to a B=1 run through ``ops`` (a fused batched
+    einsum or ``jax.vmap`` is *not*: XLA reassociates the contractions).
+    Used for closure/non-Jacobi bundles and the Alg. 2 batched inner solves;
+    the Jacobi problem bundles get genuinely batched kernels instead
+    (``make_problem_ops(batch=...)``) with the same per-member guarantee."""
+    import jax.numpy as jnp
+
+    def member_dot(u, v):
+        return (u @ v) if ops.dot is None else ops.dot(u, v)
+
+    def matvec(p):
+        return jnp.stack([ops.matvec(p[i]) for i in range(nbatch)])
+
+    def matvec_dot(p):
+        pairs = [ops.matvec_dot(p[i]) for i in range(nbatch)]
+        return (jnp.stack([q for q, _ in pairs]),
+                jnp.stack([d for _, d in pairs]))
+
+    def precond(r):
+        return jnp.stack([ops.precond(r[i]) for i in range(nbatch)])
+
+    def update(alpha, x, r, p, q):
+        outs = [ops.update(alpha[i], x[i], r[i], p[i], q[i])
+                for i in range(nbatch)]
+        return tuple(jnp.stack([o[j] for o in outs]) for j in range(4))
+
+    def dot(u, v):
+        return jnp.stack([member_dot(u[i], v[i]) for i in range(nbatch)])
+
+    return SolverOps(ops.backend, matvec, matvec_dot, precond, update,
+                     ops.variant, dot)
+
+
+def make_problem_ops(problem, backend: str, batch: int = 0,
+                     fused: bool = False) -> SolverOps:
     """SolverOps over a ``Problem``'s Block-ELL matrix and its registered
     preconditioner. backend: "jnp" | "pallas" | "interpret".
 
@@ -97,7 +136,21 @@ def make_problem_ops(problem, backend: str) -> SolverOps:
     into that kernel: the update is the x/r axpy pair + the preconditioner's
     own backend-routed apply + a plain rᵀz dot, written once in shared jnp so
     cross-backend bit-identity reduces to the apply's bit-identity (tested
-    per preconditioner in tests/test_precond.py)."""
+    per preconditioner in tests/test_precond.py).
+
+    ``batch`` > 0 builds the batched bundle: every op takes/returns a leading
+    B axis ((B, M) vectors, (B,) scalars) and one dispatch advances all B
+    members. Jacobi routes through the genuinely batched kernels (leading-B
+    grid dim / per-member-unrolled refs), so member i stays bit-identical in
+    f64 to its B=1 run on the same backend; other preconditioners fall back
+    to the generic per-member wrapper ``batch_ops``.
+
+    ``fused=True`` (batched Jacobi only) swaps the jnp hot-loop ops for the
+    fused-batched einsum variants — one op serves all B members, which is
+    what amortizes the batch on an op-overhead-bound host backend — at the
+    price of per-member rounding no longer being bit-identical to the B=1
+    run (~ulp deviation; convergence unaffected). The serving path opts in;
+    the default stays exact."""
     from repro.kernels.fused_pcg.fused_pcg import fused_pcg_update
     from repro.kernels.fused_pcg.ref import fused_pcg_update_ref
     from repro.kernels.spmv.ref import spmv_dot_ref, spmv_seq_ref
@@ -107,6 +160,13 @@ def make_problem_ops(problem, backend: str) -> SolverOps:
     pinv = problem.pinv_blocks
     rows = pick_rows(problem.m, problem.precond_block)
     jacobi = problem.precond is None or problem.precond.name == "jacobi"
+
+    if batch:
+        if not jacobi:
+            # non-jacobi batched bundles stay per-member-unrolled even under
+            # fused: the sweep/polynomial applies have no fused-batched form
+            return batch_ops(make_problem_ops(problem, backend), batch)
+        return _make_batched_jacobi_ops(problem, backend, batch, rows, fused)
 
     if backend == "jnp":
         def matvec(x):
@@ -156,3 +216,84 @@ def make_problem_ops(problem, backend: str) -> SolverOps:
             return x_new, r_new, z_new, r_new @ z_new
 
     return SolverOps(backend, matvec, matvec_dot, precond, update)
+
+
+def _make_batched_jacobi_ops(problem, backend: str, batch: int,
+                             rows: int, fused: bool = False) -> SolverOps:
+    """Batched Jacobi bundle: hot-loop ops are single batched kernel calls
+    (one dispatch for B members); the off-hot-loop precond/dot are
+    per-member unrolled so every op keeps the per-member f64 bit-identity
+    with the unbatched backend.
+
+    ``fused=True`` routes the jnp hot loop through the fused-batched einsum
+    refs instead (one op per iteration for the whole batch — the
+    throughput mode; see kernels/spmv/ref.py) and batches precond/dot the
+    same way. The Pallas/interpret kernels are already one dispatch per
+    batch either way."""
+    import jax.numpy as jnp
+
+    from repro.kernels.fused_pcg.fused_pcg import fused_pcg_update_batched
+    from repro.kernels.fused_pcg.ref import (fused_pcg_update_ref_batched,
+                                             fused_pcg_update_ref_fused)
+    from repro.kernels.spmv.ref import (spmv_dot_ref_batched,
+                                        spmv_dot_ref_fused,
+                                        spmv_seq_ref_batched,
+                                        spmv_seq_ref_fused)
+    from repro.kernels.spmv.spmv import spmv_batched, spmv_dot_batched
+
+    a = problem.a
+    pinv = problem.pinv_blocks
+
+    if backend == "jnp" and fused:
+        def matvec(x):
+            return spmv_seq_ref_fused(a.data, a.idx, x)
+
+        def matvec_dot(x):
+            return spmv_dot_ref_fused(a.data, a.idx, x)
+
+        def update(alpha, x, r, p, q):
+            return fused_pcg_update_ref_fused(alpha, x, r, p, q, pinv,
+                                              rows=rows)
+    elif backend == "jnp":
+        def matvec(x):
+            return spmv_seq_ref_batched(a.data, a.idx, x)
+
+        def matvec_dot(x):
+            return spmv_dot_ref_batched(a.data, a.idx, x)
+
+        def update(alpha, x, r, p, q):
+            return fused_pcg_update_ref_batched(alpha, x, r, p, q, pinv,
+                                                rows=rows)
+    elif backend in ("pallas", "interpret"):
+        interp = backend == "interpret"
+
+        def matvec(x):
+            return spmv_batched(a.data, a.idx, x, interpret=interp)
+
+        def matvec_dot(x):
+            return spmv_dot_batched(a.data, a.idx, x, interpret=interp)
+
+        def update(alpha, x, r, p, q):
+            return fused_pcg_update_batched(alpha, x, r, p, q, pinv,
+                                            rows=rows, interpret=interp)
+    else:
+        raise ValueError(f"unknown SolverOps backend {backend!r}")
+
+    if fused:
+        nb, blk, _ = pinv.shape
+
+        def precond(r):
+            return jnp.einsum("nij,bnj->bni", pinv,
+                              r.reshape(batch, nb, blk)).reshape(batch, -1)
+
+        def dot(u, v):
+            return jnp.einsum("bi,bi->b", u, v)
+    else:
+        def precond(r):
+            return jnp.stack([problem.apply_precond(r[i])
+                              for i in range(batch)])
+
+        def dot(u, v):
+            return jnp.stack([u[i] @ v[i] for i in range(batch)])
+
+    return SolverOps(backend, matvec, matvec_dot, precond, update, dot=dot)

@@ -16,7 +16,36 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.ops import SolverOps, make_closure_ops
+from repro.core.ops import SolverOps, batch_ops, make_closure_ops
+
+
+def _expand(s: jax.Array, v: jax.Array) -> jax.Array:
+    """Broadcast a per-member scalar against per-member vectors: with
+    unbatched (M,) vectors the scalar passes through untouched (the
+    pre-batch expression, bit-for-bit); with batched (B, M) vectors the
+    (B,) scalar gains a trailing axis."""
+    return s[..., None] if v.ndim == 2 else s
+
+
+def _vec_norm(r: jax.Array) -> jax.Array:
+    """||r|| per member: flat norm for (M,), per-row norm for (B, M).
+    The row-wise reduce is bit-identical in f64 to the flat norm of each
+    row (asserted in tests/test_batched.py)."""
+    return jnp.linalg.norm(r) if r.ndim == 1 else jnp.linalg.norm(r, axis=-1)
+
+
+def freeze_pcg(old: "PCGState", new: "PCGState", done: jax.Array) -> "PCGState":
+    """Per-member freeze: members with done=True keep their old per-member
+    leaves; the shared iteration counter always advances (it tracks the
+    global schedule, not any one member)."""
+    col = done[:, None]
+    return PCGState(x=jnp.where(col, old.x, new.x),
+                    r=jnp.where(col, old.r, new.r),
+                    z=jnp.where(col, old.z, new.z),
+                    p=jnp.where(col, old.p, new.p),
+                    rz=jnp.where(done, old.rz, new.rz),
+                    beta=jnp.where(done, old.beta, new.beta),
+                    j=new.j)
 
 
 class PCGState(NamedTuple):
@@ -44,8 +73,10 @@ def pcg_init(matvec: Callable, precond: Callable, b: jax.Array,
     r0 = b - matvec(x0)
     z0 = precond(r0)
     rz0 = r0 @ z0 if dot is None else dot(r0, z0)
+    # beta shape follows the batch layout: () for (M,) b, (B,) for (B, M)
     return PCGState(x=x0, r=r0, z=z0, p=z0, rz=rz0,
-                    beta=jnp.zeros((), b.dtype), j=jnp.zeros((), jnp.int32))
+                    beta=jnp.zeros(b.shape[:-1], b.dtype),
+                    j=jnp.zeros((), jnp.int32))
 
 
 def pcg_iterate_ops(state: PCGState, ops: SolverOps) -> PCGState:
@@ -61,7 +92,7 @@ def pcg_iterate_ops(state: PCGState, ops: SolverOps) -> PCGState:
     alpha = state.rz / pq
     x, r, z, rz = ops.update(alpha, state.x, state.r, state.p, q)
     beta = rz / state.rz
-    p = z + beta * state.p
+    p = z + _expand(beta, z) * state.p
     return PCGState(x=x, r=r, z=z, p=p, rz=rz, beta=beta, j=state.j + 1)
 
 
@@ -98,15 +129,23 @@ def iteration_metrics(pcg, push, star) -> jax.Array:
     and the whole ring reads back with the existing chunk readback (zero
     extra dispatches)."""
     dt = pcg.rz.dtype
-    orth = jnp.abs(pcg.r @ pcg.p - pcg.rz)
-    return jnp.stack([pcg.rz, jnp.asarray(push).astype(dt),
-                      jnp.asarray(star).astype(dt), orth])
+    if pcg.r.ndim == 1:
+        orth = jnp.abs(pcg.r @ pcg.p - pcg.rz)
+        return jnp.stack([pcg.rz, jnp.asarray(push).astype(dt),
+                          jnp.asarray(star).astype(dt), orth])
+    # batched: one (len(METRIC_FIELDS), B) row — per-member rz/orth columns,
+    # the shared push/star flags broadcast across members
+    ones = jnp.ones(pcg.rz.shape, dt)
+    orth = jnp.abs(jnp.sum(pcg.r * pcg.p, axis=-1) - pcg.rz)
+    return jnp.stack([pcg.rz, ones * jnp.asarray(push).astype(dt),
+                      ones * jnp.asarray(star).astype(dt), orth])
 
 
 def scan_with_convergence_freeze(st, step: Callable, rnorm0: jax.Array,
                                  n_iters: int,
                                  thresh: jax.Array | None,
-                                 aux0: jax.Array | None = None):
+                                 aux0: jax.Array | None = None,
+                                 freeze: Callable | None = None):
     """Scan ``n_iters`` of ``step`` (state -> (state, ||r||)), recording
     ||r|| after each iteration — the chunked-convergence protocol shared by
     the ESRP and IMCR chunk runners.
@@ -122,7 +161,54 @@ def scan_with_convergence_freeze(st, step: Callable, rnorm0: jax.Array,
     iterations repeat the carried aux row, which the driver trims away with
     the executed count. aux0=None keeps the exact pre-telemetry trace (the
     jaxpr-identity tests compare against this path).
+
+    Batched (rnorm0 of shape (B,), thresh (B,)): the freeze becomes
+    **per-member** (continuous batching). Each iteration steps the whole
+    batch, then ``freeze(old_state, new_state, done)`` re-selects the old
+    per-member leaves for converged members (``done`` = (B,) bool) — the
+    caller supplies it because only the strategy knows which state leaves
+    carry the batch axis where. A converged member's state is therefore
+    exactly its state at first convergence, bit-for-bit, while stragglers
+    advance; a global ``lax.cond`` still skips the whole body once every
+    member is done. The recorded norms become (n_iters, B).
     """
+    batched = thresh is not None and getattr(rnorm0, "ndim", 0) > 0
+    if batched and freeze is None:
+        raise ValueError("batched convergence freeze needs the per-member "
+                         "freeze(old, new, done) callback")
+    if batched:
+        if aux0 is not None:
+            def advance_aux(carry):
+                s, rnorm, aux = carry
+                s2, rn2, aux2 = step(s)
+                done = rnorm < thresh
+                return (freeze(s, s2, done), jnp.where(done, rnorm, rn2),
+                        jnp.where(done[None, :], aux, aux2))
+
+            def body_aux(carry, _):
+                carry = jax.lax.cond(jnp.all(carry[1] < thresh),
+                                     lambda c: c, advance_aux, carry)
+                return carry, (carry[1], carry[2])
+
+            (st, _, _), record = jax.lax.scan(
+                body_aux, (st, rnorm0, aux0), None, length=n_iters)
+            return st, record
+
+        def advance(carry):
+            s, rnorm = carry
+            s2, rn2 = step(s)
+            done = rnorm < thresh
+            return freeze(s, s2, done), jnp.where(done, rnorm, rn2)
+
+        def body(carry, _):
+            carry = jax.lax.cond(jnp.all(carry[1] < thresh),
+                                 lambda c: c, advance, carry)
+            return carry, carry[1]
+
+        (st, _), norms = jax.lax.scan(body, (st, rnorm0), None,
+                                      length=n_iters)
+        return st, norms
+
     if aux0 is not None:
         def body_aux(carry, _):
             s, rnorm, aux = carry
@@ -191,8 +277,56 @@ def run_pcg(matvec: Callable, precond: Callable, b: jax.Array,
                             jnp.zeros_like(rnorm))
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 3, 4))
+def run_pcg_batched(matvec: Callable, precond: Callable, b: jax.Array,
+                    rtol: float = 1e-8, max_iters: int = 100_000,
+                    x0: jax.Array | None = None
+                    ) -> tuple[PCGState, jax.Array]:
+    """Batched ``run_pcg``: solve B systems with the *same* operator to
+    per-member tolerance. b: (B, M); matvec/precond are the unbatched
+    closures, applied per member through ``batch_ops``.
+
+    ``jax.vmap`` of the while_loop would keep stepping converged members
+    until the last straggler finishes (vmap has no per-member freeze), which
+    breaks the per-member trajectory identity. Here the loop runs while any
+    member is active and ``freeze_pcg`` pins converged members at their
+    first-convergence state — member i's final (state, rel) is bit-identical
+    in f64 to ``run_pcg(matvec, precond, b[i], ...)``. Zero-RHS members
+    (the micro-batcher's padding) resolve to x = 0 / rel = 0 at iteration 0,
+    exactly like the unbatched guard."""
+    nb = b.shape[0]
+    ops = batch_ops(make_closure_ops(matvec, precond), nb)
+    state = pcg_init(ops.matvec, ops.precond, b, x0, dot=ops.dot)
+    bnorm = jnp.linalg.norm(b, axis=-1)
+    thresh = rtol * bnorm
+    nonzero = bnorm > 0
+
+    def cond(carry):
+        s, rnorm = carry
+        return jnp.any((rnorm >= thresh) & nonzero) & (s.j < max_iters)
+
+    def body(carry):
+        s, rnorm = carry
+        s2 = pcg_iterate_ops(s, ops)
+        rn2 = jnp.linalg.norm(s2.r, axis=-1)
+        done = (rnorm < thresh) | ~nonzero
+        return freeze_pcg(s, s2, done), jnp.where(done, rnorm, rn2)
+
+    state, rnorm = jax.lax.while_loop(
+        cond, body, (state, jnp.linalg.norm(state.r, axis=-1)))
+    live = nonzero if state.x.ndim == 1 else nonzero[:, None]
+    state = PCGState(
+        x=jnp.where(live, state.x, 0.0), r=jnp.where(live, state.r, 0.0),
+        z=jnp.where(live, state.z, 0.0), p=jnp.where(live, state.p, 0.0),
+        rz=jnp.where(nonzero, state.rz, 0.0),
+        beta=jnp.where(nonzero, state.beta, 0.0), j=state.j)
+    return state, jnp.where(nonzero, rnorm / jnp.where(nonzero, bnorm, 1.0),
+                            jnp.zeros_like(rnorm))
+
+
 def residual_drift(matvec: Callable, b: jax.Array, x_end: jax.Array,
                    r_end: jax.Array) -> jax.Array:
-    """Paper Eq. (2): (||r_end|| - ||b - A x_end||) / ||b - A x_end||."""
-    true_res = jnp.linalg.norm(b - matvec(x_end))
-    return (jnp.linalg.norm(r_end) - true_res) / true_res
+    """Paper Eq. (2): (||r_end|| - ||b - A x_end||) / ||b - A x_end||.
+    Batch-polymorphic: (B, M) inputs give a (B,) per-member drift."""
+    true_res = _vec_norm(b - matvec(x_end))
+    return (_vec_norm(r_end) - true_res) / true_res

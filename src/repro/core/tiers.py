@@ -47,6 +47,12 @@ class StorageTier:
     write_gbps: float
     latency_s: float
     full_slab_push: bool
+    # where the constants came from: "placeholder" (order-of-magnitude
+    # class numbers) or a measured record written by
+    # scripts/calibrate_tiers.py ("measured host=... date=..."), loaded via
+    # REPRO_TIER_CALIBRATION. Rides into BENCH_*.json tier sections so a
+    # recorded sweep states whether its recovery model was calibrated.
+    provenance: str = "placeholder"
 
     def read_s(self, nbytes: int) -> float:
         """Modeled seconds to fetch ``nbytes`` from this tier."""
@@ -93,6 +99,51 @@ SIMULATED_NVRAM = StorageTier("simulated-nvram", read_gbps=6.0,
 TIERS: dict[str, StorageTier] = {t.name: t for t in
                                  (DEVICE_NEIGHBOUR, REPLICATED_HOST,
                                   SIMULATED_NVRAM)}
+
+
+def load_calibration(path: str) -> dict[str, StorageTier]:
+    """Parse a ``scripts/calibrate_tiers.py`` record into StorageTiers.
+
+    The JSON carries per-tier ``read_gbps``/``write_gbps``/``latency_s``
+    plus a measurement provenance block; the tier's structural field
+    (``full_slab_push``) always comes from the builtin definition — the
+    calibration overwrites *constants*, not placement semantics."""
+    import json
+
+    with open(path) as f:
+        doc = json.load(f)
+    prov = doc.get("provenance", {})
+    tag = ("measured host={host} backend={backend} date={date}"
+           .format(host=prov.get("host", "?"),
+                   backend=prov.get("backend", "?"),
+                   date=prov.get("date", "?")))
+    out = {}
+    for name, rec in doc["tiers"].items():
+        base = TIERS.get(name)
+        if base is None:
+            raise ValueError(f"calibration names unknown tier {name!r}; "
+                             f"known: {sorted(TIERS)}")
+        out[name] = dataclasses.replace(
+            base, read_gbps=float(rec["read_gbps"]),
+            write_gbps=float(rec["write_gbps"]),
+            latency_s=float(rec["latency_s"]),
+            provenance=rec.get("provenance", tag))
+    return out
+
+
+def _apply_calibration_env() -> None:
+    """REPRO_TIER_CALIBRATION=<path> overwrites the placeholder constants
+    at import time (the ROADMAP "calibrate the tier constants" remainder).
+    Unset or missing file -> placeholders stand, exactly as before."""
+    import os
+
+    path = os.environ.get("REPRO_TIER_CALIBRATION")
+    if not path or not os.path.exists(path):
+        return
+    TIERS.update(load_calibration(path))
+
+
+_apply_calibration_env()
 
 
 def resolve_tier(tier) -> StorageTier:

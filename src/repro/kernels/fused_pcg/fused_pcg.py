@@ -71,3 +71,57 @@ def fused_pcg_update(alpha: jax.Array, x: jax.Array, r: jax.Array,
         interpret=interpret,
     )(alpha.reshape(1), x, r, p, q, pinv_blocks)
     return xo, ro, zo, jnp.sum(partial)
+
+
+def _fused_kernel_b(alpha_ref, x_ref, r_ref, p_ref, q_ref, pb_ref,
+                    xo_ref, ro_ref, zo_ref, rz_ref):
+    a = alpha_ref[0]
+    x_new = x_ref[0] + a * p_ref[0]
+    r_new = r_ref[0] - a * q_ref[0]
+    nb, b, _ = pb_ref.shape
+    z_new = jnp.einsum("nij,nj->ni", pb_ref[...], r_new.reshape(nb, b),
+                       preferred_element_type=r_new.dtype).reshape(-1)
+    xo_ref[0] = x_new
+    ro_ref[0] = r_new
+    zo_ref[0] = z_new
+    rz_ref[0, 0] = jnp.sum(r_new * z_new)
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def fused_pcg_update_batched(alpha: jax.Array, x: jax.Array, r: jax.Array,
+                             p: jax.Array, q: jax.Array,
+                             pinv_blocks: jax.Array,
+                             *, rows: int = 256, interpret: bool = False):
+    """Batched fused update: one kernel pass advances all B members.
+
+    alpha: (B,); x, r, p, q: (B, M); pinv_blocks: (M/b, b, b) shared across
+    the batch. Grid (B, M/rows) — each (b, i) cell runs the identical
+    program as the unbatched kernel's cell i on member b's rows, so member
+    results are bit-identical to B separate unbatched calls. Returns
+    (x', r', z') as (B, M) and rz' as (B,)."""
+    nb_batch, m = x.shape
+    nb, b, _ = pinv_blocks.shape
+    if m % rows or rows % b:
+        raise ValueError(f"rows={rows} must divide M={m} and be a multiple "
+                         f"of the precond block {b}")
+    grid = m // rows
+    bpg = rows // b
+
+    vec = pl.BlockSpec((1, rows), lambda bi, i: (bi, i))
+    out_shapes = (
+        jax.ShapeDtypeStruct((nb_batch, m), x.dtype),
+        jax.ShapeDtypeStruct((nb_batch, m), x.dtype),
+        jax.ShapeDtypeStruct((nb_batch, m), x.dtype),
+        jax.ShapeDtypeStruct((nb_batch, grid), x.dtype),
+    )
+    xo, ro, zo, partial = pl.pallas_call(
+        _fused_kernel_b,
+        grid=(nb_batch, grid),
+        in_specs=[pl.BlockSpec((1,), lambda bi, i: (bi,)),
+                  vec, vec, vec, vec,
+                  pl.BlockSpec((bpg, b, b), lambda bi, i: (i, 0, 0))],
+        out_specs=(vec, vec, vec, pl.BlockSpec((1, 1), lambda bi, i: (bi, i))),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(alpha, x, r, p, q, pinv_blocks)
+    return xo, ro, zo, jnp.sum(partial, axis=1)

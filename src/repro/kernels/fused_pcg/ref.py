@@ -28,3 +28,42 @@ def fused_pcg_update_ref(alpha, x, r, p, q, pinv_blocks, rows: int | None = None
         partial = jax.lax.optimization_barrier(partial)
         rz = jnp.sum(partial)
     return x_new, r_new, z_new, rz
+
+
+def fused_pcg_update_ref_batched(alpha, x, r, p, q, pinv_blocks,
+                                 rows: int | None = None):
+    """Batched oracle: per-member unrolled loop over the scalar ref.
+
+    alpha: (B,); x, r, p, q: (B, M). Applying the exact scalar subgraph to
+    each member row (rather than a fused batched einsum) is what keeps each
+    member bit-identical in f64 to its own B=1 run. Returns per-member
+    (x', r', z') stacked (B, M) and rz' (B,)."""
+    outs = [fused_pcg_update_ref(alpha[i], x[i], r[i], p[i], q[i],
+                                 pinv_blocks, rows=rows)
+            for i in range(x.shape[0])]
+    return (jnp.stack([o[0] for o in outs]), jnp.stack([o[1] for o in outs]),
+            jnp.stack([o[2] for o in outs]), jnp.stack([o[3] for o in outs]))
+
+
+def fused_pcg_update_ref_fused(alpha, x, r, p, q, pinv_blocks,
+                               rows: int | None = None):
+    """Fused-batched update: one einsum/axpy serves all B members.
+
+    The throughput-mode counterpart of the unrolled batched oracle above
+    (see the fused-batched note in kernels/spmv/ref.py): per-member
+    results match the B=1 run to ~ulp, not bit-exactly. alpha: (B,);
+    x, r, p, q: (B, M); returns (B, M) triples and rz' (B,)."""
+    a = alpha[:, None]
+    x_new = x + a * p
+    r_new = r - a * q
+    nbatch = x.shape[0]
+    nb, b, _ = pinv_blocks.shape
+    z_new = jnp.einsum("nij,bnj->bni", pinv_blocks,
+                       r_new.reshape(nbatch, nb, b)).reshape(nbatch, -1)
+    if rows is None:
+        rz = jnp.einsum("bi,bi->b", r_new, z_new)
+    else:
+        partial = jnp.sum((r_new * z_new).reshape(nbatch, -1, rows), axis=2)
+        partial = jax.lax.optimization_barrier(partial)
+        rz = jnp.sum(partial, axis=1)
+    return x_new, r_new, z_new, rz

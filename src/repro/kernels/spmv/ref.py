@@ -49,3 +49,62 @@ def spmv_dot_ref(data: jax.Array, idx: jax.Array,
     # bit-identity with the kernel's (rt,) partial output.
     partial = jax.lax.optimization_barrier(partial)
     return acc.reshape(rt * bm), jnp.sum(partial)
+
+
+# --------------------------------------------------------------------------- #
+# batched (leading B axis): per-member unrolled loops over the scalar refs.
+# A fused batched einsum ("rij,brj->bri") is NOT bit-identical per member to
+# the scalar einsum in f64 — XLA picks a different contraction order — so the
+# batched refs apply the exact scalar subgraph to each member row and stack.
+# That makes batched-vs-B×(B=1) trajectory identity hold by construction.
+# --------------------------------------------------------------------------- #
+def spmv_seq_ref_batched(data: jax.Array, idx: jax.Array,
+                         x: jax.Array) -> jax.Array:
+    """x: (B, ct*bn) -> (B, rt*bm); member i identical to spmv_seq_ref(x[i])."""
+    return jnp.stack([spmv_seq_ref(data, idx, x[i])
+                      for i in range(x.shape[0])])
+
+
+def spmv_dot_ref_batched(data: jax.Array, idx: jax.Array,
+                         x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Batched fused y = A @ x and xᵀy. Returns ((B, rt*bm), (B,))."""
+    pairs = [spmv_dot_ref(data, idx, x[i]) for i in range(x.shape[0])]
+    return (jnp.stack([y for y, _ in pairs]),
+            jnp.stack([d for _, d in pairs]))
+
+
+# --------------------------------------------------------------------------- #
+# fused-batched variants: ONE batched einsum per k slot serves all B members.
+# On an op-overhead-bound host backend this is what actually amortizes the
+# batch (the unrolled refs above emit B subgraphs per iteration — B x the op
+# count); the price is that member i's rounding is no longer bit-identical
+# to its B=1 run (XLA contracts "rij,brj->bri" in a different order). The
+# k-slot accumulation order and the per-row-tile partial association are
+# kept, so the deviation is einsum-internal only (~ulp level). Opt-in via
+# SolverOps fused batching (solve_resilient(batch_fused=True)).
+# --------------------------------------------------------------------------- #
+def spmv_seq_ref_fused(data: jax.Array, idx: jax.Array,
+                       x: jax.Array) -> jax.Array:
+    """x: (B, ct*bn) -> (B, rt*bm); one einsum per k slot for all members."""
+    rt, kmax, bm, bn = data.shape
+    nb = x.shape[0]
+    xb = x.reshape(nb, -1, bn)
+    acc = jnp.zeros((nb, rt, bm), data.dtype)
+    for k in range(kmax):
+        acc = acc + jnp.einsum("rij,brj->bri", data[:, k], xb[:, idx[:, k]])
+    return acc.reshape(nb, rt * bm)
+
+
+def spmv_dot_ref_fused(data: jax.Array, idx: jax.Array,
+                       x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Batched fused y = A @ x and xᵀy, one einsum per slot for the whole
+    batch. Returns ((B, rt*bm), (B,))."""
+    rt, kmax, bm, bn = data.shape
+    nb = x.shape[0]
+    xb = x.reshape(nb, -1, bn)
+    acc = jnp.zeros((nb, rt, bm), data.dtype)
+    for k in range(kmax):
+        acc = acc + jnp.einsum("rij,brj->bri", data[:, k], xb[:, idx[:, k]])
+    partial = jnp.sum(acc * x.reshape(nb, rt, bm), axis=2)       # (B, rt)
+    partial = jax.lax.optimization_barrier(partial)
+    return acc.reshape(nb, rt * bm), jnp.sum(partial, axis=1)

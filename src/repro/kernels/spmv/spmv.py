@@ -124,3 +124,105 @@ def spmv_dot(data: jax.Array, idx: jax.Array, x: jax.Array,
         interpret=interpret,
     )(idx, data, xb, xr)
     return out.reshape(rt * bm), jnp.sum(partial)
+
+
+# --------------------------------------------------------------------------- #
+# batched kernels: explicit leading B grid dimension. The grid becomes
+# (B, rt, kmax) with k still the innermost (sequential) axis, so each (b, r)
+# cell accumulates through the identical VMEM-scratch slot sequence as the
+# unbatched kernel — per-member results are bit-identical to B separate
+# unbatched calls, while the whole batch is one pallas_call (one dispatch).
+# The matrix tiles and the prefetched index array are shared across members.
+# --------------------------------------------------------------------------- #
+def _spmv_kernel_b(idx_ref, data_ref, x_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(data_ref[0, 0], x_ref[0, 0],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...]
+
+
+def _spmv_dot_kernel_b(idx_ref, data_ref, x_ref, xrow_ref, o_ref, dot_ref,
+                       acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(data_ref[0, 0], x_ref[0, 0],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...]
+        dot_ref[0, 0] = jnp.sum(acc_ref[...] * xrow_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_batched(data: jax.Array, idx: jax.Array, x: jax.Array,
+                 *, interpret: bool = False) -> jax.Array:
+    """data: (rt, kmax, bm, bn); idx: (rt, kmax) int32; x: (B, ct*bn).
+    Returns y with y[i] = A @ x[i], shape (B, rt*bm)."""
+    rt, kmax, bm, bn = data.shape
+    nb = x.shape[0]
+    xb = x.reshape(nb, -1, bn)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, rt, kmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bn), lambda b, r, k, idx: (r, k, 0, 0)),
+            pl.BlockSpec((1, 1, bn), lambda b, r, k, idx: (b, idx[r, k], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bm), lambda b, r, k, idx: (b, r, 0)),
+        scratch_shapes=[pltpu.VMEM((bm,), data.dtype)],
+    )
+    out = pl.pallas_call(
+        _spmv_kernel_b,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, rt, bm), data.dtype),
+        interpret=interpret,
+    )(idx, data, xb)
+    return out.reshape(nb, rt * bm)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_dot_batched(data: jax.Array, idx: jax.Array, x: jax.Array,
+                     *, interpret: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Batched fused y = A @ x and xᵀy: one kernel pass advances all B
+    members. Returns (y: (B, rt*bm), xᵀy: (B,)); the (B, rt) partials are
+    reduced per member in the same row-tile order as the unbatched caller."""
+    rt, kmax, bm, bn = data.shape
+    nb = x.shape[0]
+    xb = x.reshape(nb, -1, bn)
+    xr = x.reshape(nb, rt, bm)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, rt, kmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, bm, bn), lambda b, r, k, idx: (r, k, 0, 0)),
+            pl.BlockSpec((1, 1, bn), lambda b, r, k, idx: (b, idx[r, k], 0)),
+            pl.BlockSpec((1, 1, bm), lambda b, r, k, idx: (b, r, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, 1, bm), lambda b, r, k, idx: (b, r, 0)),
+                   pl.BlockSpec((1, 1), lambda b, r, k, idx: (b, r))),
+        scratch_shapes=[pltpu.VMEM((bm,), data.dtype)],
+    )
+    out, partial = pl.pallas_call(
+        _spmv_dot_kernel_b,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((nb, rt, bm), data.dtype),
+                   jax.ShapeDtypeStruct((nb, rt), data.dtype)),
+        interpret=interpret,
+    )(idx, data, xb, xr)
+    return out.reshape(nb, rt * bm), jnp.sum(partial, axis=1)

@@ -1,12 +1,16 @@
 """CLI trace/bench validator (the CI bench-smoke gate).
 
     PYTHONPATH=src python -m repro.obs.validate artifacts/obs/failures_trace.json \
-        --bench artifacts/bench/BENCH_failures.json
+        --bench artifacts/bench/BENCH_failures.json \
+        --reports artifacts/obs/serve_events.jsonl
 
 Exit 0 iff: the trace parses, passes the Chrome-trace schema checks (sorted
-timestamps, stack-matched B/E pairs), and — with ``--bench`` — the BENCH
-json carries roofline FLOP/byte metadata for at least ``--min-kernels``
-kernels (default 3, the PR acceptance bar).
+timestamps, stack-matched B/E pairs); with ``--bench``, the BENCH json
+carries roofline FLOP/byte metadata for at least ``--min-kernels`` kernels
+(default 3, the PR acceptance bar); and with ``--reports``, every
+``solve_report`` record in the JSONL event log satisfies its schema —
+report schema_version >= 2 requires consistent ``batch_index`` /
+``batch_size`` placement fields (the batched-serving report contract).
 """
 from __future__ import annotations
 
@@ -43,12 +47,61 @@ def check_bench_rooflines(doc: dict, min_kernels: int = 3) -> list[str]:
     return errors
 
 
+def check_report_batch_fields(lines) -> list[str]:
+    """Validate the ``solve_report`` records of a JSONL event log.
+
+    Every record must parse and carry a ``schema_version``; version >= 2
+    reports (the batched-axis refactor) must place themselves in their
+    micro-batch: integer ``batch_index`` / ``batch_size`` with
+    0 <= batch_index < max(1, batch_size) (an unbatched solve reports
+    index 0 of size 1). Returns error strings; also errors when the log
+    holds no solve_report at all (an empty gate gates nothing)."""
+    errors = []
+    n_reports = 0
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"line {i + 1}: unparseable ({e})")
+            continue
+        if rec.get("type") != "solve_report":
+            continue
+        n_reports += 1
+        data = rec.get("data")
+        if not isinstance(data, dict):
+            errors.append(f"line {i + 1}: solve_report without data")
+            continue
+        ver = data.get("schema_version")
+        if not isinstance(ver, int):
+            errors.append(f"line {i + 1}: missing schema_version")
+            continue
+        if ver < 2:
+            continue                 # pre-batching reports carry no placement
+        bi, bs = data.get("batch_index"), data.get("batch_size")
+        if not isinstance(bi, int) or not isinstance(bs, int):
+            errors.append(f"line {i + 1}: schema_version {ver} report "
+                          f"lacks integer batch_index/batch_size "
+                          f"(got {bi!r}/{bs!r})")
+        elif not 0 <= bi < max(1, bs):
+            errors.append(f"line {i + 1}: batch_index {bi} out of range "
+                          f"for batch_size {bs}")
+    if not n_reports:
+        errors.append("no solve_report records found")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace", help="Chrome-trace JSON to validate")
     ap.add_argument("--bench", default=None,
                     help="BENCH_*.json that must carry roofline fields")
     ap.add_argument("--min-kernels", type=int, default=3)
+    ap.add_argument("--reports", default=None,
+                    help="JSONL event log whose solve_report records must "
+                         "satisfy the report schema (v2+: batch placement)")
     args = ap.parse_args(argv)
 
     errors = []
@@ -63,11 +116,17 @@ def main(argv=None) -> int:
             bench = json.load(f)
         errors += [f"{args.bench}: {e}"
                    for e in check_bench_rooflines(bench, args.min_kernels)]
+    if args.reports:
+        with open(args.reports) as f:
+            errors += [f"{args.reports}: {e}"
+                       for e in check_report_batch_fields(f)]
     for e in errors:
         print(f"FAIL {e}", file=sys.stderr)
     if not errors:
         print(f"OK {args.trace}: {n_events} events"
-              + (f"; {args.bench}: rooflines present" if args.bench else ""))
+              + (f"; {args.bench}: rooflines present" if args.bench else "")
+              + (f"; {args.reports}: report schema ok"
+                 if args.reports else ""))
     return 1 if errors else 0
 
 

@@ -1,13 +1,37 @@
-"""Serving steps: prefill (prompt -> populated cache) and decode (one token).
+"""Serving steps: the solver micro-batch step, plus the LM prefill/decode
+pair.
 
+``make_solve_step`` is the solver service's functional core — one dispatch
+of a padded (B, M) right-hand-side micro-batch through the batched resilient
+solver, returning the B per-member ``SolveReport``s. The LM builders remain
+for the language-model serving path (``--arch`` on the launcher):
 ``decode_*`` shapes in the assignment lower ``serve_step`` — one new token
 against a KV cache of seq_len — NOT ``train_step``; these builders are what
 the dry-run lowers for the inference cells.
 """
 from __future__ import annotations
 
+from typing import Callable
+
 import jax
 import jax.numpy as jnp
+
+
+def make_solve_step(problem, **solve_kwargs) -> Callable:
+    """The solver service's functional core: ``rhs (B, M) ->
+    list[SolveReport]``.
+
+    Thin partial application of ``solve_resilient`` — exists so the
+    micro-batcher, the benchmarks, and the tests all dispatch through one
+    entry point (and so the LM serving steps and the solver step live side
+    by side in ``repro.serve``)."""
+    from repro.core.driver import solve_resilient
+
+    def solve_step(rhs, scenario=None, obs=None):
+        return solve_resilient(problem, rhs=rhs, scenario=scenario, obs=obs,
+                               **solve_kwargs)
+
+    return solve_step
 
 
 def make_prefill_step(model):

@@ -1,0 +1,221 @@
+"""Streaming resilient solve service: request queue -> micro-batcher ->
+batched ``solve_resilient``.
+
+The service owns one ``Problem`` (one operator + preconditioner) and serves a
+stream of right-hand sides against it — the production shape of the paper's
+setting, where a PDE operator is factored/partitioned once and many load
+vectors arrive over time (time steps, optimization iterates, parameter
+sweeps). Requests are drained in fixed-size micro-batches of ``B`` members:
+
+  * every micro-batch is padded to exactly ``B`` rows with zero RHS members
+    (a zero row freezes at iteration 0 under the per-member convergence
+    freeze and reports rel = 0), so the jitted batched chunk runners compile
+    once and are reused for every dispatch — including the final partial
+    batch;
+  * the whole micro-batch advances in lockstep through the batched
+    ``SolverOps`` bundle; members that converge early freeze in place
+    (continuous batching) while stragglers keep iterating;
+  * a ``FailureEvent`` striking mid-batch hits all ``B`` members at once and
+    one Alg. 2 reconstruction pass recovers every member together — the
+    service keeps serving through injected failures;
+  * per-request latency (queue wait + solve) lands as nested spans and
+    records on a ``repro.obs.Tracer``, and each member's ``SolveReport``
+    carries its ``batch_index``/``batch_size`` placement.
+
+The service is synchronous by design: ``submit`` enqueues, ``run`` drains.
+That keeps it deterministic (testable bit-for-bit against B=1 references
+with ``fused=False``; the default fused throughput mode matches to ~ulp)
+while exercising the same micro-batching control flow an async front-end
+would drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.driver import SolveReport
+from repro.serve.serve_step import make_solve_step
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    req_id: int
+    rhs: np.ndarray
+    t_submit: float
+
+
+@dataclasses.dataclass
+class RequestResult:
+    req_id: int
+    report: SolveReport
+    latency_s: float        # submit -> result available
+    queue_wait_s: float     # submit -> micro-batch dispatch
+    solve_s: float          # the micro-batch solve wall time
+    batch_seq: int          # which micro-batch served it
+    batch_fill: int         # real members in that micro-batch (<= B)
+
+
+class SolverService:
+    """Request queue + micro-batcher over the batched resilient solver.
+
+    ``scenario`` (a list of ``core.failures.FailureEvent``) is injected into
+    micro-batches where ``batch_seq % fail_every == 0`` — failures under
+    sustained load, not a one-off. ``obs`` accepts a ``repro.obs.Tracer``
+    (or ``True`` for a fresh one, exposed as ``self.tracer``).
+
+    ``fused=True`` (default) runs the micro-batch in the fused-batched
+    throughput mode — one einsum per iteration serves all B members, which
+    is where the aggregate-throughput win comes from on op-overhead-bound
+    backends. Members then match their B=1 references to ~ulp rather than
+    bit-exactly; pass ``fused=False`` for the exact per-member-unrolled
+    bundle (what the bit-identity tests drive)."""
+
+    def __init__(self, problem, batch: int = 8, *, strategy: str = "esrp",
+                 T: int = 20, phi: int = 1, rtol: float = 1e-8,
+                 backend: str = "auto", ops=None, failure_runtime=None,
+                 scenario=None, fail_every: int = 1, obs=None,
+                 fused: bool = True,
+                 solve_kwargs: Optional[dict] = None):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.problem = problem
+        self.batch = int(batch)
+        self.m = int(problem.part.m)
+        self.dtype = problem.b.dtype
+        self.scenario = list(scenario) if scenario else None
+        self.fail_every = max(1, int(fail_every))
+        self.fused = bool(fused)
+        kw = dict(strategy=strategy, T=T, phi=phi, rtol=rtol,
+                  backend=backend, batch_fused=self.fused)
+        if ops is not None:
+            kw["ops"] = ops
+        if failure_runtime is not None:
+            kw["failure_runtime"] = failure_runtime
+        kw.update(solve_kwargs or {})
+        self._step = make_solve_step(problem, **kw)
+        from repro.obs import Tracer
+        self.tracer = obs if isinstance(obs, Tracer) else (
+            Tracer("solver_service") if obs else None)
+        self._queue: deque[SolveRequest] = deque()
+        self.results: dict[int, RequestResult] = {}
+        self._next_id = 0
+        self._batch_seq = 0
+        self._run_wall_s = 0.0        # cumulative time inside step()
+
+    # ------------------------------------------------------------------ #
+    def submit(self, rhs) -> int:
+        """Enqueue one system (rhs of length M); returns the request id."""
+        rhs = np.asarray(rhs, self.dtype)
+        if rhs.shape != (self.m,):
+            raise ValueError(
+                f"rhs shape {rhs.shape} != ({self.m},): the service solves "
+                f"one system per request against the shared operator")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(SolveRequest(rid, rhs, time.perf_counter()))
+        if self.tracer is not None:
+            self.tracer.instant("request_submit", cat="serve", req_id=rid,
+                                queued=len(self._queue))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> list[RequestResult]:
+        """Dispatch ONE micro-batch: drain up to B queued requests, pad to
+        exactly B with zero-RHS members, solve, and file per-request
+        results. Returns the new results (empty if the queue was empty)."""
+        if not self._queue:
+            return []
+        reqs = [self._queue.popleft()
+                for _ in range(min(self.batch, len(self._queue)))]
+        fill = len(reqs)
+        seq = self._batch_seq
+        self._batch_seq += 1
+        rhs = np.zeros((self.batch, self.m), self.dtype)
+        for k, rq in enumerate(reqs):
+            rhs[k] = rq.rhs
+        scen = (list(self.scenario) if self.scenario is not None
+                and seq % self.fail_every == 0 else None)
+
+        tr = self.tracer
+        mb_sp = None
+        req_spans = []
+        if tr is not None:
+            mb_sp = tr.begin("microbatch", cat="serve", seq=seq, fill=fill,
+                             batch=self.batch, padded=self.batch - fill,
+                             failures=bool(scen))
+            # per-request spans nest (LIFO) inside the micro-batch span:
+            # each covers its request's residence in this dispatch, with the
+            # queue wait and end-to-end latency attached on close
+            req_spans = [tr.begin("request", cat="serve", req_id=rq.req_id,
+                                  batch_index=k, seq=seq)
+                         for k, rq in enumerate(reqs)]
+
+        t0 = time.perf_counter()
+        reports = self._step(rhs, scenario=scen, obs=tr)
+        solve_s = time.perf_counter() - t0
+        self._run_wall_s += solve_s
+        t_done = time.perf_counter()
+
+        out = []
+        for k, rq in enumerate(reqs):
+            rep = reports[k]
+            res = RequestResult(
+                req_id=rq.req_id, report=rep,
+                latency_s=t_done - rq.t_submit,
+                queue_wait_s=t0 - rq.t_submit,
+                solve_s=solve_s, batch_seq=seq, batch_fill=fill)
+            self.results[rq.req_id] = res
+            out.append(res)
+        if tr is not None:
+            for sp, res in zip(reversed(req_spans), reversed(out)):
+                tr.close(sp, latency_ms=res.latency_s * 1e3,
+                         queue_wait_ms=res.queue_wait_s * 1e3,
+                         converged=res.report.converged,
+                         iters=res.report.converged_iter)
+            tr.close(mb_sp, solve_s=solve_s)
+            tr.add_counter("requests_served", fill, seq=seq)
+            tr.record("microbatch", dict(
+                seq=seq, fill=fill, batch=self.batch, solve_s=solve_s,
+                failures=bool(scen),
+                iters=[r.report.converged_iter for r in out]))
+        return out
+
+    def run(self) -> list[RequestResult]:
+        """Drain the whole queue; returns results in completion order."""
+        out = []
+        while self._queue:
+            out.extend(self.step())
+        return out
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        """Aggregate serving statistics over every completed request."""
+        res = sorted(self.results.values(), key=lambda r: r.req_id)
+        if not res:
+            return dict(requests=0, batch=self.batch)
+        lat = np.asarray([r.latency_s for r in res])
+        wait = np.asarray([r.queue_wait_s for r in res])
+        solve_wall = self._run_wall_s
+        return dict(
+            requests=len(res),
+            batch=self.batch,
+            microbatches=self._batch_seq,
+            mean_fill=float(np.mean([r.batch_fill for r in res])),
+            solve_wall_s=solve_wall,
+            throughput_rps=(len(res) / solve_wall if solve_wall > 0
+                            else float("inf")),
+            latency_p50_ms=float(np.percentile(lat, 50) * 1e3),
+            latency_p99_ms=float(np.percentile(lat, 99) * 1e3),
+            latency_mean_ms=float(lat.mean() * 1e3),
+            queue_wait_p50_ms=float(np.percentile(wait, 50) * 1e3),
+            iters_total=int(sum(max(0, r.report.converged_iter)
+                                for r in res)),
+            all_converged=bool(all(r.report.converged for r in res)),
+        )

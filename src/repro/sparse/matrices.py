@@ -142,14 +142,19 @@ class Problem:
             return jnp.einsum("nij,nj->ni", self.pinv_blocks, rb).reshape(-1)
         return self.precond.apply(r, backend="jnp")
 
-    def solver_ops(self, backend: str = "auto"):
+    def solver_ops(self, backend: str = "auto", batch: int = 0,
+                   fused: bool = False):
         """The SolverOps execution bundle for this problem (see
-        repro.core.ops). Cached per backend: the jitted chunk runners treat
-        the bundle as a static argument, so reusing the same object across
-        solves reuses their compiled code instead of re-tracing.
+        repro.core.ops). Cached per (backend, batch): the jitted chunk
+        runners treat the bundle as a static argument, so reusing the same
+        object across solves reuses their compiled code instead of
+        re-tracing.
 
         backend: "auto" (pallas on TPU, jnp elsewhere) | "jnp" | "pallas" |
-        "interpret"."""
+        "interpret". ``batch`` > 0 returns the batched bundle whose ops
+        carry a leading B axis (one dispatch advances B members);
+        ``fused=True`` picks its throughput mode (fused-batched einsums,
+        per-member ~ulp instead of bit-identical — see core.ops)."""
         from repro.core.ops import make_problem_ops
         if backend == "auto":
             backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
@@ -157,9 +162,11 @@ class Problem:
         if cache is None:
             cache = {}
             self._ops_cache = cache
-        if backend not in cache:
-            cache[backend] = make_problem_ops(self, backend)
-        return cache[backend]
+        key = (backend, batch, fused)
+        if key not in cache:
+            cache[key] = make_problem_ops(self, backend, batch=batch,
+                                          fused=fused)
+        return cache[key]
 
     def submatrix_coo(self, row_lo: int, row_hi: int, col_lo: int, col_hi: int):
         """COO of A[row_lo:row_hi, col_lo:col_hi] (for A_ff / inner solves)."""

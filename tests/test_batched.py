@@ -1,0 +1,189 @@
+"""Batched-axis solve stack: per-member convergence freeze + trajectory
+identity.
+
+The batched contract (ISSUE 8):
+
+  * a (B, M) ``rhs`` arms the batched solve — every op carries a leading B
+    axis and one dispatch advances all B members;
+  * B=1 batched is bit-identical in f64 to the unbatched path;
+  * a member converging mid-chunk FREEZES: later iterations must not touch
+    its rows, while stragglers continue unaffected (continuous batching);
+  * batched-vs-B×(B=1-loop) trajectories are bit-identical in f64 for
+    esrp/imcr on the jnp + interpret backends, including through a
+    mid-solve FailureEvent + Alg. 2 recovery (the default exact bundle);
+  * the opt-in fused throughput mode (``batch_fused=True``) matches the
+    exact trajectory to ~ulp, not bitwise;
+  * per-member ``SolveReport``s carry schema v2 ``batch_index`` /
+    ``batch_size`` placement.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core.driver import REPORT_SCHEMA_VERSION, solve_resilient
+from repro.core.failures import FailureEvent
+from repro.sparse.matrices import build_problem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return build_problem("poisson2d", n_nodes=4, nx=20)
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    return build_problem("poisson2d", n_nodes=4, nx=12)
+
+
+def _rhs_pair(problem):
+    """Member 0 smooth (fast CG convergence), member 1 rough (straggler)."""
+    rng = np.random.default_rng(3)
+    return np.stack([np.ones(problem.part.m),
+                     rng.standard_normal(problem.part.m)])
+
+
+# --------------------------------------------------------------------------- #
+# B=1 equivalence (acceptance criterion)
+# --------------------------------------------------------------------------- #
+def test_b1_batched_bit_identical_to_unbatched(problem):
+    kw = dict(strategy="esrp", T=10, phi=1, rtol=1e-9)
+    ref = solve_resilient(problem, **kw)
+    reps = solve_resilient(problem, rhs=jnp.asarray(problem.b)[None, :], **kw)
+    assert isinstance(reps, list) and len(reps) == 1
+    assert reps[0].converged_iter == ref.converged_iter
+    assert (np.asarray(reps[0].x) == np.asarray(ref.x)).all(), \
+        "B=1 batched diverged from the unbatched path"
+    assert reps[0].batch_index == 0 and reps[0].batch_size == 1
+
+
+def test_b1_batched_with_failure_bit_identical(problem):
+    kw = dict(strategy="esrp", T=10, phi=1, rtol=1e-9,
+              scenario=[FailureEvent(25, (1,))])
+    ref = solve_resilient(problem, **kw)
+    reps = solve_resilient(problem, rhs=jnp.asarray(problem.b)[None, :], **kw)
+    assert reps[0].converged_iter == ref.converged_iter
+    assert (np.asarray(reps[0].x) == np.asarray(ref.x)).all()
+    assert [e.target_iter for e in reps[0].events] == \
+        [e.target_iter for e in ref.events]
+
+
+# --------------------------------------------------------------------------- #
+# per-member convergence freeze (continuous batching)
+# --------------------------------------------------------------------------- #
+def test_member_converging_mid_chunk_freezes(problem):
+    """Member 0 (smooth rhs) converges mid-chunk well before member 1; its
+    rows must stop updating at its own convergence: a run capped between
+    the two convergence points carries bit-identical member-0 rows to the
+    full run, while the straggler is still mid-flight."""
+    rhs = jnp.asarray(_rhs_pair(problem))
+    kw = dict(strategy="esrp", T=10, rtol=1e-8, chunk=8)
+    full = solve_resilient(problem, rhs=rhs, **kw)
+    k0, k1 = full[0].converged_iter, full[1].converged_iter
+    assert k0 < k1, "fixture rhs must separate the convergence points"
+    cap = ((k0 + k1) // 2 // 8) * 8          # chunk-aligned, between k0, k1
+    assert k0 < cap < k1
+    capped = solve_resilient(problem, rhs=rhs, max_iters=cap, **kw)
+    # frozen rows asserted: iterations (k0, cap] did not touch member 0
+    assert capped[0].converged and capped[0].converged_iter == k0
+    assert (np.asarray(capped[0].x) == np.asarray(full[0].x)).all(), \
+        "converged member kept updating after its freeze point"
+    # the straggler really was mid-flight at the cap
+    assert not capped[1].converged
+    assert not (np.asarray(capped[1].x) == np.asarray(full[1].x)).all()
+
+
+def test_straggler_unaffected_by_frozen_member(problem):
+    """The straggler's trajectory is bit-identical to its own B=1 run —
+    the frozen member contributes nothing after its convergence."""
+    rhs = _rhs_pair(problem)
+    kw = dict(strategy="esrp", T=10, rtol=1e-8, chunk=8)
+    full = solve_resilient(problem, rhs=jnp.asarray(rhs), **kw)
+    solo = solve_resilient(problem, rhs=jnp.asarray(rhs[1]), **kw)
+    assert full[1].converged_iter == solo.converged_iter
+    assert (np.asarray(full[1].x) == np.asarray(solo.x)).all()
+
+
+def test_zero_rhs_member_freezes_at_zero(problem):
+    """A zero-RHS member (the micro-batch padding case) freezes at
+    iteration 0: x stays exactly 0, rel = 0, reported converged."""
+    rhs = np.stack([np.zeros(problem.part.m),
+                    np.asarray(problem.b)])
+    reps = solve_resilient(problem, rhs=jnp.asarray(rhs), strategy="esrp",
+                           T=10, rtol=1e-9)
+    assert reps[0].converged and reps[0].rel_residual == 0.0
+    assert (np.asarray(reps[0].x) == 0.0).all()
+    # the real member is untouched by the padding row
+    ref = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-9)
+    assert (np.asarray(reps[1].x) == np.asarray(ref.x)).all()
+
+
+# --------------------------------------------------------------------------- #
+# batched-vs-B×(B=1) trajectory identity, esrp/imcr × jnp/interpret
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", ["esrp", "imcr"])
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_batched_matches_sequential_with_failure(small_problem, strategy,
+                                                 backend):
+    rng = np.random.default_rng(5)
+    rhs = rng.standard_normal((3, small_problem.part.m))
+    kw = dict(strategy=strategy, T=5, phi=1, rtol=1e-9, backend=backend,
+              scenario=[FailureEvent(12, (1,))], chunk=16)
+    reps = solve_resilient(small_problem, rhs=jnp.asarray(rhs), **kw)
+    assert len(reps) == 3
+    for k in range(3):
+        solo = solve_resilient(small_problem, rhs=jnp.asarray(rhs[k]), **kw)
+        assert reps[k].converged_iter == solo.converged_iter, k
+        assert (np.asarray(reps[k].x) == np.asarray(solo.x)).all(), \
+            f"member {k} diverged from its B=1 run ({strategy}/{backend})"
+        assert reps[k].batch_index == k and reps[k].batch_size == 3
+
+
+# --------------------------------------------------------------------------- #
+# fused throughput mode
+# --------------------------------------------------------------------------- #
+def test_fused_mode_converges_and_tracks_exact(problem):
+    rng = np.random.default_rng(11)
+    rhs = rng.standard_normal((4, problem.part.m))
+    kw = dict(strategy="esrp", T=10, phi=1, rtol=1e-8)
+    exact = solve_resilient(problem, rhs=jnp.asarray(rhs), **kw)
+    fused = solve_resilient(problem, rhs=jnp.asarray(rhs),
+                            batch_fused=True, **kw)
+    for k in range(4):
+        assert fused[k].converged
+        xe, xf = np.asarray(exact[k].x), np.asarray(fused[k].x)
+        rel = np.linalg.norm(xf - xe) / np.linalg.norm(xe)
+        assert rel < 1e-12, (k, rel)
+
+
+# --------------------------------------------------------------------------- #
+# report schema + batched restrictions
+# --------------------------------------------------------------------------- #
+def test_report_schema_v2_batch_placement(problem):
+    rng = np.random.default_rng(2)
+    rhs = rng.standard_normal((2, problem.part.m))
+    reps = solve_resilient(problem, rhs=jnp.asarray(rhs), strategy="esrp",
+                           T=10, rtol=1e-9)
+    assert REPORT_SCHEMA_VERSION >= 2
+    for k, r in enumerate(reps):
+        doc = r.to_json()
+        assert doc["schema_version"] == REPORT_SCHEMA_VERSION
+        assert doc["batch_index"] == k and doc["batch_size"] == 2
+    # the unbatched report places itself as member 0 of a size-1 batch
+    doc = solve_resilient(problem, strategy="esrp", T=10,
+                          rtol=1e-9).to_json()
+    assert doc["batch_index"] == 0 and doc["batch_size"] == 1
+
+
+def test_batched_rejects_unsupported_modes(problem):
+    rhs = jnp.asarray(np.ones((2, problem.part.m)))
+    with pytest.raises(ValueError, match="elastic"):
+        solve_resilient(problem, rhs=rhs, elastic=True)
+    with pytest.raises(ValueError, match="rr_every"):
+        solve_resilient(problem, rhs=rhs, rr_every=10)
+    with pytest.raises(ValueError, match="rhs row length"):
+        solve_resilient(problem, rhs=rhs[:, :-1])

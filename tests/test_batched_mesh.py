@@ -1,0 +1,94 @@
+"""Batched solves on the 8-device mesh (subprocess suite).
+
+One mesh dispatch advances B independent RHS members of the same operator;
+a multi-node ``FailureEvent`` hits all B members at once and ONE Alg. 2
+reconstruction pass (batched line-5/6/8 solves over the shared f-slab)
+recovers them together. Asserted bit-identically in f64:
+
+  * every member of the batched sharded solve (device-resident
+    ``ShardedFailureRuntime``, batched redundancy-queue ppermutes) rejoins
+    its own single-system (B=1) mesh-mirror reference;
+  * the batched mesh run equals the batched single-device mesh-mirror run;
+  * recovery copies were read from surviving devices' queue shards.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+
+from repro.comm.shard import (ShardedFailureRuntime, mesh_mirror_ops,
+                              nodes_mesh, place_problem, sharded_solver_ops)
+from repro.core.driver import solve_resilient
+from repro.core.failures import FailureEvent
+from repro.sparse.matrices import build_problem
+
+B = 3
+mesh = nodes_mesh(8)
+problem = build_problem("poisson2d", n_nodes=8, nx=40, ny=40)
+placed = place_problem(problem, mesh)
+mirror_b = mesh_mirror_ops(problem, 8, batch=B)
+mirror1 = mesh_mirror_ops(problem, 8)
+with mesh:
+    ops_b = sharded_solver_ops(placed, mesh, batch=B)
+
+rng = np.random.default_rng(7)
+rhs = rng.standard_normal((B, problem.m))
+rhs[1] *= 40.0
+
+scen = [FailureEvent(45, (2, 5))]
+
+# batched sharded solve with the device-resident runtime: one phi=2
+# multi-node event strikes all B members, one Alg. 2 pass recovers them
+frt = ShardedFailureRuntime(placed, mesh, batch=B)
+with mesh:
+    reps = solve_resilient(placed, strategy="esrp", T=20, phi=2, rtol=1e-10,
+                           ops=ops_b, scenario=list(scen),
+                           failure_runtime=frt, rhs=jnp.asarray(rhs))
+assert isinstance(reps, list) and len(reps) == B
+assert all(r.converged for r in reps)
+assert len(reps[0].events) == 1          # ONE recovery pass for the batch
+for e in reps[0].events:
+    assert e.queue_src_nodes and not set(e.queue_src_nodes) & set(e.nodes), e
+print("batched citers:", [r.converged_iter for r in reps])
+
+# per-member single-system mesh-mirror references (B=1, same scenario)
+for k in range(B):
+    rm = solve_resilient(problem, strategy="esrp", T=20, phi=2, rtol=1e-10,
+                         ops=mirror1, scenario=list(scen),
+                         rhs=jnp.asarray(rhs[k]))
+    assert reps[k].converged_iter == rm.converged_iter, (
+        k, reps[k].converged_iter, rm.converged_iter)
+    assert (np.asarray(reps[k].x) == np.asarray(rm.x)).all(), \
+        f"member {k} did not rejoin its single-system reference bitwise"
+print("SINGLE_SYSTEM_REJOIN_OK")
+
+# batched mesh-mirror reference (single-device batched ops, same scenario)
+reps_m = solve_resilient(problem, strategy="esrp", T=20, phi=2, rtol=1e-10,
+                         ops=mirror_b, scenario=list(scen),
+                         rhs=jnp.asarray(rhs))
+for k in range(B):
+    assert (np.asarray(reps[k].x) == np.asarray(reps_m[k].x)).all(), k
+print("MESH_MIRROR_BATCHED_OK")
+print("BATCHED_MESH_OK")
+"""
+
+
+@pytest.mark.slow
+def test_batched_mesh_eight_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], cwd=".",
+                         env=env, capture_output=True, text=True,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    for tag in ("SINGLE_SYSTEM_REJOIN_OK", "MESH_MIRROR_BATCHED_OK",
+                "BATCHED_MESH_OK"):
+        assert tag in out.stdout, (tag, out.stdout)

@@ -1,0 +1,119 @@
+"""Streaming resilient solve service: micro-batcher, padding, per-request
+accounting, failure injection under load, and the serve report contract.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core.driver import solve_resilient
+from repro.core.failures import FailureEvent
+from repro.obs import chrome_trace, validate_chrome_trace
+from repro.obs.validate import check_report_batch_fields
+from repro.serve.serve_step import make_solve_step
+from repro.serve.solver_service import SolverService
+from repro.sparse.matrices import build_problem
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return build_problem("poisson2d", n_nodes=4, nx=20)
+
+
+@pytest.fixture(scope="module")
+def requests(problem):
+    rng = np.random.default_rng(17)
+    return rng.standard_normal((6, problem.part.m))
+
+
+def test_make_solve_step_returns_member_reports(problem, requests):
+    step = make_solve_step(problem, strategy="esrp", T=10, rtol=1e-8)
+    reports = step(jnp.asarray(requests[:3]))
+    assert len(reports) == 3 and all(r.converged for r in reports)
+    assert [r.batch_index for r in reports] == [0, 1, 2]
+
+
+def test_service_pads_partial_microbatches(problem, requests):
+    svc = SolverService(problem, batch=4, strategy="esrp", T=10, rtol=1e-8)
+    ids = [svc.submit(r) for r in requests]          # 6 requests, B=4
+    res = svc.run()
+    assert len(res) == 6 and svc.pending() == 0
+    fills = {r.batch_seq: r.batch_fill for r in res}
+    assert fills == {0: 4, 1: 2}                     # 4 + padded 2
+    for rid in ids:
+        r = svc.results[rid]
+        assert r.report.converged
+        assert r.report.batch_size == 4              # padded to full width
+        assert r.latency_s >= r.queue_wait_s >= 0.0
+    st = svc.stats()
+    assert st["requests"] == 6 and st["microbatches"] == 2
+    assert st["all_converged"] and st["mean_fill"] == pytest.approx(10 / 3)
+
+
+def test_service_exact_mode_matches_b1_reference(problem, requests):
+    """fused=False runs the exact per-member bundle: every served result is
+    bit-identical to its own B=1 solve (padding members included)."""
+    svc = SolverService(problem, batch=4, strategy="esrp", T=10, rtol=1e-8,
+                        fused=False)
+    for r in requests[:4]:
+        svc.submit(r)
+    svc.run()
+    for k in range(4):
+        solo = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-8,
+                               rhs=jnp.asarray(requests[k]))
+        got = np.asarray(svc.results[k].report.x)
+        assert (got == np.asarray(solo.x)).all(), k
+
+
+def test_service_failures_under_load(problem, requests):
+    """fail_every=2 lands the scenario in every second micro-batch: struck
+    batches recover (events recorded) and still converge; clean batches
+    carry no events."""
+    svc = SolverService(problem, batch=2, strategy="esrp", T=10, rtol=1e-8,
+                        scenario=[FailureEvent(15, (1,))], fail_every=2)
+    for r in requests:
+        svc.submit(r)
+    res = svc.run()
+    assert all(r.report.converged for r in res)
+    for r in res:
+        struck = r.batch_seq % 2 == 0
+        assert bool(r.report.events) == struck, r.batch_seq
+        if struck:
+            assert tuple(r.report.events[0].nodes) == (1,)
+
+
+def test_service_tracer_spans_and_report_schema(problem, requests):
+    svc = SolverService(problem, batch=2, strategy="esrp", T=10, rtol=1e-8,
+                        obs=True)
+    for r in requests[:4]:
+        svc.submit(r)
+    svc.run()
+    tr = svc.tracer
+    assert tr is not None
+    doc = chrome_trace(tr)
+    assert validate_chrome_trace(doc) == []
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert names.count("microbatch") >= 2 * 2       # B/E pairs per dispatch
+    assert names.count("request") >= 4 * 2
+    # per-member reports serialize with their placement and pass the CI gate
+    import json
+    lines = [json.dumps({"type": "solve_report",
+                         "data": svc.results[k].report.to_json()})
+             for k in range(4)]
+    assert check_report_batch_fields(lines) == []
+    bad = [json.dumps({"type": "solve_report",
+                       "data": {"schema_version": 2, "batch_index": 5,
+                                "batch_size": 2}})]
+    assert check_report_batch_fields(bad) != []
+
+
+def test_service_input_validation(problem):
+    with pytest.raises(ValueError, match="batch must be"):
+        SolverService(problem, batch=0)
+    svc = SolverService(problem, batch=2)
+    with pytest.raises(ValueError, match="rhs shape"):
+        svc.submit(np.ones(3))

@@ -121,3 +121,31 @@ def test_rollback_recounts_pushes(problem):
                                scenario=[FailureEvent(iter=40, nodes=(1,))])
     assert boundary.events[0].target_iter == 31
     assert boundary.push_count > clean.push_count
+
+
+def test_calibration_round_trip(tmp_path):
+    """A scripts/calibrate_tiers.py record overwrites the constants (with
+    measured provenance) but never the placement semantics; unknown tier
+    names are rejected."""
+    import json
+
+    from repro.core.tiers import load_calibration
+
+    doc = dict(
+        provenance=dict(host="ci", backend="cpu", date="2026-08-08"),
+        tiers={"replicated-host": dict(read_gbps=21.0, write_gbps=7.5,
+                                       latency_s=3e-5)})
+    path = tmp_path / "tiers.json"
+    path.write_text(json.dumps(doc))
+    cal = load_calibration(str(path))
+    t = cal["replicated-host"]
+    assert t.read_gbps == 21.0 and t.write_gbps == 7.5
+    assert t.latency_s == 3e-5
+    assert t.full_slab_push == REPLICATED_HOST.full_slab_push
+    assert t.provenance.startswith("measured host=ci")
+    assert REPLICATED_HOST.provenance == "placeholder"   # builtin untouched
+
+    doc["tiers"]["no-such-tier"] = doc["tiers"]["replicated-host"]
+    path.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="unknown tier"):
+        load_calibration(str(path))
