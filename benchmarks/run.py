@@ -736,25 +736,33 @@ def bench_failures(full, sharded=False, tiers=False, trace=False):
 
 def bench_serve(full, trace=False):
     """Streaming solver service: aggregate throughput + p50/p99 request
-    latency vs micro-batch width B, with failures injected under load.
+    latency vs micro-batch width B, with failures AND silent corruption
+    injected under load, plus the deadline-aware front-end columns.
 
     The request stream is identical for every width (same seed, same RHS
-    set) and ``fail_every=2`` lands a FailureEvent in every second
-    micro-batch — so exactly half the requests ride through a failure +
-    Alg. 2 recovery at *every* B (the per-request failure exposure is
-    width-invariant and the comparison is fair). Each width gets one warmup
-    pass covering both the failing and clean micro-batch compiles before
-    the timed drain.
+    set) and ``fail_every=2`` lands the scenario — a FailureEvent *and* an
+    SDCEvent — in every second micro-batch, so exactly half the requests
+    ride through a failure + Alg. 2 recovery and an SDC detect→repair at
+    *every* B (the per-request exposure is width-invariant and the
+    comparison is fair). Each width gets one warmup pass covering both the
+    failing and clean micro-batch compiles before the timed drain.
+
+    A final pass at the widest B drives the deadline-aware policy
+    (``max_queue_wait_s=0`` partial dispatches, per-request deadlines with
+    a controlled set of pre-expired requests) — its row carries the
+    queue-wait p99, deadline-miss rate, and partial-dispatch count, and the
+    miss accounting must show ZERO requests mischaracterized as failures.
 
     Writes artifacts/bench/serve.csv + BENCH_serve.json; the JSON embeds
-    the B>=8-vs-B=1 aggregate-throughput speedup (acceptance: > 2x). With
+    the B>=8-vs-B=1 aggregate-throughput speedup (acceptance: > 2x) and the
+    solver-kernel rooflines (the CI ``--min-kernels`` gate). With
     ``trace``, the widest sweep runs under an obs.Tracer and exports
     artifacts/obs/serve_trace.json + serve_metrics.txt."""
     import json
 
     import jax
     jax.config.update("jax_enable_x64", True)
-    from repro.core.failures import FailureEvent
+    from repro.core.failures import FailureEvent, SDCEvent
     from repro.serve.solver_service import SolverService
     from repro.sparse.matrices import build_problem
 
@@ -763,7 +771,8 @@ def bench_serve(full, trace=False):
     n_req = 32 if full else 16
     widths = [1, 2, 4, 8, 16] if full else [1, 2, 4, 8]
     problem = build_problem("poisson2d", n_nodes=8, nx=nx)
-    scenario = [FailureEvent(25, (1,))]
+    scenario = [FailureEvent(25, (1,)),
+                SDCEvent(iter=38, nodes=(2,), target="r")]
     rng = np.random.default_rng(11)
     reqs = rng.standard_normal((n_req, problem.part.m))
     kw = dict(strategy="esrp", T=20, phi=1, rtol=1e-8)
@@ -800,6 +809,7 @@ def bench_serve(full, trace=False):
         svc.run()
         st = svc.stats()
         st["batch"] = B
+        st["mode"] = "greedy"
         rows.append(st)
         us_per_req = st["solve_wall_s"] / st["requests"] * 1e6
         print(f"serve_B{B},{us_per_req:.0f},"
@@ -808,22 +818,60 @@ def bench_serve(full, trace=False):
               f"p99_ms={st['latency_p99_ms']:.0f};"
               f"converged={st['all_converged']}")
 
-    thr = {r["batch"]: r["throughput_rps"] for r in rows}
+    # deadline-aware pass at the widest B: partial dispatches on queue-wait
+    # timeout, generous live deadlines, and a controlled pair of pre-expired
+    # requests — the miss accounting must never read as failures
+    B = widths[-1]
+    n_expired = 2
+    svc = SolverService(problem, batch=B, scenario=scenario, fail_every=2,
+                        fused=B > 1, max_queue_wait_s=0.0, **kw)
+    for k in range(n_req):
+        svc.submit(reqs[k], deadline_s=-1.0 if k < n_expired else 600.0)
+        if (k + 1) % max(1, B // 2) == 0:   # below-width arrival bursts
+            while svc.ready():
+                svc.step()
+    svc.run()
+    st = svc.stats()
+    st["batch"] = B
+    st["mode"] = "deadline"
+    rows.append(st)
+    assert st["failed"] == 0, \
+        f"deadline misses mischaracterized as failures: {st['failed']}"
+    assert st["deadline_missed"] == n_expired, st["deadline_missed"]
+    print(f"serve_deadline_B{B},partials={st['partial_dispatches']};"
+          f"miss_rate={st['deadline_miss_rate']:.3f};"
+          f"wait_p99_ms={st['queue_wait_p99_ms']:.1f};"
+          f"failed={st['failed']}")
+
+    thr = {r["batch"]: r["throughput_rps"] for r in rows
+           if r["mode"] == "greedy"}
     wide = [b for b in thr if b >= 8]
     speedup = max(thr[b] for b in wide) / thr[1] if wide else float("nan")
-    cols = ["batch", "requests", "microbatches", "mean_fill",
+    cols = ["mode", "batch", "requests", "microbatches", "mean_fill",
             "solve_wall_s", "throughput_rps", "latency_p50_ms",
             "latency_p99_ms", "latency_mean_ms", "queue_wait_p50_ms",
-            "iters_total", "all_converged"]
+            "queue_wait_p99_ms", "deadline_miss_rate", "partial_dispatches",
+            "retries_total", "failed", "iters_total", "all_converged"]
     with open("artifacts/bench/serve.csv", "w") as f:
         f.write(",".join(cols) + "\n")
         for r in rows:
             f.write(",".join(str(r[c]) for c in cols) + "\n")
+    from repro.obs import solver_rooflines
     with open("artifacts/bench/BENCH_serve.json", "w") as f:
         json.dump(dict(
             bench="serve", problem="poisson2d", nx=nx, n_nodes=8,
-            requests=n_req, fail_every=2, scenario_iter=25,
+            requests=n_req, fail_every=2, scenario_iter=25, sdc_iter=38,
             rows=rows,
+            deadline=dict(batch=B, expired_submitted=n_expired,
+                          deadline_missed=st["deadline_missed"],
+                          deadline_miss_rate=st["deadline_miss_rate"],
+                          partial_dispatches=st["partial_dispatches"],
+                          queue_wait_p99_ms=st["queue_wait_p99_ms"],
+                          failed=st["failed"]),
+            # solver-kernel FLOP/byte attribution (repro.obs.rooflines) —
+            # the CI validator prices these with --min-kernels
+            rooflines=solver_rooflines(problem.solver_ops("auto"),
+                                       problem.b),
             speedup_b8_vs_b1=speedup,
             criteria=dict(metric="aggregate throughput at B>=8 vs B=1 "
                                  "sequential", threshold=2.0,

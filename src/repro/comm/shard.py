@@ -861,10 +861,17 @@ class ShardedFailureRuntime:
         st = st._replace(rq=rq)
         if not isinstance(st.q_sums, tuple):
             # per-holder checksums of the physical copies ride along with the
-            # host-visible q checksums (same push-time write protocol)
-            st = st._replace(rq_sums=jax.device_put(
-                jnp.zeros((3, self.n), self.problem.b.dtype),
-                NamedSharding(self.mesh, P(None, "nodes"))))
+            # host-visible q checksums (same push-time write protocol);
+            # batched entries checksum per member: (3, B, n)
+            if self.batch:
+                st = st._replace(rq_sums=jax.device_put(
+                    jnp.zeros((3, self.batch, self.n),
+                              self.problem.b.dtype),
+                    NamedSharding(self.mesh, P(None, None, "nodes"))))
+            else:
+                st = st._replace(rq_sums=jax.device_put(
+                    jnp.zeros((3, self.n), self.problem.b.dtype),
+                    NamedSharding(self.mesh, P(None, "nodes"))))
         return st
 
     def _dead(self, failed) -> jnp.ndarray:
@@ -897,12 +904,19 @@ class ShardedFailureRuntime:
             # always three from the end
             st = st._replace(rq=self._zero(st.rq, dead, st.rq.ndim - 3))
         # keep checksums consistent with the zeroed copies (sum of zeros = 0)
-        # so the wipe itself never reads as queue corruption
-        col = jnp.asarray(self._dead(failed))[None, :]
-        if not isinstance(st.q_sums, tuple) and st.q_sums.shape[1] == self.n:
-            st = st._replace(q_sums=jnp.where(col, 0, st.q_sums))
+        # so the wipe itself never reads as queue corruption; the dead-holder
+        # column broadcasts over every leading axis ((3, n), (3, B, n), and
+        # per-slab (3, ..., n_slabs) layouts alike — the latter only when the
+        # slab count equals the node count, hence the shape guard)
+        def _wipe_col(sums):
+            col = jnp.asarray(self._dead(failed)).reshape(
+                (1,) * (sums.ndim - 1) + (-1,))
+            return jnp.where(col, 0, sums)
+        if not isinstance(st.q_sums, tuple) \
+                and st.q_sums.shape[-1] == self.n:
+            st = st._replace(q_sums=_wipe_col(st.q_sums))
         if not isinstance(st.rq_sums, tuple):
-            st = st._replace(rq_sums=jnp.where(col, 0, st.rq_sums))
+            st = st._replace(rq_sums=_wipe_col(st.rq_sums))
         return st
 
     def lose_live(self, st, failed):
@@ -935,9 +949,17 @@ class ShardedFailureRuntime:
             return np.ones(self.n, bool)
         ok = np.ones(self.n, bool)
         for slot in sorted({int(s) for s in slots}):
-            actual = np.asarray(jax.device_get(st.rq[slot]).sum(axis=(1, 2)))
+            # (n, w, bn) or batched (B, n, w, bn): reduce the tile axes,
+            # leaving per-holder (or per-member-per-holder) sums
+            actual = np.asarray(
+                jax.device_get(st.rq[slot]).sum(axis=(-2, -1)))
             ref = np.asarray(jax.device_get(st.rq_sums[slot]))
-            ok &= np.abs(actual - ref) <= 1e-9 * (np.abs(ref) + 1.0)
+            good = np.abs(actual - ref) <= 1e-9 * (np.abs(ref) + 1.0)
+            if good.ndim == 2:
+                # a holder is usable only if EVERY member's copy verifies —
+                # Alg. 2 assembles the whole batch from one source choice
+                good = good.all(axis=0)
+            ok &= good
         return ok
 
     def _valid_sources(self, read_tag: int) -> np.ndarray:

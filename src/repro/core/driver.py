@@ -50,7 +50,9 @@ from repro.sparse.matrices import Problem
 # bump on any field rename/removal so downstream BENCH consumers can branch.
 # v2: SolveReport gained batch_index/batch_size (batched solves emit one
 # report per member).
-REPORT_SCHEMA_VERSION = 2
+# v3: SolveReport gained deadline_missed/retries (annotated by the serving
+# front-end) and final_n_nodes became required for report validation.
+REPORT_SCHEMA_VERSION = 3
 
 
 def _tspan(tr: Optional[Tracer], name: str, cat: str = "solver", **args):
@@ -144,6 +146,13 @@ class SolveReport:
     batch_index: int = 0         # this member's row in the batched solve
     batch_size: int = 1          # members the dispatch advanced together
     #                              (1 = plain unbatched solve)
+    deadline_missed: bool = False   # serving front-end: the request's
+    #                              per-request deadline expired before this
+    #                              solve completed (the result may still be
+    #                              numerically valid — see solver_service)
+    retries: int = 0             # serving front-end: dispatch attempts the
+    #                              micro-batch burned on unsurvivable events
+    #                              before this solve succeeded
     x: Optional[object] = dataclasses.field(default=None, repr=False)
     #                              final iterate (device array) — lets parity
     #                              tests assert bit-identical rejoin; rel/
@@ -208,6 +217,15 @@ def solve_resilient(
     sdc_policy: Optional[sdc.SDCPolicy] = None,   # enable the invariant
     #                                    checks (auto-enabled with defaults
     #                                    when the scenario holds an SDCEvent)
+    sdc_on_device: bool = True,        # fold the invariant recomputation
+    #                                    into the chunk tail on-device
+    #                                    (esrp.run_chunk's halt guard):
+    #                                    chunks no longer clamp to check
+    #                                    boundaries and detection latency
+    #                                    stays bounded by check_every even
+    #                                    for long chunks. False restores the
+    #                                    host-side between-chunk checks
+    #                                    (every boundary forces a readback)
     storage_tier="device-neighbour",   # core.tiers name or StorageTier: the
     #                                    redundancy-queue placement cost model
     elastic: bool = False,             # no replacement nodes: after each
@@ -248,28 +266,19 @@ def solve_resilient(
     if rhs_arr is not None and rhs_arr.shape[-1] != part.m:
         raise ValueError(
             f"rhs row length {rhs_arr.shape[-1]} != problem size {part.m}")
-    if batched:
-        if scenario is not None and any(isinstance(e, SDCEvent)
-                                        for e in pending) or \
-                sdc_policy is not None:
-            raise ValueError(
-                "batched solves do not support SDC detection/repair — the "
-                "invariant checks and queue checksums are unbatched")
-        if elastic:
-            raise ValueError(
-                "batched solves do not support elastic shrunk-mesh recovery")
-        if rr_every:
-            # numeric_step's replacement branch is batch-polymorphic only
-            # through ops.dot; the batched bundles always provide one, but
-            # the trajectory-identity tests do not cover rr — keep it off
-            raise ValueError("batched solves do not support rr_every yet")
     if failure_runtime is not None \
             and getattr(failure_runtime, "batch", 0) != nbatch:
+        rt_batch = getattr(failure_runtime, "batch", 0)
+        if nbatch:
+            hint = (f"construct ShardedFailureRuntime(problem, mesh, "
+                    f"batch={nbatch}) to match the (B, M) rhs")
+        else:
+            hint = ("this solve is unbatched — construct "
+                    "ShardedFailureRuntime(problem, mesh) and leave the "
+                    "batch parameter at its default 0")
         raise ValueError(
-            f"failure_runtime was built for batch="
-            f"{getattr(failure_runtime, 'batch', 0)} but this solve has "
-            f"batch={nbatch} — construct ShardedFailureRuntime(problem, "
-            f"mesh, batch=B) to match the (B, M) rhs")
+            f"failure_runtime was built for batch={rt_batch} but this "
+            f"solve has batch={nbatch} — {hint}")
     sdc_events = [e for e in pending if isinstance(e, SDCEvent)]
     if sdc_events or sdc_policy is not None:
         if strategy not in ("esrp", "none"):
@@ -291,6 +300,10 @@ def solve_resilient(
         if sdc_policy is None:
             sdc_policy = sdc.SDCPolicy()
     sdc_on = sdc_policy is not None
+    # on-device guard mode: the chunk runner verifies the invariants at
+    # every check boundary inside the scan and halts on a violation; the
+    # host only confirms + localizes at the halted state (sdc.run_checks)
+    sdc_guard = sdc_on and sdc_on_device
     # per-push queue checksums: written at push time, compared at check and
     # read time (only meaningful when something both stores and checks)
     qsum_slabs = part.n_nodes if (sdc_on and strategy == "esrp") else 0
@@ -371,12 +384,15 @@ def solve_resilient(
         st = esrp.esrp_init(matvec, precond, b, dot=dot, n_slabs=qsum_slabs)
         if failure_runtime is not None:
             st = failure_runtime.init_queue(st)
-        run = lambda s, n: esrp.run_chunk(s, ops, T, n, thresh_dev,
-                                          rr_every, gated, b, push, mtr)
+        run_chk = lambda s, n, chk: esrp.run_chunk(
+            s, ops, T, n, thresh_dev, rr_every, gated, b, push, mtr, chk)
+        run = lambda s, n: run_chk(s, n, sdc_policy if sdc_guard else None)
     elif strategy == "none":
         st = esrp.esrp_init(matvec, precond, b, dot=dot)  # T=max: no stores
-        run = lambda s, n: esrp.run_chunk(s, ops, 1 << 30, n, thresh_dev,
-                                          rr_every, gated, b, None, mtr)
+        run_chk = lambda s, n, chk: esrp.run_chunk(
+            s, ops, 1 << 30, n, thresh_dev, rr_every, gated, b, None, mtr,
+            chk)
+        run = lambda s, n: run_chk(s, n, sdc_policy if sdc_guard else None)
     else:
         raise ValueError(strategy)
 
@@ -423,11 +439,18 @@ def solve_resilient(
     # re-happen) — the tier push accounting replays the storage schedule
     # over them after the run
     push_ranges: list[tuple[int, int]] = []
-    # one chunk's norm record kept in flight: (device norms, start
-    # iteration, dispatched length). Readback (the host sync) happens only
-    # after the *next* chunk has been dispatched, so device compute and host
-    # bookkeeping overlap.
-    inflight: Optional[tuple[jax.Array, int, int]] = None
+    # one chunk's norm record kept in flight: (device record, start
+    # iteration, dispatched length, guard armed?). Readback (the host sync)
+    # happens only after the *next* chunk has been dispatched, so device
+    # compute and host bookkeeping overlap.
+    inflight: Optional[tuple] = None
+    # iteration count the on-device SDC guard halted at (-1 = no halt
+    # pending); set by settle(), consumed by the main loop's check handler
+    halt_iter = -1
+    # armed when the device guard halted but the host check found nothing
+    # (threshold-edge disagreement): the next dispatch steps one iteration
+    # guard-free so the run cannot spin on the same boundary
+    guard_skip = False
 
     def settle(entry) -> bool:
         """Block on one chunk's norm record; True iff it converged. The
@@ -438,12 +461,29 @@ def solve_resilient(
         With obs on the record also carries the chunk's metrics-ring rows
         (same readback, zero extra dispatches): rows past the executed
         count repeated the frozen carry and are trimmed before they land in
-        the tracer's iteration history."""
-        nonlocal total_iters, converged
-        record, base, n_disp = entry
-        norms_d, aux_d = record if mtr else (record, None)
+        the tracer's iteration history.
+
+        With the on-device SDC guard armed the record also carries the
+        per-iteration halted flags: halted[i] = True means iteration
+        base + i did NOT execute — the chunk froze at check boundary
+        base + i with a violated invariant, and the live ``st`` is exactly
+        the state entering it. The first halt index lands in ``halt_iter``
+        (set-once: a chunk dispatched from an already-halted state re-halts
+        at its own iteration 0 and must not overwrite the real boundary)."""
+        nonlocal total_iters, converged, halt_iter
+        record, base, n_disp, guarded = entry
+        halt_d = None
+        if guarded:
+            (norms_d, aux_d, halt_d) = record if mtr else \
+                (record[0], None, record[1])
+        else:
+            norms_d, aux_d = record if mtr else (record, None)
         with _tspan(tr, "chunk_settle", base=base, n=n_disp):
             norms = np.asarray(norms_d)
+            h_rel = -1
+            if halt_d is not None:
+                hidx = np.nonzero(np.asarray(halt_d))[0]
+                h_rel = int(hidx[0]) if hidx.size else -1
             if batched:
                 # norms is (n_disp, B): the chunk is done when EVERY member
                 # is below its own threshold; individual crossings are
@@ -459,8 +499,16 @@ def solve_resilient(
                             conv_iter[k] = base + int(idx[0]) + 1
             else:
                 hit = _find_convergence(norms, thresh)
+            if h_rel >= 0:
+                # the guard skips once every member converged, so a halt
+                # precludes an earlier full-convergence hit; rows from the
+                # halt on are passthrough
+                hit = -1
+                if halt_iter < 0:
+                    halt_iter = base + h_rel
             # iterations past a convergence hit ran frozen — no pushes
-            executed = hit + 1 if hit >= 0 else n_disp
+            executed = (h_rel if h_rel >= 0
+                        else hit + 1 if hit >= 0 else n_disp)
             push_ranges.append((base, base + executed))
             if hit >= 0:
                 total_iters = base + hit + 1
@@ -538,20 +586,34 @@ def solve_resilient(
         n = chunk
         if pending:
             n = min(n, pending[0].iter - total_iters)
-        if sdc_on:
-            # land exactly on every invariant-check boundary: the cadence,
-            # plus (ESRP) every storage iteration — state must be verified
-            # clean BEFORE it is committed to the queue/stars, or a later
-            # rollback would faithfully restore corrupted copies
+        if sdc_on and not sdc_guard:
+            # host-side checks: land exactly on every invariant-check
+            # boundary — the cadence, plus (ESRP) every storage iteration —
+            # state must be verified clean BEFORE it is committed to the
+            # queue/stars, or a later rollback would faithfully restore
+            # corrupted copies. (The on-device guard verifies the same
+            # boundaries inside the scan — before each boundary iteration's
+            # prelude — so guard mode dispatches full chunks.)
             n = min(n, _next_sdc_boundary(
                 total_iters, sdc_policy.check_every, T,
                 strategy == "esrp") - total_iters)
         entry = None
-        if n > 0:
+        if guard_skip and n > 0:
+            # device/host disagreement escape hatch: the guard halted but
+            # the authoritative host check found nothing — step exactly one
+            # iteration guard-free to move past the boundary
+            with _tspan(tr, "chunk_dispatch", base=total_iters, n=1,
+                        guard_skip=True):
+                st, record = run_chk(st, 1, None)
+            run_calls += 1
+            entry = (record, total_iters, 1, False)
+            total_iters += 1
+            guard_skip = False
+        elif n > 0:
             with _tspan(tr, "chunk_dispatch", base=total_iters, n=n):
                 st, record = run(st, n)          # async dispatch
             run_calls += 1
-            entry = (record, total_iters, n)
+            entry = (record, total_iters, n, sdc_guard)
             total_iters += n
 
         if inflight is not None:
@@ -560,8 +622,17 @@ def solve_resilient(
                 break                            # entry (if any) discarded:
                 #                                  the state is frozen past
                 #                                  convergence by construction
-        at_fail = bool(pending) and total_iters == pending[0].iter
-        at_check = (sdc_on and not at_fail and total_iters > 0
+        if halt_iter >= 0 and entry is not None:
+            # the previous chunk halted at a check boundary, so this chunk
+            # was dispatched from the frozen halted state: its guard
+            # re-fired on entry and zero iterations executed — settle and
+            # discard it (set-once halt_iter keeps the real boundary)
+            settle(entry)
+            entry = None
+        at_fail = (halt_iter < 0 and bool(pending)
+                   and total_iters == pending[0].iter)
+        at_check = (halt_iter < 0 and sdc_on and not sdc_guard and not at_fail
+                    and total_iters > 0
                     and _at_sdc_boundary(total_iters, sdc_policy.check_every,
                                          T, strategy == "esrp"))
         if entry is not None:
@@ -570,6 +641,16 @@ def solve_resilient(
                     break
             else:
                 inflight = entry                 # overlap with next dispatch
+        from_halt = halt_iter >= 0
+        if from_halt:
+            # roll the count back to the halted boundary (== st.pcg.j); the
+            # authoritative host check below localizes and repairs there.
+            # A pending fail event is never at the halt (chunks clamp to
+            # event iterations, and the halt lands strictly inside a chunk)
+            total_iters = halt_iter
+            halt_iter = -1
+            at_fail = False
+            at_check = True
         if total_iters >= max_iters:
             break
 
@@ -588,9 +669,18 @@ def solve_resilient(
                 with _tspan(tr, "event:sdc-inject", cat="event",
                             iter=ev.iter, nodes=list(ev.nodes),
                             target=ev.target):
+                    # already-converged members are shielded: their B=1
+                    # reference runs ended before the corruption struck, so
+                    # neither the injected flip nor the injection
+                    # iteration's step may disturb their frozen state
+                    st_pre = st if batched else None
+                    done_pre = (_vec_norm(st.pcg.r) < thresh_dev) \
+                        if batched else None
                     st = _inject_sdc(problem, st, ev,
                                      T if strategy == "esrp" else (1 << 30),
                                      ops, b, resume_rr, gated, push)
+                    if batched:
+                        st = esrp.member_select(st_pre, st, done_pre)
                 total_iters = int(st.pcg.j)
                 push_ranges.append((ev.iter, ev.iter + 1))
                 sdc_wait.append((ev.iter, ev.target))
@@ -674,13 +764,27 @@ def solve_resilient(
                             part = problem.part
                             st = elastic_mod.remap_state(st, part.m,
                                                          part.n_nodes)
-                            ops = problem.solver_ops(backend)
+                            ops = problem.solver_ops(
+                                backend, batch=nbatch,
+                                fused=batched and batch_fused)
                             matvec, precond = ops.matvec, ops.precond
                             dot = getattr(ops, "dot", None)
-                            b = problem.b
+                            # the solved RHS (incl. any rhs= override and the
+                            # batched (B, M) rows) extends with the same
+                            # decoupled-identity zero padding as the state —
+                            # NOT problem.b, which would drop the override
+                            b = elastic_mod._extend(b, part.m)
                             bnorm = float(jnp.linalg.norm(b))
-                            thresh_dev = jnp.asarray(rtol * bnorm, b.dtype)
-                            thresh = float(thresh_dev)
+                            if batched:
+                                bnorm_v = _vec_norm(b)
+                                thresh_dev = jnp.where(
+                                    bnorm_v > 0, rtol * bnorm_v,
+                                    jnp.inf).astype(b.dtype)
+                                thresh = np.asarray(thresh_dev)
+                            else:
+                                thresh_dev = jnp.asarray(rtol * bnorm,
+                                                         b.dtype)
+                                thresh = float(thresh_dev)
                             plan = shrink_plan(plan, problem.a, part)
                             per_push = tier.push_bytes(plan, part.m, itemsize)
                             if qsum_slabs:
@@ -703,10 +807,19 @@ def solve_resilient(
         if at_check:
             sdc_checks += 1
             with _tspan(tr, "sdc_check", cat="sdc",
-                        iter=total_iters) as ck_sp:
-                det = sdc.run_checks(ops, st, b, part, bnorm, sdc_policy)
+                        iter=total_iters, from_halt=from_halt) as ck_sp:
+                # converged members are excluded from detection: their B=1
+                # reference runs already ended, so nothing about them may
+                # fire a repair (zero-RHS padding is excluded inside
+                # run_checks itself)
+                live = (~(np.asarray(_vec_norm(st.pcg.r)) < thresh)
+                        if batched else None)
+                det = sdc.run_checks(ops, st, b, part, bnorm, sdc_policy,
+                                     live=live)
                 if ck_sp is not None:
                     ck_sp.args["fired"] = det is not None
+            if det is None and from_halt:
+                guard_skip = True
             if det is not None:
                 sdc_repairs += 1
                 if sdc_repairs > sdc_policy.max_repairs:
@@ -742,6 +855,13 @@ def solve_resilient(
                 with _tspan(tr, "event:sdc-repair", cat="event", iter=J,
                             detector=det.detector,
                             nodes=list(det.flagged)) as rp_sp:
+                    # converged members are shielded from the rollback
+                    # (their reference runs ended before this repair);
+                    # queue invalidation is shared bookkeeping (slot axis)
+                    # and needs no per-member select
+                    st_pre = st if batched else None
+                    done_pre = (_vec_norm(st.pcg.r) < thresh_dev) \
+                        if batched else None
                     if want_q:
                         # the corrupted copies ARE the redundancy — nothing
                         # can rebuild them; invalidate their slot so no
@@ -766,13 +886,16 @@ def solve_resilient(
                          ev_src) = _esrp_failure(
                             problem, plan, st, list(det.flagged), T, ops,
                             pff_precond, fruntime=failure_runtime, push=push,
-                            sdc_mode=True, n_slabs=qsum_slabs, tracer=tr)
+                            sdc_mode=True, n_slabs=qsum_slabs, b=b,
+                            tracer=tr)
                         inner_rel = ev_inner
                         if target >= 0:
                             ev_fetch = tier.fetch_bytes(
-                                len(det.flagged) * part.rows_per_node,
-                                itemsize)
+                                max(1, nbatch) * len(det.flagged) *
+                                part.rows_per_node, itemsize)
                             ev_fetch_s = tier.read_s(ev_fetch)
+                    if batched and not want_q:
+                        st = esrp.member_select(st_pre, st, done_pre)
                     recovery_s += rec_t
                     wasted += ev_wasted
                     if tr is not None:
@@ -809,6 +932,12 @@ def solve_resilient(
     push_count = 0
     if strategy == "esrp" and plan is not None:
         push_count = _count_pushes(push_ranges, T)
+    if sdc_guard:
+        # the guard evaluated one on-device check at every boundary the
+        # executed stretches crossed; host confirmations (halts, post-inject
+        # checks) were counted live into sdc_checks above
+        sdc_checks += _count_checks(push_ranges, sdc_policy.check_every, T,
+                                    strategy == "esrp")
     common = dict(
         strategy=strategy, T=T, phi=phi, runtime_s=runtime,
         recovery_s=recovery_s, wasted_iters=wasted, target_iter=target,
@@ -904,6 +1033,20 @@ def _count_pushes(ranges: list[tuple[int, int]], T: int) -> int:
     for base, end in ranges:
         for j in range(base, end):
             if j > 2 and (T == 1 or j % T == 0 or (j - 1) % T == 0):
+                c += 1
+    return c
+
+
+def _count_checks(ranges: list[tuple[int, int]], check_every: int, T: int,
+                  esrp_storage: bool) -> int:
+    """Replay the invariant-check boundaries the on-device guard evaluated
+    over the executed iteration stretches (guard mode runs the checks inside
+    the scan, so the host loop never sees them — this recovers the
+    ``sdc_checks`` accounting host mode counts directly)."""
+    c = 0
+    for base, end in ranges:
+        for j in range(base, end):
+            if j > 0 and _at_sdc_boundary(j, check_every, T, esrp_storage):
                 c += 1
     return c
 
@@ -1123,17 +1266,20 @@ def _esrp_failure(problem: Problem, plan: RedundancyPlan, st: esrp.ESRPState,
         x_s=x, r_s=r, z_s=z, p_s=p, beta_s=beta_prev, rz_s=rz,
         star_tag=jnp.asarray(target, jnp.int32))
     if not isinstance(st.q_sums, tuple):
-        nsl = st.q_sums.shape[1]
+        nsl = st.q_sums.shape[-1]
         # failed slabs were rebuilt (their content is fresh — recompute);
         # surviving slabs keep their STORED push-time checksums, so a copy
         # corrupted before this event keeps failing its checksum after the
-        # restack instead of being laundered into a consistent one
+        # restack instead of being laundered into a consistent one.
+        # Batched: the per-member (B, nsl) rows broadcast against the
+        # (nsl,) failed-slab mask — the failed node set is shared across
+        # members (one event strikes every member's rows)
         fmask = jnp.zeros((nsl,), bool).at[jnp.asarray(failed)].set(True)
         st2 = st2._replace(q_sums=jnp.stack([
-            jnp.zeros((nsl,), st.q_sums.dtype),
-            jnp.where(fmask, p_prev.reshape(nsl, -1).sum(axis=1),
+            jnp.zeros_like(st.q_sums[0]),
+            jnp.where(fmask, sdc.slab_sums(p_prev, nsl),
                       st.q_sums[prev_slot]),
-            jnp.where(fmask, p_curr.reshape(nsl, -1).sum(axis=1),
+            jnp.where(fmask, sdc.slab_sums(p_curr, nsl),
                       st.q_sums[curr_slot])]))
     if fruntime is not None:
         # survivors keep their physical copies; the replacement's shard

@@ -90,9 +90,11 @@ def shrink_problem(problem: Problem, n_new: int) -> Problem:
 
 
 def _extend(v: jnp.ndarray, m_new: int) -> jnp.ndarray:
-    if v.ndim == 1:
-        return jnp.zeros((m_new,), v.dtype).at[:v.shape[0]].set(v)
-    return jnp.zeros((v.shape[0], m_new), v.dtype).at[:, :v.shape[1]].set(v)
+    """Zero-pad the trailing (row) axis to ``m_new``, preserving any leading
+    axes — (M,), (B, M), (3, M) queue stacks, and (3, B, M) batched stacks
+    all extend the same way."""
+    return (jnp.zeros(v.shape[:-1] + (m_new,), v.dtype)
+            .at[..., :v.shape[-1]].set(v))
 
 
 def remap_state(st, m_new: int, n_slabs: int):
@@ -109,8 +111,9 @@ def remap_state(st, m_new: int, n_slabs: int):
                      x_s=_extend(st.x_s, m_new), r_s=_extend(st.r_s, m_new),
                      z_s=_extend(st.z_s, m_new), p_s=_extend(st.p_s, m_new))
     if not isinstance(st.q_sums, tuple):
-        sums = st.q.reshape(3, n_slabs, -1).sum(axis=2)
+        sums = st.q.reshape(st.q.shape[:-1] + (n_slabs, -1)).sum(axis=-1)
         # empty slots keep checksum 0 (their content is all-zero anyway)
-        st = st._replace(q_sums=jnp.where((st.q_tags >= 0)[:, None], sums,
+        valid = (st.q_tags >= 0).reshape((3,) + (1,) * (sums.ndim - 1))
+        st = st._replace(q_sums=jnp.where(valid, sums,
                                           jnp.zeros_like(sums)))
     return st

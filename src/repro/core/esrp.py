@@ -40,7 +40,8 @@ import jax.numpy as jnp
 from repro.core.ops import SolverOps
 from repro.core.pcg import (METRIC_FIELDS, PCGState, _vec_norm, freeze_pcg,
                             iteration_metrics, pcg_init, pcg_iterate_ops,
-                            scan_with_convergence_freeze)
+                            scan_with_convergence_freeze,
+                            scan_with_halt_guard)
 
 
 class ESRPState(NamedTuple):
@@ -89,7 +90,10 @@ def esrp_init(matvec, precond, b: jax.Array,
         beta_s=jnp.zeros(b.shape[:-1], b.dtype),
         rz_s=jnp.zeros(b.shape[:-1], b.dtype),
         star_tag=jnp.full((), -1, jnp.int32),
-        q_sums=(jnp.zeros((3, n_slabs), b.dtype) if n_slabs > 0 else ()))
+        # checksum rows follow the batch layout of b: (3, n_slabs) for (M,)
+        # rhs, (3, B, n_slabs) for (B, M) — one slab-sum row per member
+        q_sums=(jnp.zeros((3,) + b.shape[:-1] + (n_slabs,), b.dtype)
+                if n_slabs > 0 else ()))
 
 
 def storage_flags(j: jax.Array, T: int):
@@ -248,12 +252,12 @@ def esrp_step(st: ESRPState, ops: SolverOps, T: int,
     return st._replace(pcg=numeric_step(st.pcg, ops, b, rr_every, gated))
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6, 8, 9))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6, 8, 9, 10))
 def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
               thresh: jax.Array | None = None,
               rr_every: int = 0, gated: bool = True,
               b: jax.Array | None = None, push=None,
-              metrics: bool = False):
+              metrics: bool = False, sdc_check=None):
     """Run n_iters ESRP iterations, recording ||r|| after each (the paper
     checks convergence every iteration; the driver scans the record).
 
@@ -270,6 +274,17 @@ def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
     storage flags + the post-iteration rz / orthogonality residual), read
     back together with the norm record. metrics=False compiles to exactly
     the pre-telemetry jaxpr (tested).
+
+    ``sdc_check`` (static, a hashable ``sdc.SDCPolicy``) arms the on-device
+    invariant guard: at every check boundary (the cadence, plus every
+    storage iteration — the check-before-store protocol) the entering state
+    is verified by ``sdc.device_violation`` inside the scan; a violation
+    halts the chunk *at* that boundary, before the boundary iteration's
+    storage prelude could commit corrupted state. The record gains a
+    per-iteration halted flag ((norms, halted) / (norms, aux, halted)) and
+    detection latency is bounded by the check cadence regardless of chunk
+    length. sdc_check=None keeps the exact guard-free scan (the
+    jaxpr-identity tests compare against this path).
     """
 
     def step(s):
@@ -284,9 +299,32 @@ def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
     aux0 = (jnp.zeros((len(METRIC_FIELDS),) + st.pcg.rz.shape,
                       st.pcg.rz.dtype) if metrics else None)
     batched = st.pcg.x.ndim == 2
-    return scan_with_convergence_freeze(
+    freeze = member_select if batched else None
+    if sdc_check is None:
+        return scan_with_convergence_freeze(
+            st, step, _vec_norm(st.pcg.r), n_iters, thresh, aux0,
+            freeze=freeze)
+
+    from repro.core import sdc as sdc_mod
+
+    def guard(s, rnorm):
+        j = s.pcg.j
+        at = (j > 0) & (j % sdc_check.check_every == 0)
+        if T < (1 << 29):
+            # ESRP storage iterations are check boundaries too (the driver's
+            # check-before-store protocol); the "none" runner's T = 1 << 30
+            # sentinel stores nothing, so only the cadence applies there
+            at = at | ((j > 2) & ((j % T == 0) | ((j - 1) % T == 0)))
+        th = -jnp.inf if thresh is None else thresh
+        return jax.lax.cond(
+            at,
+            lambda: sdc_mod.device_violation(ops, s, b, th, sdc_check,
+                                             rnorm=rnorm),
+            lambda: jnp.zeros((), bool))
+
+    return scan_with_halt_guard(
         st, step, _vec_norm(st.pcg.r), n_iters, thresh, aux0,
-        freeze=member_select if batched else None)
+        freeze=freeze, guard=guard)
 
 
 def recovery_point(st: ESRPState, T: int):

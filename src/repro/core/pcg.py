@@ -236,6 +236,75 @@ def scan_with_convergence_freeze(st, step: Callable, rnorm0: jax.Array,
     return st, norms
 
 
+def scan_with_halt_guard(st, step: Callable, rnorm0: jax.Array,
+                         n_iters: int,
+                         thresh: jax.Array | None,
+                         aux0: jax.Array | None = None,
+                         freeze: Callable | None = None,
+                         guard: Callable | None = None):
+    """``scan_with_convergence_freeze`` plus an on-device *halt guard*: before
+    each iteration executes, ``guard(state, ||r||)`` is evaluated on the
+    entering state; once it fires the remaining iterations of the chunk pass
+    the state through untouched. This is how the SDC invariants ride inside
+    the chunk (ROADMAP: detection latency bounded by ``check_every`` even
+    when chunks are long): the guard fires at a check boundary, the chunk
+    freezes *at* that boundary — before the boundary iteration's storage
+    prelude can commit corrupted state — and the host runs the authoritative
+    localization on the returned state.
+
+    The record gains a per-iteration halted flag: ``halted[i] = True`` means
+    iteration i did NOT execute (the state returned is the state entering
+    it). Convergence/freeze semantics are identical to
+    ``scan_with_convergence_freeze`` — a fired guard simply acts like
+    all-members-converged from that iteration on.
+    """
+    batched = thresh is not None and getattr(rnorm0, "ndim", 0) > 0
+    if batched and freeze is None:
+        raise ValueError("batched convergence freeze needs the per-member "
+                         "freeze(old, new, done) callback")
+    if guard is None:
+        raise ValueError("scan_with_halt_guard needs a guard callback")
+    h0 = jnp.zeros((), bool)
+
+    def all_done(rnorm):
+        if thresh is None:
+            return jnp.zeros((), bool)
+        return jnp.all(rnorm < thresh) if batched else rnorm < thresh
+
+    def body(carry, _):
+        s, rnorm, aux, halted = carry
+        # once halted (j pinned at the boundary) or fully converged the guard
+        # is skipped — the remaining iterations are pure passthrough
+        halted = halted | jax.lax.cond(
+            halted | all_done(rnorm), lambda: jnp.zeros((), bool),
+            lambda: guard(s, rnorm))
+
+        def advance(c):
+            s, rnorm, aux, halted = c
+            if aux is None:
+                s2, rn2 = step(s)
+                aux2 = None
+            else:
+                s2, rn2, aux2 = step(s)
+            if batched:
+                done = rnorm < thresh
+                s2 = freeze(s, s2, done)
+                rn2 = jnp.where(done, rnorm, rn2)
+                if aux is not None:
+                    aux2 = jnp.where(done[None, :], aux, aux2)
+            return (s2, rn2, aux2, halted)
+
+        carry = jax.lax.cond(halted | all_done(rnorm), lambda c: c,
+                             advance, (s, rnorm, aux, halted))
+        rec = ((carry[1], carry[3]) if aux0 is None
+               else (carry[1], carry[2], carry[3]))
+        return carry, rec
+
+    (st, _, _, _), record = jax.lax.scan(
+        body, (st, rnorm0, aux0, h0), None, length=n_iters)
+    return st, record
+
+
 @functools.partial(jax.jit, static_argnums=(0, 1, 3, 4))
 def run_pcg(matvec: Callable, precond: Callable, b: jax.Array,
             rtol: float = 1e-8, max_iters: int = 100_000,

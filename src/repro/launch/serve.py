@@ -61,17 +61,27 @@ def run_solver(args):
     svc = SolverService(problem, batch=args.batch, strategy=args.strategy,
                         T=args.T, phi=args.phi, rtol=args.rtol,
                         backend=args.backend, scenario=scenario,
-                        fail_every=args.fail_every, obs=tracer)
+                        fail_every=args.fail_every, obs=tracer,
+                        max_queue_wait_s=args.max_queue_wait,
+                        max_retries=args.max_retries,
+                        degrade=args.degrade)
     rng = np.random.default_rng(args.seed)
-    for _ in range(args.requests):
-        svc.submit(rng.standard_normal(problem.part.m))
     print(f"[serve] solver service: {args.requests} requests over "
           f"{args.problem} n={problem.part.m} (B={args.batch}, "
           f"strategy={args.strategy}"
           + (f", failures@{args.fail_at} every {args.fail_every} "
              f"micro-batches" if scenario else "") + ")")
     t0 = time.time()
-    svc.run()
+    for _ in range(args.requests):
+        svc.submit(rng.standard_normal(problem.part.m),
+                   deadline_s=args.deadline)
+        if args.arrival_every:
+            # staggered arrivals: the queue-wait bound decides when a
+            # partial micro-batch beats waiting for fill
+            time.sleep(args.arrival_every)
+        while svc.ready():
+            svc.step()
+    svc.run()                                  # drain the tail
     wall = time.time() - t0
     st = svc.stats()
     print(f"[serve] {st['requests']} served in {wall:.2f}s "
@@ -79,6 +89,14 @@ def run_solver(args):
           f"{st['latency_p50_ms']:.0f} ms p99 {st['latency_p99_ms']:.0f} ms "
           f"| {st['microbatches']} micro-batches, mean fill "
           f"{st['mean_fill']:.1f}, all_converged={st['all_converged']}")
+    if args.max_queue_wait is not None or args.deadline is not None \
+            or args.max_retries or args.degrade:
+        print(f"[serve] deadline policy: queue-wait p99 "
+              f"{st['queue_wait_p99_ms']:.0f} ms | deadline-miss rate "
+              f"{st['deadline_miss_rate']:.3f} ({st['deadline_missed']} "
+              f"missed) | {st['partial_dispatches']} partial dispatches | "
+              f"{st['retries_total']} retries, {st['failed']} failed | "
+              f"serving on {st['final_n_nodes']} nodes")
     if tracer is not None:
         _write_trace(tracer, args.metrics_out)
     return st
@@ -176,6 +194,24 @@ def main():
                     help="comma-separated node ids for --fail-at")
     ap.add_argument("--fail-every", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    # deadline-aware front-end
+    ap.add_argument("--max-queue-wait", type=float, default=None,
+                    metavar="S",
+                    help="dispatch a partial micro-batch once the oldest "
+                         "queued request has waited this long (None = "
+                         "greedy dispatch)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-request deadline in seconds; expired requests "
+                         "end deadline_missed instead of blocking")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="retries (with backoff) for a micro-batch whose "
+                         "solve dies on an unsurvivable event")
+    ap.add_argument("--degrade", action="store_true",
+                    help="keep serving on the elastically shrunk mesh "
+                         "after an unreplaced node loss")
+    ap.add_argument("--arrival-every", type=float, default=0.0, metavar="S",
+                    help="stagger request arrivals by this many seconds "
+                         "(exercises the queue-wait dispatch policy)")
     # LM path
     ap.add_argument("--arch", default=None,
                     help="serve a language model instead of the solver")

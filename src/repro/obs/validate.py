@@ -54,8 +54,11 @@ def check_report_batch_fields(lines) -> list[str]:
     reports (the batched-axis refactor) must place themselves in their
     micro-batch: integer ``batch_index`` / ``batch_size`` with
     0 <= batch_index < max(1, batch_size) (an unbatched solve reports
-    index 0 of size 1). Returns error strings; also errors when the log
-    holds no solve_report at all (an empty gate gates nothing)."""
+    index 0 of size 1). Version >= 3 reports (the deadline-aware serving
+    front-end) must additionally carry a boolean ``deadline_missed``, an
+    integer ``retries`` >= 0, and an integer ``final_n_nodes`` >= 0.
+    Returns error strings; also errors when the log holds no solve_report
+    at all (an empty gate gates nothing)."""
     errors = []
     n_reports = 0
     for i, line in enumerate(lines):
@@ -88,6 +91,18 @@ def check_report_batch_fields(lines) -> list[str]:
         elif not 0 <= bi < max(1, bs):
             errors.append(f"line {i + 1}: batch_index {bi} out of range "
                           f"for batch_size {bs}")
+        if ver < 3:
+            continue                 # pre-serving reports carry no deadline
+        dm = data.get("deadline_missed")
+        if not isinstance(dm, bool):
+            errors.append(f"line {i + 1}: schema_version {ver} report "
+                          f"lacks boolean deadline_missed (got {dm!r})")
+        for field in ("retries", "final_n_nodes"):
+            val = data.get(field)
+            if not isinstance(val, int) or isinstance(val, bool) \
+                    or val < 0:
+                errors.append(f"line {i + 1}: schema_version {ver} report "
+                              f"lacks integer {field} >= 0 (got {val!r})")
     if not n_reports:
         errors.append("no solve_report records found")
     return errors

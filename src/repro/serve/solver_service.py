@@ -22,6 +22,30 @@ sweeps). Requests are drained in fixed-size micro-batches of ``B`` members:
     records on a ``repro.obs.Tracer``, and each member's ``SolveReport``
     carries its ``batch_index``/``batch_size`` placement.
 
+Deadline-aware front-end (the async-shaped policy layer, still driven
+synchronously so every behavior stays deterministic under test):
+
+  * ``max_queue_wait_s`` bounds head-of-line blocking: ``step()`` dispatches
+    only when a full micro-batch is queued OR the oldest request has waited
+    that long — then it ships a *partial* batch (padded as usual) instead of
+    holding the request hostage to fill;
+  * per-request deadlines (``submit(rhs, deadline_s=...)``): a request whose
+    deadline expires while still queued is dropped before dispatch
+    (``status="deadline_missed"``, no report); one that completes late keeps
+    its numerically-valid report but is marked ``deadline_missed`` — in both
+    cases a missed deadline is a distinct terminal state, never counted as a
+    failure;
+  * bounded retry: a micro-batch whose solve dies on an unsurvivable event
+    (``RuntimeError`` from the redundancy plan) is retried up to
+    ``max_retries`` times with exponential backoff, with the scenario
+    cleared on the retry (the failure already struck; the re-solve runs on
+    the restored cluster). Exhausted retries file ``status="failed"``;
+  * graceful degradation (``degrade=True``): solves run with elastic
+    shrunk-mesh recovery, and once a micro-batch reports a shrink the
+    service *adopts* the shrunk problem — subsequent micro-batches dispatch
+    directly on the surviving nodes (scenario events aimed at amputated
+    nodes are dropped) and every result records ``final_n_nodes``.
+
 The service is synchronous by design: ``submit`` enqueues, ``run`` drains.
 That keeps it deterministic (testable bit-for-bit against B=1 references
 with ``fused=False``; the default fused throughput mode matches to ~ulp)
@@ -46,17 +70,22 @@ class SolveRequest:
     req_id: int
     rhs: np.ndarray
     t_submit: float
+    t_deadline: Optional[float] = None   # absolute perf_counter time
 
 
 @dataclasses.dataclass
 class RequestResult:
     req_id: int
-    report: SolveReport
+    report: Optional[SolveReport]   # None when dropped/failed before a solve
     latency_s: float        # submit -> result available
-    queue_wait_s: float     # submit -> micro-batch dispatch
+    queue_wait_s: float     # submit -> micro-batch dispatch (or drop)
     solve_s: float          # the micro-batch solve wall time
-    batch_seq: int          # which micro-batch served it
+    batch_seq: int          # which micro-batch served it (-1 = queue drop)
     batch_fill: int         # real members in that micro-batch (<= B)
+    status: str = "ok"      # "ok" | "deadline_missed" | "failed"
+    retries: int = 0        # solve re-dispatches this result rode through
+    final_n_nodes: int = 0  # node count that produced it (shrinks under
+    #                         elastic degradation; 0 = no solve ran)
 
 
 class SolverService:
@@ -72,23 +101,42 @@ class SolverService:
     is where the aggregate-throughput win comes from on op-overhead-bound
     backends. Members then match their B=1 references to ~ulp rather than
     bit-exactly; pass ``fused=False`` for the exact per-member-unrolled
-    bundle (what the bit-identity tests drive)."""
+    bundle (what the bit-identity tests drive).
+
+    Deadline/retry/degradation knobs: ``max_queue_wait_s`` (None = legacy
+    greedy dispatch), per-request ``deadline_s`` on ``submit``,
+    ``max_retries`` + ``retry_backoff_s``, ``degrade`` (see module
+    docstring)."""
 
     def __init__(self, problem, batch: int = 8, *, strategy: str = "esrp",
                  T: int = 20, phi: int = 1, rtol: float = 1e-8,
                  backend: str = "auto", ops=None, failure_runtime=None,
                  scenario=None, fail_every: int = 1, obs=None,
                  fused: bool = True,
+                 max_queue_wait_s: Optional[float] = None,
+                 max_retries: int = 0, retry_backoff_s: float = 0.05,
+                 degrade: bool = False,
                  solve_kwargs: Optional[dict] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
+        if max_queue_wait_s is not None and max_queue_wait_s < 0:
+            raise ValueError(
+                f"max_queue_wait_s must be >= 0, got {max_queue_wait_s}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.problem = problem
         self.batch = int(batch)
-        self.m = int(problem.part.m)
+        self.m = int(problem.part.m)       # request length: the ORIGINAL
+        #                                    system size, even after a shrink
         self.dtype = problem.b.dtype
         self.scenario = list(scenario) if scenario else None
         self.fail_every = max(1, int(fail_every))
         self.fused = bool(fused)
+        self.max_queue_wait_s = max_queue_wait_s
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.degrade = bool(degrade)
+        self.n_nodes = int(problem.part.n_nodes)
         kw = dict(strategy=strategy, T=T, phi=phi, rtol=rtol,
                   backend=backend, batch_fused=self.fused)
         if ops is not None:
@@ -96,6 +144,11 @@ class SolverService:
         if failure_runtime is not None:
             kw["failure_runtime"] = failure_runtime
         kw.update(solve_kwargs or {})
+        if self.degrade:
+            # degradation rides the elastic path: an unreplaced loss shrinks
+            # the mesh instead of killing the batch
+            kw.setdefault("elastic", True)
+        self._solve_kw = kw
         self._step = make_solve_step(problem, **kw)
         from repro.obs import Tracer
         self.tracer = obs if isinstance(obs, Tracer) else (
@@ -105,10 +158,13 @@ class SolverService:
         self._next_id = 0
         self._batch_seq = 0
         self._run_wall_s = 0.0        # cumulative time inside step()
+        self.partial_dispatches = 0   # queue-wait-timeout partial batches
 
     # ------------------------------------------------------------------ #
-    def submit(self, rhs) -> int:
-        """Enqueue one system (rhs of length M); returns the request id."""
+    def submit(self, rhs, deadline_s: Optional[float] = None) -> int:
+        """Enqueue one system (rhs of length M); returns the request id.
+        ``deadline_s`` (seconds from now) marks the request
+        ``deadline_missed`` instead of serving it past its usefulness."""
         rhs = np.asarray(rhs, self.dtype)
         if rhs.shape != (self.m,):
             raise ValueError(
@@ -116,7 +172,9 @@ class SolverService:
                 f"one system per request against the shared operator")
         rid = self._next_id
         self._next_id += 1
-        self._queue.append(SolveRequest(rid, rhs, time.perf_counter()))
+        now = time.perf_counter()
+        t_deadline = None if deadline_s is None else now + float(deadline_s)
+        self._queue.append(SolveRequest(rid, rhs, now, t_deadline))
         if self.tracer is not None:
             self.tracer.instant("request_submit", cat="serve", req_id=rid,
                                 queued=len(self._queue))
@@ -125,23 +183,110 @@ class SolverService:
     def pending(self) -> int:
         return len(self._queue)
 
-    # ------------------------------------------------------------------ #
-    def step(self) -> list[RequestResult]:
-        """Dispatch ONE micro-batch: drain up to B queued requests, pad to
-        exactly B with zero-RHS members, solve, and file per-request
-        results. Returns the new results (empty if the queue was empty)."""
+    def ready(self) -> bool:
+        """Would ``step()`` dispatch right now? Always true with work queued
+        under the legacy greedy policy; with ``max_queue_wait_s`` set, true
+        once a full micro-batch is queued or the oldest request has waited
+        out the bound."""
         if not self._queue:
+            return False
+        if self.max_queue_wait_s is None:
+            return True
+        if len(self._queue) >= self.batch:
+            return True
+        age = time.perf_counter() - self._queue[0].t_submit
+        return age >= self.max_queue_wait_s
+
+    # ------------------------------------------------------------------ #
+    def _drop_expired(self, rq: SolveRequest, now: float) -> RequestResult:
+        res = RequestResult(
+            req_id=rq.req_id, report=None, latency_s=now - rq.t_submit,
+            queue_wait_s=now - rq.t_submit, solve_s=0.0, batch_seq=-1,
+            batch_fill=0, status="deadline_missed")
+        self.results[rq.req_id] = res
+        if self.tracer is not None:
+            self.tracer.instant("deadline_missed", cat="serve",
+                                req_id=rq.req_id, where="queue",
+                                waited_ms=res.queue_wait_s * 1e3)
+        return res
+
+    def _active_scenario(self, seq: int):
+        if self.scenario is None or seq % self.fail_every != 0:
+            return None
+        # under degradation the mesh may have shrunk: an event aimed at an
+        # amputated node can no longer strike
+        scen = [e for e in self.scenario
+                if max(e.nodes, default=0) < self.n_nodes]
+        return scen or None
+
+    def _solve_with_retry(self, rhs, scen, tr, seq):
+        """Dispatch the micro-batch; on an unsurvivable event (RuntimeError
+        out of the redundancy plan) retry with backoff, scenario cleared.
+        Returns (reports|None, retries, solve_s)."""
+        attempt = 0
+        t_begin = time.perf_counter()
+        while True:
+            try:
+                reports = self._step(rhs, scenario=scen, obs=tr)
+                return reports, attempt, time.perf_counter() - t_begin
+            except RuntimeError as exc:
+                if tr is not None:
+                    tr.instant("solve_retry", cat="serve", seq=seq,
+                               attempt=attempt, error=str(exc)[:200])
+                if attempt >= self.max_retries:
+                    return None, attempt, time.perf_counter() - t_begin
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+                attempt += 1
+                scen = None   # the event already struck; re-solve clean
+
+    def _maybe_degrade(self, reports) -> None:
+        """Adopt the shrunk problem once a dispatch reports an elastic
+        shrink, so later micro-batches serve directly on the survivors."""
+        n_new = min(r.final_n_nodes for r in reports)
+        if not self.degrade or n_new >= self.n_nodes:
+            return
+        from repro.core import elastic
+        self.problem = elastic.shrink_problem(self.problem, n_new)
+        self.n_nodes = n_new
+        self._step = make_solve_step(self.problem, **self._solve_kw)
+        if self.tracer is not None:
+            self.tracer.instant("service_degraded", cat="serve",
+                                n_nodes=n_new)
+
+    # ------------------------------------------------------------------ #
+    def step(self, force: bool = False) -> list[RequestResult]:
+        """Dispatch ONE micro-batch: drain up to B queued requests (dropping
+        ones whose deadline already expired), pad to exactly B with zero-RHS
+        members, solve (with bounded retry), and file per-request results.
+        Returns the new results — empty if the queue was empty or (under
+        ``max_queue_wait_s``) not yet worth dispatching; ``force=True``
+        dispatches whatever is queued regardless (what ``run`` uses to
+        drain)."""
+        if not self._queue or (not force and not self.ready()):
             return []
-        reqs = [self._queue.popleft()
-                for _ in range(min(self.batch, len(self._queue)))]
+        now = time.perf_counter()
+        out: list[RequestResult] = []
+        reqs: list[SolveRequest] = []
+        while self._queue and len(reqs) < self.batch:
+            rq = self._queue.popleft()
+            if rq.t_deadline is not None and now > rq.t_deadline:
+                out.append(self._drop_expired(rq, now))
+                continue
+            reqs.append(rq)
+        if not reqs:
+            return out
         fill = len(reqs)
         seq = self._batch_seq
         self._batch_seq += 1
-        rhs = np.zeros((self.batch, self.m), self.dtype)
+        waited = (self.max_queue_wait_s is not None and fill < self.batch
+                  and not self._queue and not force)
+        if waited:
+            self.partial_dispatches += 1
+        m_cur = int(self.problem.part.m)   # >= self.m after a shrink re-pad
+        rhs = np.zeros((self.batch, m_cur), self.dtype)
         for k, rq in enumerate(reqs):
-            rhs[k] = rq.rhs
-        scen = (list(self.scenario) if self.scenario is not None
-                and seq % self.fail_every == 0 else None)
+            rhs[k, :self.m] = rq.rhs
+        scen = self._active_scenario(seq)
 
         tr = self.tracer
         mb_sp = None
@@ -149,7 +294,8 @@ class SolverService:
         if tr is not None:
             mb_sp = tr.begin("microbatch", cat="serve", seq=seq, fill=fill,
                              batch=self.batch, padded=self.batch - fill,
-                             failures=bool(scen))
+                             failures=bool(scen), partial_on_wait=waited,
+                             n_nodes=self.n_nodes)
             # per-request spans nest (LIFO) inside the micro-batch span:
             # each covers its request's residence in this dispatch, with the
             # queue wait and end-to-end latency attached on close
@@ -158,40 +304,60 @@ class SolverService:
                          for k, rq in enumerate(reqs)]
 
         t0 = time.perf_counter()
-        reports = self._step(rhs, scenario=scen, obs=tr)
-        solve_s = time.perf_counter() - t0
+        reports, retries, solve_s = self._solve_with_retry(rhs, scen, tr,
+                                                           seq)
         self._run_wall_s += solve_s
         t_done = time.perf_counter()
 
-        out = []
         for k, rq in enumerate(reqs):
-            rep = reports[k]
+            rep = reports[k] if reports is not None else None
+            status = "ok" if rep is not None else "failed"
+            if rep is not None:
+                rep.retries = retries
+                if rq.t_deadline is not None and t_done > rq.t_deadline:
+                    # late completion: the report stays (numerically valid),
+                    # the terminal state is the miss — never a failure
+                    rep.deadline_missed = True
+                    status = "deadline_missed"
+                    if tr is not None:
+                        tr.instant("deadline_missed", cat="serve",
+                                   req_id=rq.req_id, where="solve")
             res = RequestResult(
                 req_id=rq.req_id, report=rep,
                 latency_s=t_done - rq.t_submit,
                 queue_wait_s=t0 - rq.t_submit,
-                solve_s=solve_s, batch_seq=seq, batch_fill=fill)
+                solve_s=solve_s, batch_seq=seq, batch_fill=fill,
+                status=status, retries=retries,
+                final_n_nodes=(rep.final_n_nodes if rep is not None else 0))
             self.results[rq.req_id] = res
             out.append(res)
+        served = out[-fill:]
         if tr is not None:
-            for sp, res in zip(reversed(req_spans), reversed(out)):
+            for sp, res in zip(reversed(req_spans), reversed(served)):
                 tr.close(sp, latency_ms=res.latency_s * 1e3,
                          queue_wait_ms=res.queue_wait_s * 1e3,
-                         converged=res.report.converged,
-                         iters=res.report.converged_iter)
-            tr.close(mb_sp, solve_s=solve_s)
+                         status=res.status,
+                         converged=bool(res.report is not None
+                                        and res.report.converged),
+                         iters=(res.report.converged_iter
+                                if res.report is not None else -1))
+            tr.close(mb_sp, solve_s=solve_s, retries=retries)
             tr.add_counter("requests_served", fill, seq=seq)
             tr.record("microbatch", dict(
                 seq=seq, fill=fill, batch=self.batch, solve_s=solve_s,
-                failures=bool(scen),
-                iters=[r.report.converged_iter for r in out]))
+                failures=bool(scen), retries=retries,
+                partial_on_wait=waited, n_nodes=self.n_nodes,
+                iters=[(r.report.converged_iter if r.report is not None
+                        else -1) for r in served]))
+        if reports is not None:
+            self._maybe_degrade(reports)
         return out
 
     def run(self) -> list[RequestResult]:
         """Drain the whole queue; returns results in completion order."""
         out = []
         while self._queue:
-            out.extend(self.step())
+            out.extend(self.step(force=True))
         return out
 
     # ------------------------------------------------------------------ #
@@ -200,22 +366,33 @@ class SolverService:
         res = sorted(self.results.values(), key=lambda r: r.req_id)
         if not res:
             return dict(requests=0, batch=self.batch)
-        lat = np.asarray([r.latency_s for r in res])
-        wait = np.asarray([r.queue_wait_s for r in res])
+        solved = [r for r in res if r.report is not None]
+        lat = np.asarray([r.latency_s for r in solved] or [0.0])
+        wait = np.asarray([r.queue_wait_s for r in solved] or [0.0])
         solve_wall = self._run_wall_s
+        misses = sum(r.status == "deadline_missed" for r in res)
         return dict(
             requests=len(res),
             batch=self.batch,
             microbatches=self._batch_seq,
-            mean_fill=float(np.mean([r.batch_fill for r in res])),
+            mean_fill=float(np.mean([r.batch_fill for r in solved]))
+            if solved else 0.0,
             solve_wall_s=solve_wall,
-            throughput_rps=(len(res) / solve_wall if solve_wall > 0
+            throughput_rps=(len(solved) / solve_wall if solve_wall > 0
                             else float("inf")),
             latency_p50_ms=float(np.percentile(lat, 50) * 1e3),
             latency_p99_ms=float(np.percentile(lat, 99) * 1e3),
             latency_mean_ms=float(lat.mean() * 1e3),
             queue_wait_p50_ms=float(np.percentile(wait, 50) * 1e3),
+            queue_wait_p99_ms=float(np.percentile(wait, 99) * 1e3),
+            deadline_missed=misses,
+            deadline_miss_rate=misses / len(res),
+            failed=sum(r.status == "failed" for r in res),
+            retries_total=sum(r.retries for r in res),
+            partial_dispatches=self.partial_dispatches,
+            final_n_nodes=self.n_nodes,
             iters_total=int(sum(max(0, r.report.converged_iter)
-                                for r in res)),
-            all_converged=bool(all(r.report.converged for r in res)),
+                                for r in solved)),
+            all_converged=bool(solved and all(r.report.converged
+                                              for r in solved)),
         )

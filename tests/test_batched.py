@@ -15,6 +15,11 @@ The batched contract (ISSUE 8):
     exact trajectory to ~ulp, not bitwise;
   * per-member ``SolveReport``s carry schema v2 ``batch_index`` /
     ``batch_size`` placement.
+
+Beyond-fail-stop on the batch axis (ISSUE 9): SDC detect → repair, elastic
+shrunk-mesh recovery, and periodic residual replacement all run on (B, M)
+state, and the exact bundle keeps every member bit-identical in f64 to its
+own B=1 run through each of them.
 """
 import numpy as np
 import pytest
@@ -25,8 +30,9 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
 
+from repro.core import sdc
 from repro.core.driver import REPORT_SCHEMA_VERSION, solve_resilient
-from repro.core.failures import FailureEvent
+from repro.core.failures import FailureEvent, SDCEvent
 from repro.sparse.matrices import build_problem
 
 
@@ -179,11 +185,146 @@ def test_report_schema_v2_batch_placement(problem):
     assert doc["batch_index"] == 0 and doc["batch_size"] == 1
 
 
-def test_batched_rejects_unsupported_modes(problem):
+def test_batched_rejects_bad_inputs(problem):
     rhs = jnp.asarray(np.ones((2, problem.part.m)))
-    with pytest.raises(ValueError, match="elastic"):
-        solve_resilient(problem, rhs=rhs, elastic=True)
-    with pytest.raises(ValueError, match="rr_every"):
-        solve_resilient(problem, rhs=rhs, rr_every=10)
     with pytest.raises(ValueError, match="rhs row length"):
         solve_resilient(problem, rhs=rhs[:, :-1])
+    # a failure runtime built for the wrong batch width: the message names
+    # the constructor call that would match this solve
+    rt = type("FakeRuntime", (), {"batch": 0})()
+    with pytest.raises(ValueError,
+                       match=r"ShardedFailureRuntime\(problem, mesh, "
+                             r"batch=2\)"):
+        solve_resilient(problem, rhs=rhs, failure_runtime=rt)
+    rt = type("FakeRuntime", (), {"batch": 3})()
+    with pytest.raises(ValueError,
+                       match=r"this solve is unbatched.*default 0"):
+        solve_resilient(problem, failure_runtime=rt)
+
+
+# --------------------------------------------------------------------------- #
+# beyond-fail-stop on the batch axis (ISSUE 9 tentpole)
+# --------------------------------------------------------------------------- #
+def _repairs(rep):
+    return [e for e in rep.events if e.kind == "sdc-repair"]
+
+
+@pytest.mark.parametrize("target", ["p", "r", "queue"])
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_batched_sdc_repair_matches_sequential(small_problem, backend,
+                                               target):
+    """A mid-iteration SDCEvent in a B=4 batched solve is detected within
+    check_every, repaired through the per-member Alg. 2 path, and every
+    member rejoins its own B=1 run bit-identically in f64."""
+    rng = np.random.default_rng(7)
+    rhs = rng.standard_normal((4, small_problem.part.m))
+    kw = dict(strategy="esrp", T=5, rtol=1e-9, backend=backend, chunk=16,
+              scenario=[SDCEvent(iter=12, nodes=(1,), target=target)])
+    reps = solve_resilient(small_problem, rhs=jnp.asarray(rhs), **kw)
+    assert len(reps) == 4
+    (er,) = _repairs(reps[0])
+    assert 0 < er.detect_latency <= sdc.SDCPolicy().check_every
+    assert er.detect_iter == 12 + er.detect_latency
+    for k in range(4):
+        solo = solve_resilient(small_problem, rhs=jnp.asarray(rhs[k]), **kw)
+        assert reps[k].converged_iter == solo.converged_iter, (k, target)
+        assert (np.asarray(reps[k].x) == np.asarray(solo.x)).all(), \
+            f"member {k} diverged from its B=1 run after SDC repair " \
+            f"({target}/{backend})"
+
+
+def test_batched_detect_latency_lands_in_the_trace(small_problem):
+    """obs=on, batched: the ``sdc_detect`` instant carries the attributed
+    latency, bounded by the check cadence — detection latency stays a
+    first-class trace signal on the batch axis (ISSUE 9 satellite)."""
+    rng = np.random.default_rng(7)
+    rhs = rng.standard_normal((4, small_problem.part.m))
+    reps = solve_resilient(
+        small_problem, rhs=jnp.asarray(rhs), strategy="esrp", T=5,
+        rtol=1e-9, chunk=16, obs=True,
+        scenario=[SDCEvent(iter=12, nodes=(1,), target="r")])
+    (er,) = _repairs(reps[0])
+    instants = [e for e in reps[0].trace.events
+                if e["name"] == "sdc_detect" and e["ph"] == "i"]
+    assert len(instants) == 1
+    a = instants[0]["args"]
+    assert a["latency"] == er.detect_latency
+    assert 0 < a["latency"] <= sdc.SDCPolicy().check_every
+    assert a["iter"] == er.detect_iter
+    from repro.obs import span_tree, walk_spans
+    spans = [n for n in walk_spans(span_tree(reps[0].trace.events))
+             if n["name"] == "event:sdc-repair"]
+    assert len(spans) == 1
+
+
+def test_sdc_event_after_member_converged_shields_it(problem):
+    """An SDC strike AFTER member 0's convergence must not disturb its
+    frozen rows: injection and repair are both member-selected. The live
+    straggler still detects, repairs, and matches its solo run bitwise."""
+    rhs = jnp.asarray(_rhs_pair(problem))
+    kw = dict(strategy="esrp", T=10, rtol=1e-8, chunk=8)
+    clean = solve_resilient(problem, rhs=rhs, **kw)
+    k0, k1 = clean[0].converged_iter, clean[1].converged_iter
+    assert k0 + 2 < k1, "fixture rhs must separate the convergence points"
+    ev = [SDCEvent(iter=k0 + 2, nodes=(1,), target="r")]
+    reps = solve_resilient(problem, rhs=rhs, scenario=ev, **kw)
+    assert len(_repairs(reps[0])) == 1
+    assert reps[0].converged_iter == k0
+    assert (np.asarray(reps[0].x) == np.asarray(clean[0].x)).all(), \
+        "SDC repair touched a converged member's frozen rows"
+    solo = solve_resilient(problem, rhs=rhs[1], scenario=ev, **kw)
+    assert reps[1].converged_iter == solo.converged_iter
+    assert (np.asarray(reps[1].x) == np.asarray(solo.x)).all()
+
+
+def test_padded_zero_rhs_member_never_flags(problem):
+    """Satellite regression: with the invariant checks armed, a padded
+    zero-RHS member (‖b‖ = 0) is excluded from every relative detector —
+    the run must finish with no repairs and the padding rows exactly 0."""
+    rhs = np.stack([np.asarray(problem.b), np.zeros(problem.part.m)])
+    reps = solve_resilient(problem, rhs=jnp.asarray(rhs), strategy="esrp",
+                           T=10, rtol=1e-9, sdc_policy=sdc.SDCPolicy())
+    assert _repairs(reps[0]) == [], \
+        "a zero-RHS padding member tripped an SDC detector"
+    assert reps[0].sdc_checks > 0
+    assert reps[1].converged and reps[1].rel_residual == 0.0
+    assert (np.asarray(reps[1].x) == 0.0).all()
+    ref = solve_resilient(problem, strategy="esrp", T=10, rtol=1e-9,
+                          sdc_policy=sdc.SDCPolicy())
+    assert (np.asarray(reps[0].x) == np.asarray(ref.x)).all()
+
+
+def test_batched_elastic_shrink_matches_sequential(small_problem):
+    """Unsurvivable failure + elastic=True on a B=3 batch: the whole (B, …)
+    state tree re-partitions onto the shrunk mesh and every member keeps
+    solving. Rejoin is norm-wise vs the member's own B=1 elastic run (the
+    re-padded length may re-associate reductions)."""
+    rng = np.random.default_rng(9)
+    rhs = rng.standard_normal((3, small_problem.part.m))
+    kw = dict(strategy="esrp", T=5, rtol=1e-9, chunk=16, elastic=True,
+              scenario=[FailureEvent(12, (2,))])
+    reps = solve_resilient(small_problem, rhs=jnp.asarray(rhs), **kw)
+    assert len(reps) == 3
+    for k in range(3):
+        solo = solve_resilient(small_problem, rhs=jnp.asarray(rhs[k]), **kw)
+        assert solo.final_n_nodes < small_problem.part.n_nodes
+        assert reps[k].final_n_nodes == solo.final_n_nodes
+        assert reps[k].converged and solo.converged
+        xs, xb = np.asarray(solo.x), np.asarray(reps[k].x)
+        assert xs.shape == xb.shape
+        err = np.linalg.norm(xb - xs) / max(np.linalg.norm(xs), 1.0)
+        assert err < 1e-9, (k, err)
+
+
+def test_batched_rr_every_matches_sequential(small_problem):
+    """Periodic residual replacement on the batch axis: the batch-aware
+    ops.dot keeps the replaced r/z bit-identical per member."""
+    rng = np.random.default_rng(13)
+    rhs = rng.standard_normal((2, small_problem.part.m))
+    kw = dict(strategy="esrp", T=5, rtol=1e-9, rr_every=7, chunk=16)
+    reps = solve_resilient(small_problem, rhs=jnp.asarray(rhs), **kw)
+    for k in range(2):
+        solo = solve_resilient(small_problem, rhs=jnp.asarray(rhs[k]), **kw)
+        assert reps[k].converged_iter == solo.converged_iter, k
+        assert (np.asarray(reps[k].x) == np.asarray(solo.x)).all(), \
+            f"member {k} diverged from its B=1 run under rr_every"

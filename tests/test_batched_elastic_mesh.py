@@ -1,0 +1,107 @@
+"""Batched beyond-fail-stop on the 8-device mesh (subprocess suite).
+
+Mirrors tests/test_sdc_mesh.py for the batched stack:
+
+  * a mid-iteration SDCEvent in a B=3 batched mesh solve (device-resident
+    ``ShardedFailureRuntime`` with per-member ``rq_sums`` checksums) is
+    detected within one check period and repaired — every member rejoins
+    the clean batched mesh trajectory;
+  * batched queue corruption also corrupts the physical holder's ``rq``
+    rows for every member; the per-member checksums flag it and the slot
+    invalidation leaves the live trajectory bit-identical;
+  * a batched elastic shrink on the 8-node partition re-partitions the
+    whole (B, …) state tree onto 7 nodes and every member keeps solving,
+    rejoining its own B=1 elastic run norm-wise.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+
+from repro.comm.shard import (ShardedFailureRuntime, nodes_mesh,
+                              place_problem, sharded_solver_ops)
+from repro.core.driver import solve_resilient
+from repro.core.failures import FailureEvent, SDCEvent
+from repro.sparse.matrices import build_problem
+
+B = 3
+mesh = nodes_mesh(8)
+problem = build_problem("poisson2d", n_nodes=8, nx=40, ny=40)
+placed = place_problem(problem, mesh)
+with mesh:
+    ops_b = sharded_solver_ops(placed, mesh, batch=B)
+
+rng = np.random.default_rng(7)
+rhs = rng.standard_normal((B, problem.m))
+rhs[1] *= 40.0
+
+frt = ShardedFailureRuntime(placed, mesh, batch=B)
+with mesh:
+    clean = solve_resilient(placed, strategy="esrp", T=10, phi=2,
+                            rtol=1e-10, ops=ops_b, failure_runtime=frt,
+                            rhs=jnp.asarray(rhs))
+xs = [np.asarray(r.x) for r in clean]
+scales = [max(float(np.linalg.norm(x)), 1.0) for x in xs]
+
+# --- 1) batched SDC on the mesh: detect within the cadence, rejoin -------
+for tgt in ("r", "queue"):
+    frt = ShardedFailureRuntime(placed, mesh, batch=B)
+    with mesh:
+        reps = solve_resilient(placed, strategy="esrp", T=10, phi=2,
+                               rtol=1e-10, ops=ops_b, failure_runtime=frt,
+                               rhs=jnp.asarray(rhs),
+                               scenario=[SDCEvent(iter=33, nodes=(2,),
+                                                  target=tgt)])
+    ers = [e for e in reps[0].events if e.kind == "sdc-repair"]
+    assert len(ers) == 1, (tgt, [e.kind for e in reps[0].events])
+    assert 0 < ers[0].detect_latency <= 16, (tgt, ers[0].detect_latency)
+    for k in range(B):
+        assert reps[k].converged, (tgt, k)
+        assert reps[k].converged_iter == clean[k].converged_iter, (tgt, k)
+        err = float(np.linalg.norm(np.asarray(reps[k].x) - xs[k]))
+        assert err <= 1e-10 * scales[k], (tgt, k, err)
+    if tgt == "queue":
+        # per-member rq checksums flagged the physical copies; the live
+        # trajectory is untouched (slot invalidation, zero rollback)
+        assert ers[0].detector == "queue-checksum", ers[0].detector
+        assert ers[0].wasted_iters == 0
+        for k in range(B):
+            assert (np.asarray(reps[k].x) == xs[k]).all(), k
+print("BATCHED_MESH_SDC_OK")
+
+# --- 2) batched elastic shrink on the 8-node partition -------------------
+kw = dict(strategy="esrp", T=10, rtol=1e-9, elastic=True,
+          scenario=[FailureEvent(iter=30, nodes=(5,))])
+reps = solve_resilient(problem, rhs=jnp.asarray(rhs), **kw)
+assert all(r.converged and r.final_n_nodes == 7 for r in reps)
+for k in range(B):
+    solo = solve_resilient(problem, rhs=jnp.asarray(rhs[k]), **kw)
+    assert solo.final_n_nodes == 7
+    xb, xsolo = np.asarray(reps[k].x), np.asarray(solo.x)
+    assert xb.shape == xsolo.shape
+    err = np.linalg.norm(xb - xsolo) / max(np.linalg.norm(xsolo), 1.0)
+    assert err < 1e-9, (k, err)
+print("BATCHED_ELASTIC_SHRINK_OK")
+print("BATCHED_BEYOND_FAILSTOP_MESH_OK")
+"""
+
+
+@pytest.mark.slow
+def test_batched_beyond_failstop_eight_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], cwd=".",
+                         env=env, capture_output=True, text=True,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    for tag in ("BATCHED_MESH_SDC_OK", "BATCHED_ELASTIC_SHRINK_OK",
+                "BATCHED_BEYOND_FAILSTOP_MESH_OK"):
+        assert tag in out.stdout, (tag, out.stdout)

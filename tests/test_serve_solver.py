@@ -1,5 +1,7 @@
 """Streaming resilient solve service: micro-batcher, padding, per-request
-accounting, failure injection under load, and the serve report contract.
+accounting, failure injection under load, and the serve report contract —
+plus the deadline-aware front-end (partial dispatch on queue-wait timeout,
+per-request deadlines, bounded retry, elastic degradation).
 """
 import numpy as np
 import pytest
@@ -109,11 +111,153 @@ def test_service_tracer_spans_and_report_schema(problem, requests):
                        "data": {"schema_version": 2, "batch_index": 5,
                                 "batch_size": 2}})]
     assert check_report_batch_fields(bad) != []
+    # v3: the deadline-aware serving fields are required
+    bad_v3 = [json.dumps({"type": "solve_report",
+                          "data": {"schema_version": 3, "batch_index": 0,
+                                   "batch_size": 2, "retries": 0,
+                                   "final_n_nodes": 4}})]
+    errs = check_report_batch_fields(bad_v3)
+    assert errs and "deadline_missed" in errs[0]
+    bad_v3 = [json.dumps({"type": "solve_report",
+                          "data": {"schema_version": 3, "batch_index": 0,
+                                   "batch_size": 2,
+                                   "deadline_missed": False,
+                                   "retries": -1, "final_n_nodes": 4}})]
+    assert any("retries" in e for e in check_report_batch_fields(bad_v3))
 
 
 def test_service_input_validation(problem):
     with pytest.raises(ValueError, match="batch must be"):
         SolverService(problem, batch=0)
+    with pytest.raises(ValueError, match="max_queue_wait_s"):
+        SolverService(problem, batch=2, max_queue_wait_s=-1.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        SolverService(problem, batch=2, max_retries=-1)
     svc = SolverService(problem, batch=2)
     with pytest.raises(ValueError, match="rhs shape"):
         svc.submit(np.ones(3))
+
+
+# --------------------------------------------------------------------------- #
+# deadline-aware front-end (ISSUE 9)
+# --------------------------------------------------------------------------- #
+def test_partial_dispatch_on_queue_wait_timeout(problem, requests):
+    """With max_queue_wait_s set, step() holds a below-width queue until the
+    oldest request has waited it out — then ships a partial batch."""
+    svc = SolverService(problem, batch=4, strategy="esrp", T=10, rtol=1e-8,
+                        max_queue_wait_s=30.0)
+    svc.submit(requests[0])
+    svc.submit(requests[1])
+    assert not svc.ready()
+    assert svc.step() == []            # 2 < B and nobody waited 30 s yet
+    assert svc.pending() == 2
+    # a full batch dispatches immediately regardless of wait
+    svc.submit(requests[2])
+    svc.submit(requests[3])
+    assert svc.ready()
+    res = svc.step()
+    assert len(res) == 4 and all(r.status == "ok" for r in res)
+    assert svc.partial_dispatches == 0
+
+    # wait bound 0: the oldest request has always waited long enough
+    svc = SolverService(problem, batch=4, strategy="esrp", T=10, rtol=1e-8,
+                        max_queue_wait_s=0.0)
+    svc.submit(requests[0])
+    svc.submit(requests[1])
+    assert svc.ready()
+    res = svc.step()
+    assert len(res) == 2 and all(r.status == "ok" for r in res)
+    assert res[0].batch_fill == 2
+    assert svc.partial_dispatches == 1
+    assert svc.stats()["partial_dispatches"] == 1
+
+
+def test_expired_request_dropped_as_deadline_missed(problem, requests):
+    """A request whose deadline lapses while queued is dropped before the
+    dispatch — terminal state deadline_missed, never a failure, and it
+    does not occupy a batch slot."""
+    svc = SolverService(problem, batch=2, strategy="esrp", T=10, rtol=1e-8)
+    dead = svc.submit(requests[0], deadline_s=-1.0)     # already expired
+    live = svc.submit(requests[1])
+    res = svc.run()
+    assert len(res) == 2
+    dropped = svc.results[dead]
+    assert dropped.status == "deadline_missed"
+    assert dropped.report is None and dropped.batch_seq == -1
+    served = svc.results[live]
+    assert served.status == "ok" and served.report.converged
+    assert served.batch_fill == 1      # the dropped request freed its slot
+    st = svc.stats()
+    assert st["deadline_missed"] == 1 and st["failed"] == 0
+    assert st["deadline_miss_rate"] == pytest.approx(0.5)
+
+
+def test_late_completion_marked_missed_not_failed(problem, requests):
+    """A deadline that expires mid-solve keeps its (numerically valid)
+    report but lands deadline_missed — not mischaracterized as a failure."""
+    import time
+
+    svc = SolverService(problem, batch=2, strategy="esrp", T=10, rtol=1e-8)
+    # make the dispatch provably outlast the deadline (a warm jit cache can
+    # finish the real solve in microseconds): pad the solve step itself
+    real_step = svc._step
+    svc._step = lambda rhs, **kw: (time.sleep(0.1), real_step(rhs, **kw))[1]
+    # generous enough to survive the queue pop, far shorter than the solve
+    rid = svc.submit(requests[0], deadline_s=0.05)
+    res = svc.run()
+    assert len(res) == 1
+    r = svc.results[rid]
+    assert r.status == "deadline_missed"
+    assert r.report is not None and r.report.converged
+    assert r.report.deadline_missed is True
+    st = svc.stats()
+    assert st["failed"] == 0 and st["deadline_missed"] == 1
+
+
+def test_bounded_retry_on_unsurvivable_event(problem, requests):
+    """phi=1 cannot survive a 2-node simultaneous loss: the solve raises.
+    With retries the micro-batch re-dispatches (scenario cleared) and
+    serves; without, the requests land status="failed"."""
+    scen = [FailureEvent(15, (1, 2))]
+    svc = SolverService(problem, batch=2, strategy="esrp", T=10, phi=1,
+                        rtol=1e-8, scenario=scen, max_retries=1,
+                        retry_backoff_s=0.0)
+    ids = [svc.submit(r) for r in requests[:2]]
+    res = svc.run()
+    assert all(r.status == "ok" for r in res)
+    for rid in ids:
+        r = svc.results[rid]
+        assert r.retries == 1 and r.report.retries == 1
+        assert r.report.converged
+    assert svc.stats()["retries_total"] == 2
+
+    svc = SolverService(problem, batch=2, strategy="esrp", T=10, phi=1,
+                        rtol=1e-8, scenario=scen, max_retries=0)
+    svc.submit(requests[0])
+    res = svc.run()
+    assert len(res) == 1 and res[0].status == "failed"
+    assert res[0].report is None
+    st = svc.stats()
+    assert st["failed"] == 1 and st["deadline_missed"] == 0
+
+
+def test_degraded_service_keeps_serving_after_shrink(problem, requests):
+    """degrade=True: an unreplaced node loss shrinks the mesh elastically,
+    the service adopts the shrunk problem, and later micro-batches keep
+    serving on the survivors (events aimed at amputated nodes dropped)."""
+    svc = SolverService(problem, batch=2, strategy="esrp", T=10, rtol=1e-8,
+                        scenario=[FailureEvent(15, (3,))], fail_every=1,
+                        degrade=True)
+    ids = [svc.submit(r) for r in requests[:4]]
+    res = svc.run()
+    assert len(res) == 4 and all(r.status == "ok" for r in res)
+    assert svc.n_nodes == 3
+    for rid in ids:
+        r = svc.results[rid]
+        assert r.report.converged and r.final_n_nodes == 3
+        assert r.report.final_n_nodes == 3
+    # the second micro-batch ran on the adopted shrunk problem: no event
+    # could strike (node 3 no longer exists) and none was injected
+    second = [svc.results[i] for i in ids if svc.results[i].batch_seq == 1]
+    assert second and all(not r.report.events for r in second)
+    assert svc.stats()["final_n_nodes"] == 3
