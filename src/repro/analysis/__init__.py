@@ -1,0 +1,27 @@
+"""repro.analysis — static-invariant checker for the solver stack.
+
+Walks the jaxprs of registered solver entry points and machine-checks the
+invariants the paper's recovery math rests on: bit-identical obs=off /
+sdc_policy=None compilation (structural differ), zero-cost ``lax.cond``
+gating, sync-free chunk bodies, optimization_barrier-pinned reductions,
+and shard_map PartitionSpec discipline. See ``python -m repro.analysis
+--list`` and EXPERIMENTS.md "Static invariants".
+
+This package root stays jax-free: the CLI must set XLA_FLAGS (8 forced
+host devices for the sharded entries) before jax is imported, and tests
+import the walker/differ without paying registry-tracing costs. The
+jax-importing pieces (``registry``, ``fixtures``, ``cli``) load lazily.
+"""
+from repro.analysis import marks, structural, walker
+from repro.analysis.findings import (FINDINGS_SCHEMA_VERSION, Finding,
+                                     apply_baseline, check_findings_doc,
+                                     findings_doc, load_baseline)
+from repro.analysis.structural import (assert_structurally_equal,
+                                       canonical_lines, first_divergence)
+
+__all__ = [
+    "FINDINGS_SCHEMA_VERSION", "Finding", "apply_baseline",
+    "assert_structurally_equal", "canonical_lines", "check_findings_doc",
+    "findings_doc", "first_divergence", "load_baseline", "marks",
+    "structural", "walker",
+]

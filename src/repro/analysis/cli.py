@@ -1,0 +1,117 @@
+"""``python -m repro.analysis`` — run the static-invariant passes.
+
+    python -m repro.analysis --entry all --format text
+    python -m repro.analysis --entry all --baseline artifacts/analysis/baseline.json \
+        --out artifacts/analysis/findings.json        # the CI gate
+    python -m repro.analysis --list
+
+Exit status 0 iff no finding survives the baseline waivers. ``--out``
+writes the findings JSON (validated by ``repro.obs.validate --analysis``).
+
+Keep this module import-light: ``__main__`` configures XLA_FLAGS for the
+8-device host platform *before* anything imports jax, so the registry and
+jax itself are imported lazily inside ``main``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.findings import (apply_baseline, findings_doc,
+                                     load_baseline)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static-invariant checker: jaxpr identity, zero-cost "
+                    "gating, sync-freedom, reduction pinning, sharding "
+                    "discipline")
+    ap.add_argument("--entry", default="all",
+                    help="comma-separated entry names, or 'all' (every "
+                         "registered non-broken entry)")
+    ap.add_argument("--passes", default="all",
+                    help="comma-separated pass ids, or 'all'")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON whose waivers suppress known "
+                         "findings (artifacts/analysis/baseline.json)")
+    ap.add_argument("--out", default=None,
+                    help="write the findings JSON document here")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered entries and exit")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import registry
+    from repro.analysis.passes import PASS_IDS, run_passes
+
+    if args.list:
+        for name in registry.names(include_broken=True):
+            ep = registry.get(name)
+            extra = " [broken fixture]" if ep.broken else ""
+            if ep.requires_devices > 1:
+                extra += f" [needs {ep.requires_devices} devices]"
+            print(f"{name:36s} {ep.summary}{extra}")
+        return 0
+
+    pass_ids = (PASS_IDS if args.passes == "all"
+                else tuple(p for p in args.passes.split(",") if p))
+    unknown = set(pass_ids) - set(PASS_IDS)
+    if unknown:
+        print(f"unknown passes: {sorted(unknown)} "
+              f"(have {list(PASS_IDS)})", file=sys.stderr)
+        return 2
+
+    if args.entry == "all":
+        entry_names = registry.names()
+    else:
+        entry_names = [e for e in args.entry.split(",") if e]
+        missing = [e for e in entry_names
+                   if e not in registry.names(include_broken=True)]
+        if missing:
+            print(f"unknown entries: {missing} (see --list)",
+                  file=sys.stderr)
+            return 2
+
+    import jax
+    n_dev = jax.device_count()
+
+    findings, analyzed, skipped = [], [], []
+    for name in entry_names:
+        ep = registry.get(name)
+        if ep.requires_devices > n_dev:
+            skipped.append(name)
+            print(f"SKIP {name}: needs {ep.requires_devices} devices, "
+                  f"have {n_dev}", file=sys.stderr)
+            continue
+        spec = registry.build(name)
+        findings += run_passes(spec, pass_ids)
+        analyzed.append(name)
+
+    doc = findings_doc(findings, analyzed, pass_ids, skipped)
+    if args.out:
+        import os
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+
+    waived = []
+    if args.baseline:
+        findings, waived = apply_baseline(findings,
+                                          load_baseline(args.baseline))
+
+    if args.format == "json":
+        doc["new_findings"] = [f.to_json() for f in findings]
+        doc["waived"] = len(waived)
+        print(json.dumps(doc, indent=1))
+    else:
+        for f in findings:
+            where = f.eqn_path or "<entry>"
+            print(f"{f.severity.upper()} [{f.pass_id}] {f.entry} @ {where} "
+                  f"({f.code})\n    {f.explanation}")
+        print(f"analyzed {len(analyzed)} entries x {len(pass_ids)} passes: "
+              f"{len(findings)} new finding(s), {len(waived)} waived"
+              + (f", {len(skipped)} skipped ({', '.join(skipped)})"
+                 if skipped else ""))
+    return 1 if findings else 0

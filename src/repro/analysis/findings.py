@@ -1,0 +1,131 @@
+"""Finding records, the findings-JSON schema, and baseline waivers.
+
+A ``Finding`` is one violated invariant at one equation site. The JSON
+document written by ``python -m repro.analysis --out`` (and validated by
+``repro.obs.validate --analysis``) is::
+
+    {"schema_version": 1, "tool": "repro.analysis",
+     "entries": [...], "passes": [...], "skipped": [...],
+     "findings": [{"pass_id", "entry", "eqn_path", "severity",
+                   "code", "explanation"}, ...]}
+
+The committed baseline (``artifacts/analysis/baseline.json``) waives
+known findings by ``(pass_id, entry, code)`` — deliberately NOT by eqn
+path, which shifts between jax versions — each with a required
+justification and a ``max`` occurrence count, so a waived class cannot
+silently grow.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+FINDINGS_SCHEMA_VERSION = 1
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    pass_id: str          # which pass fired (repro.analysis.passes.PASS_IDS)
+    entry: str            # registered entry-point name
+    eqn_path: str         # walker path of the offending equation ("" = whole entry)
+    severity: str         # error | warning | info
+    code: str             # stable short code, the baseline-waiver unit
+    explanation: str
+
+    def waiver_key(self) -> tuple[str, str, str]:
+        return (self.pass_id, self.entry, self.code)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def findings_doc(findings, entries, passes, skipped=()) -> dict:
+    return {
+        "schema_version": FINDINGS_SCHEMA_VERSION,
+        "tool": "repro.analysis",
+        "entries": sorted(entries),
+        "passes": sorted(passes),
+        "skipped": sorted(skipped),
+        "findings": [f.to_json() for f in findings],
+    }
+
+
+def check_findings_doc(doc) -> list[str]:
+    """Schema errors of an analyzer findings JSON (the
+    ``repro.obs.validate --analysis`` gate). Empty list = valid."""
+    errors = []
+    if not isinstance(doc, dict):
+        return ["findings doc is not a JSON object"]
+    ver = doc.get("schema_version")
+    if not isinstance(ver, int) or ver < 1:
+        errors.append(f"missing/invalid schema_version (got {ver!r})")
+    if doc.get("tool") != "repro.analysis":
+        errors.append(f"tool is not 'repro.analysis' (got {doc.get('tool')!r})")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries \
+            or not all(isinstance(e, str) for e in entries):
+        errors.append("entries must be a non-empty list of entry names")
+        entries = []
+    passes = doc.get("passes")
+    if not isinstance(passes, list) or not passes \
+            or not all(isinstance(p, str) for p in passes):
+        errors.append("passes must be a non-empty list of pass ids")
+        passes = []
+    if not isinstance(doc.get("findings"), list):
+        errors.append("findings must be a list")
+        return errors
+    for i, f in enumerate(doc["findings"]):
+        if not isinstance(f, dict):
+            errors.append(f"finding {i}: not an object")
+            continue
+        for field in ("pass_id", "entry", "eqn_path", "code", "explanation"):
+            if not isinstance(f.get(field), str):
+                errors.append(f"finding {i}: missing string {field}")
+        if f.get("severity") not in SEVERITIES:
+            errors.append(f"finding {i}: severity {f.get('severity')!r} "
+                          f"not in {SEVERITIES}")
+        if passes and isinstance(f.get("pass_id"), str) \
+                and f["pass_id"] not in passes:
+            errors.append(f"finding {i}: pass_id {f['pass_id']!r} "
+                          f"not in the doc's passes list")
+        if entries and isinstance(f.get("entry"), str) \
+                and f["entry"] not in entries:
+            errors.append(f"finding {i}: entry {f['entry']!r} "
+                          f"not in the doc's entries list")
+        if isinstance(f.get("explanation"), str) and not f["explanation"]:
+            errors.append(f"finding {i}: empty explanation")
+    return errors
+
+
+# --------------------------------------------------------------------------- #
+# baseline waivers
+# --------------------------------------------------------------------------- #
+def load_baseline(path: str) -> list[dict]:
+    """Waiver records from a committed baseline file; each must carry
+    pass_id/entry/code, a justification, and an occurrence cap ``max``."""
+    with open(path) as f:
+        doc = json.load(f)
+    waivers = doc.get("waivers", [])
+    for i, w in enumerate(waivers):
+        for field in ("pass_id", "entry", "code", "justification"):
+            if not isinstance(w.get(field), str) or not w[field]:
+                raise ValueError(f"baseline waiver {i}: missing {field}")
+        if not isinstance(w.get("max"), int) or w["max"] < 1:
+            raise ValueError(f"baseline waiver {i}: 'max' must be an int >= 1")
+    return waivers
+
+
+def apply_baseline(findings, waivers):
+    """Split findings into (new, waived). A waiver absorbs up to ``max``
+    findings with its (pass_id, entry, code); overflow stays new."""
+    budget = {(w["pass_id"], w["entry"], w["code"]): w["max"] for w in waivers}
+    new, waived = [], []
+    for f in findings:
+        key = f.waiver_key()
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            waived.append(f)
+        else:
+            new.append(f)
+    return new, waived

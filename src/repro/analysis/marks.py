@@ -1,0 +1,28 @@
+"""Invariant registration marks (import-light; no jax dependency).
+
+Solver code registers the invariants it promises at the definition site:
+``@sync_free`` on a chunk runner means "no op in my jaxpr may force a
+device->host transfer" — the analyzer's host-sync pass keys off this
+registry rather than a hard-coded list, so adding a runner automatically
+puts it under the gate. The decorators only record the qualified name and
+tag the function; they never wrap or slow the decorated callable.
+"""
+from __future__ import annotations
+
+# qualified names of chunk runners registered sync-free (driver protocol:
+# the convergence/halt flags ride the scan carry, readback overlaps the
+# next dispatch — nothing inside the body may sync with the host)
+SYNC_FREE: set[str] = set()
+
+
+def _qualname(fn) -> str:
+    return f"{getattr(fn, '__module__', '?')}." \
+           f"{getattr(fn, '__qualname__', getattr(fn, '__name__', repr(fn)))}"
+
+
+def sync_free(fn):
+    """Register ``fn`` as a sync-free chunk body (analyzed by the
+    ``host_sync`` pass; see repro.analysis.passes)."""
+    SYNC_FREE.add(_qualname(fn))
+    fn.__analysis_sync_free__ = True
+    return fn

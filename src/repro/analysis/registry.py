@@ -1,0 +1,404 @@
+"""Entry-point registry: every solver surface the static passes gate.
+
+Each entry builds an ``EntrySpec`` — the traced jaxpr of one registered
+solver entry point plus its invariant contract (tags, identity reference,
+gate count, sharding-spec tables). Building only *traces* (plus a cheap
+``*_init`` evaluation); nothing is compiled.
+
+The registry spans the esrp/imcr/pcg chunk runners (plain, residual-
+replacement, SDC-guarded, obs=on, batched), the preconditioner applies,
+the fused SpMV+dot kernel oracle, and the 8-device sharded variants
+(chunk with physical queue pushes, matvec, mirror-pinned dot, redundancy
+queue). Entries whose mesh needs more host devices than available declare
+``requires_devices`` and are skipped (and reported) rather than crashing —
+``python -m repro.analysis`` forces ``--xla_force_host_platform_device_count=8``
+so the CLI always covers them on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+from repro.analysis.passes import EntrySpec
+
+_REGISTRY: dict[str, "EntryPoint"] = {}
+
+# chunk length / storage period used for all traced chunk entries: small
+# enough to trace fast, large enough that every gate appears
+_T, _N = 10, 8
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    name: str
+    build: Callable[[], EntrySpec]
+    requires_devices: int = 1
+    broken: bool = False      # deliberately-violating fixture (tests only)
+    summary: str = ""
+
+
+def register(name: str, *, requires_devices: int = 1, broken: bool = False,
+             summary: str = ""):
+    def deco(fn):
+        _REGISTRY[name] = EntryPoint(name, fn, requires_devices, broken,
+                                     summary)
+        return fn
+    return deco
+
+
+def names(include_broken: bool = False) -> list[str]:
+    _ensure_fixtures()
+    return sorted(n for n, e in _REGISTRY.items()
+                  if include_broken or not e.broken)
+
+
+def get(name: str) -> EntryPoint:
+    _ensure_fixtures()
+    return _REGISTRY[name]
+
+
+def build(name: str) -> EntrySpec:
+    return get(name).build()
+
+
+def _ensure_fixtures():
+    from repro.analysis import fixtures  # noqa: F401  (registers broken.*)
+
+
+# --------------------------------------------------------------------------- #
+# shared problem / trace helpers
+# --------------------------------------------------------------------------- #
+@functools.lru_cache
+def _problem(n_nodes: int = 4, nx: int = 16, precond: str = "jacobi"):
+    from repro.sparse.matrices import build_problem
+    return build_problem("poisson2d", n_nodes=n_nodes, nx=nx, ny=nx,
+                         precond=precond)
+
+
+def _rhs(problem, batch: int):
+    import jax.numpy as jnp
+    b = jnp.asarray(problem.b)
+    if not batch:
+        return b
+    # distinct members so nothing constant-folds uniformly
+    return jnp.stack([b * (i + 1.0) for i in range(batch)])
+
+
+def _thresh(rhs, batch: int):
+    import jax.numpy as jnp
+    return (jnp.full((batch,), 1e-8, rhs.dtype) if batch
+            else jnp.asarray(1e-8, rhs.dtype))
+
+
+def _esrp_chunk_jaxpr(ops, rhs, thresh, *, rr_every=0, metrics=False,
+                      sdc_check=None, push=None, st=None, T=_T, n=_N):
+    import jax
+    from repro.core import esrp
+    if st is None:
+        st = esrp.esrp_init(ops.matvec, ops.precond, rhs, dot=ops.dot)
+    return st, jax.make_jaxpr(lambda s: esrp.run_chunk.__wrapped__(
+        s, ops, T, n, thresh, rr_every, True, rhs, push, metrics,
+        sdc_check))(st)
+
+
+def _esrp_ref_chunk_jaxpr(ops, rhs, thresh, st, *, T=_T, n=_N):
+    """The pre-telemetry, guard-free chunk runner re-derived inline (the
+    identity reference for obs=off / sdc_policy=None): a plain freeze scan
+    over ``esrp_step`` — per-member freeze on batched state."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import esrp
+    batched = rhs.ndim == 2
+
+    def norm(r):
+        return jnp.linalg.norm(r) if not batched \
+            else jnp.linalg.norm(r, axis=-1)
+
+    def step(s):
+        s2 = esrp.esrp_step(s, ops, T, b=rhs, rr_every=0, gated=True,
+                            push=None)
+        return s2, norm(s2.pcg.r)
+
+    def ref_chunk(s0):
+        if batched:
+            def advance(carry):
+                s, rnorm = carry
+                s2, rn2 = step(s)
+                done = rnorm < thresh
+                return (esrp.member_select(s, s2, done),
+                        jnp.where(done, rnorm, rn2))
+
+            def body(carry, _):
+                carry = jax.lax.cond(jnp.all(carry[1] < thresh),
+                                     lambda c: c, advance, carry)
+                return carry, carry[1]
+        else:
+            def body(carry, _):
+                s, rnorm = carry
+                s, rnorm = jax.lax.cond(
+                    rnorm < thresh, lambda s_: (s_, rnorm), step, s)
+                return (s, rnorm), rnorm
+
+        (s0, _), norms = jax.lax.scan(body, (s0, norm(s0.pcg.r)), None,
+                                      length=n)
+        return s0, norms
+
+    return jax.make_jaxpr(ref_chunk)(st)
+
+
+# --------------------------------------------------------------------------- #
+# esrp / imcr / pcg chunk runners (single device)
+# --------------------------------------------------------------------------- #
+def _esrp_entry(name, backend, *, rr_every=0, batch=0, metrics=False,
+                sdc=False, with_ref=False, T=_T):
+    ops = (_problem().solver_ops(backend, batch=batch) if batch
+           else _problem().solver_ops(backend))
+    rhs = _rhs(_problem(), batch)
+    thresh = _thresh(rhs, batch)
+    sdc_check = None
+    if sdc:
+        from repro.core.sdc import SDCPolicy
+        sdc_check = SDCPolicy(check_every=4)
+    st, jaxpr = _esrp_chunk_jaxpr(ops, rhs, thresh, rr_every=rr_every,
+                                  metrics=metrics, sdc_check=sdc_check, T=T)
+    ref = (_esrp_ref_chunk_jaxpr(ops, rhs, thresh, st, T=T)
+           if with_ref else None)
+    tags = {"sync_free", "gated"}
+    if not metrics:
+        tags.add("bit_identical")
+    if batch:
+        tags.add("batched")
+    # freeze cond + per-iteration push/star gates (+ replacement, + guard)
+    min_gates = 3 + (1 if rr_every else 0) + (1 if sdc else 0)
+    return EntrySpec(
+        name=name, jaxpr=jaxpr, tags=frozenset(tags), identity_ref=ref,
+        identity_label="pre-telemetry guard-free chunk scan",
+        batch=batch, min_gates=min_gates)
+
+
+register("esrp.chunk.jnp", summary="ESRP chunk runner, jnp reference ops; "
+         "identity vs the pre-telemetry scan")(
+    lambda: _esrp_entry("esrp.chunk.jnp", "jnp", with_ref=True))
+
+register("esrp.chunk.interpret", summary="ESRP chunk runner, Pallas kernels "
+         "in interpret mode")(
+    lambda: _esrp_entry("esrp.chunk.interpret", "interpret"))
+
+register("esrp.chunk.rr.jnp", summary="ESRP chunk with the residual-"
+         "replacement gate armed (rr_every=4)")(
+    lambda: _esrp_entry("esrp.chunk.rr.jnp", "jnp", rr_every=4))
+
+register("esrp.chunk.sdc.jnp", summary="ESRP chunk with the on-device SDC "
+         "halt guard armed")(
+    lambda: _esrp_entry("esrp.chunk.sdc.jnp", "jnp", sdc=True))
+
+register("esrp.chunk.obs.jnp", summary="ESRP chunk with the metrics ring "
+         "armed (obs=on)")(
+    lambda: _esrp_entry("esrp.chunk.obs.jnp", "jnp", metrics=True))
+
+register("esrp.chunk.batched.jnp", summary="batched (B=3) ESRP chunk, "
+         "per-member convergence freeze; identity vs the batched scan")(
+    lambda: _esrp_entry("esrp.chunk.batched.jnp", "jnp", batch=3,
+                        with_ref=True))
+
+register("pcg.chunk.jnp", summary="plain-PCG chunk (strategy='none' "
+         "T-sentinel); sdc_policy=None must equal the guard-free scan")(
+    lambda: _esrp_entry("pcg.chunk.jnp", "jnp", with_ref=True, T=1 << 30))
+
+
+def _imcr_entry(name, *, batch=0, with_ref=False):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import imcr
+    p = _problem()
+    ops = p.solver_ops("jnp", batch=batch) if batch else p.solver_ops("jnp")
+    rhs = _rhs(p, batch)
+    thresh = _thresh(rhs, batch)
+    rows = p.part.rows_per_node
+    st = imcr.imcr_init(ops.matvec, ops.precond, rhs, dot=ops.dot)
+    jaxpr = jax.make_jaxpr(lambda s: imcr.run_chunk.__wrapped__(
+        s, ops, _T, 1, rows, _N, thresh, True, False))(st)
+    ref = None
+    if with_ref:
+        def step(s):
+            s2 = imcr.imcr_step(s, ops, _T, 1, rows, True)
+            return s2, jnp.linalg.norm(s2.pcg.r)
+
+        def ref_chunk(s0):
+            def body(carry, _):
+                s, rnorm = carry
+                s, rnorm = jax.lax.cond(
+                    rnorm < thresh, lambda s_: (s_, rnorm), step, s)
+                return (s, rnorm), rnorm
+
+            (s0, _), norms = jax.lax.scan(
+                body, (s0, jnp.linalg.norm(s0.pcg.r)), None, length=_N)
+            return s0, norms
+
+        ref = jax.make_jaxpr(ref_chunk)(st)
+    tags = {"sync_free", "gated", "bit_identical"}
+    if batch:
+        tags.add("batched")
+    return EntrySpec(name=name, jaxpr=jaxpr, tags=frozenset(tags),
+                     identity_ref=ref,
+                     identity_label="pre-telemetry guard-free chunk scan",
+                     batch=batch, min_gates=2)   # freeze + checkpoint gate
+
+
+register("imcr.chunk.jnp", summary="IMCR chunk runner; identity vs the "
+         "pre-telemetry scan")(
+    lambda: _imcr_entry("imcr.chunk.jnp", with_ref=True))
+
+register("imcr.chunk.batched.jnp", summary="batched (B=2) IMCR chunk")(
+    lambda: _imcr_entry("imcr.chunk.batched.jnp", batch=2))
+
+
+# --------------------------------------------------------------------------- #
+# preconditioner applies + the fused SpMV/dot kernel oracle
+# --------------------------------------------------------------------------- #
+def _precond_entry(name, precond, extra_tags=()):
+    import jax
+    p = _problem(precond=precond)
+    ops = p.solver_ops("jnp")
+    rhs = _rhs(p, 0)
+    jaxpr = jax.make_jaxpr(ops.precond)(rhs)
+    return EntrySpec(name=name, jaxpr=jaxpr,
+                     tags=frozenset({"sync_free", *extra_tags}))
+
+
+for _pname, _ptags in (("jacobi", ("bit_identical",)), ("ssor", ()),
+                       ("chebyshev", ()), ("ic0", ())):
+    register(f"precond.{_pname}.jnp",
+             summary=f"{_pname} preconditioner apply (jnp route)")(
+        functools.partial(_precond_entry, f"precond.{_pname}.jnp", _pname,
+                          _ptags))
+
+
+def _spmv_dot_entry():
+    import jax
+    p = _problem()
+    ops = p.solver_ops("jnp")
+    jaxpr = jax.make_jaxpr(ops.matvec_dot)(_rhs(p, 0))
+    return EntrySpec(name="kernels.spmv_dot.jnp", jaxpr=jaxpr,
+                     tags=frozenset({"sync_free", "bit_identical"}))
+
+
+register("kernels.spmv_dot.jnp", summary="fused y=Ax + x'y oracle — the "
+         "optimization_barrier pinning idiom itself")(_spmv_dot_entry)
+
+
+# --------------------------------------------------------------------------- #
+# 8-device sharded variants
+# --------------------------------------------------------------------------- #
+_NODES = 8
+# which array axis the "nodes" mesh axis may shard, by operand rank (see
+# EXPERIMENTS.md "Static invariants"): vectors on axis 0, Block-ELL
+# data/idx on axis 0, queue-push entries (n, w, bn) on axis 0
+_SHARD_AXES = {1: (0,), 2: (0,), 3: (0,), 4: (0,)}
+# batched: (B, M) vectors on axis 1, statics keep axis 0, the batched
+# queue entry (B, n, w, bn) on axis 1; rank-4 also admits axis 0 for the
+# Block-ELL data (row_tiles, ell, bn, bn), which is batch-independent
+_SHARD_AXES_B = {1: (0,), 2: (0, 1), 3: (0, 1), 4: (0, 1)}
+
+
+@functools.lru_cache
+def _sharded_setup(batch: int = 0):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.comm.shard import (ShardedFailureRuntime, nodes_mesh,
+                                  place_problem, sharded_solver_ops)
+    from repro.core import esrp
+    from repro.core.aspmv import build_plan
+    p = _problem(n_nodes=_NODES, nx=32)
+    mesh = nodes_mesh(_NODES)
+    placed = place_problem(p, mesh)
+    with mesh:
+        ops = sharded_solver_ops(placed, mesh, batch=batch)
+    frt = ShardedFailureRuntime(placed, mesh, batch=batch)
+    frt.bind_plan(build_plan(p.a, p.part, phi=2))
+    rhs = _rhs(placed, batch)
+    spec = P(None, "nodes") if batch else P("nodes")
+    rhs = jax.device_put(rhs, NamedSharding(mesh, spec))
+    with mesh:
+        st = esrp.esrp_init(ops.matvec, ops.precond, rhs, dot=ops.dot)
+        st = frt.init_queue(st)
+    return placed, mesh, ops, frt, rhs, st
+
+
+def _sharded_chunk_entry(name, batch=0, gathers=None):
+    placed, mesh, ops, frt, rhs, st = _sharded_setup(batch)
+    thresh = _thresh(rhs, batch)
+    with mesh:
+        _, jaxpr = _esrp_chunk_jaxpr(ops, rhs, thresh, push=frt.queue_push,
+                                     st=st)
+    tags = {"sync_free", "gated", "bit_identical", "sharded"}
+    if batch:
+        tags.add("batched")
+    return EntrySpec(
+        name=name, jaxpr=jaxpr, tags=frozenset(tags), batch=batch,
+        min_gates=3, mesh_axes=("nodes",), allowed_gathers=gathers,
+        nodes_axis_by_rank=dict(_SHARD_AXES_B if batch else _SHARD_AXES))
+
+
+# gather budget: the SpMV halo all_gather + the queue push's natural-
+# retention gather, each traced once inside the scan body
+register("sharded.esrp.chunk.8dev", requires_devices=_NODES,
+         summary="ESRP chunk on the 8-device mesh with physical queue "
+         "pushes")(
+    lambda: _sharded_chunk_entry("sharded.esrp.chunk.8dev", gathers=2))
+
+register("sharded.esrp.chunk.batched.8dev", requires_devices=_NODES,
+         summary="batched (B=2) ESRP chunk on the 8-device mesh")(
+    lambda: _sharded_chunk_entry("sharded.esrp.chunk.batched.8dev",
+                                 batch=2, gathers=2))
+
+
+def _sharded_matvec_entry():
+    import jax
+    placed, mesh, ops, frt, rhs, st = _sharded_setup(0)
+    with mesh:
+        jaxpr = jax.make_jaxpr(ops.matvec)(rhs)
+    return EntrySpec(name="sharded.matvec.8dev", jaxpr=jaxpr,
+                     tags=frozenset({"sync_free", "sharded"}),
+                     mesh_axes=("nodes",), allowed_gathers=1,
+                     nodes_axis_by_rank=dict(_SHARD_AXES))
+
+
+register("sharded.matvec.8dev", requires_devices=_NODES,
+         summary="sharded Block-ELL SpMV (one halo all_gather)")(
+    _sharded_matvec_entry)
+
+
+def _sharded_dot_entry():
+    import jax
+    placed, mesh, ops, frt, rhs, st = _sharded_setup(0)
+    with mesh:
+        jaxpr = jax.make_jaxpr(ops.dot)(rhs, rhs)
+    return EntrySpec(name="sharded.dot.8dev", jaxpr=jaxpr,
+                     tags=frozenset({"sync_free", "bit_identical",
+                                     "sharded"}),
+                     mesh_axes=("nodes",), allowed_gathers=0,
+                     nodes_axis_by_rank=dict(_SHARD_AXES))
+
+
+register("sharded.dot.8dev", requires_devices=_NODES,
+         summary="mirror-pinned slab dot (psum of barrier-pinned partials)")(
+    _sharded_dot_entry)
+
+
+def _sharded_queue_push_entry():
+    import jax
+    placed, mesh, ops, frt, rhs, st = _sharded_setup(0)
+    with mesh:
+        jaxpr = jax.make_jaxpr(frt.queue_push)(rhs)
+    return EntrySpec(name="sharded.queue_push.8dev", jaxpr=jaxpr,
+                     tags=frozenset({"sync_free", "sharded"}),
+                     mesh_axes=("nodes",), allowed_gathers=1,
+                     nodes_axis_by_rank=dict(_SHARD_AXES))
+
+
+register("sharded.queue_push.8dev", requires_devices=_NODES,
+         summary="redundancy-queue push (ring ppermutes + retention "
+         "gather)")(_sharded_queue_push_entry)

@@ -1,0 +1,123 @@
+"""Structural (alpha-equivalent) jaxpr comparison.
+
+``canonical_lines`` renders a jaxpr as a deterministic list of
+``(path, line)`` pairs: variables are renamed ``v0, v1, ...`` in order of
+first appearance per (sub-)jaxpr, params are sorted by key, sub-jaxprs
+(cond branches, scan bodies, pjit calls) are recursed with path-labelled
+placeholders, and memory addresses in param reprs are masked. Two jaxprs
+canonicalize identically iff they are the same program modulo variable
+naming — the same strictness as ``str(a) == str(b)`` (which the identity
+tests used to assert) minus the accidental dependence on trace-order var
+names.
+
+``first_divergence`` / ``assert_structurally_equal`` report the first
+equation where two canonicalizations part ways, with context — replacing
+an opaque string-inequality failure with "eqn N in branch B differs: got X,
+want Y".
+"""
+from __future__ import annotations
+
+import re
+
+from repro.analysis.walker import unwrap
+
+_ADDR = re.compile(r"0x[0-9a-fA-F]+")
+
+
+def _aval_str(aval) -> str:
+    short = getattr(aval, "str_short", None)
+    return short() if callable(short) else repr(aval)
+
+
+def _param_repr(val, path: str, key: str, subs: list) -> str:
+    """Repr of one param value; jaxpr-valued params become path-labelled
+    placeholders and are queued on ``subs`` for recursion."""
+    if hasattr(val, "jaxpr") or hasattr(val, "eqns"):
+        sub_path = f"{path}/{key}/"
+        subs.append((sub_path, unwrap(val)))
+        return f"<jaxpr:{key}>"
+    if isinstance(val, (list, tuple)):
+        inner = [_param_repr(v, path, f"{key}[{i}]", subs)
+                 for i, v in enumerate(val)]
+        return "(" + ",".join(inner) + ")"
+    if isinstance(val, dict):
+        inner = [f"{k!r}:{_param_repr(v, path, f'{key}.{k}', subs)}"
+                 for k, v in sorted(val.items(), key=lambda kv: repr(kv[0]))]
+        return "{" + ",".join(inner) + "}"
+    return _ADDR.sub("0x..", repr(val))
+
+
+def _canon(jaxpr, path: str, out: list) -> None:
+    j = unwrap(jaxpr)
+    names: dict[int, str] = {}
+
+    def atom(v) -> str:
+        if hasattr(v, "val"):                       # Literal
+            return f"lit({_ADDR.sub('0x..', repr(v.val))}:{_aval_str(v.aval)})"
+        if id(v) not in names:
+            names[id(v)] = f"v{len(names)}"
+        return f"{names[id(v)]}:{_aval_str(v.aval)}"
+
+    out.append((path, "in(" + " ".join(
+        atom(v) for v in (*j.constvars, *j.invars)) + ")"))
+    for i, eqn in enumerate(j.eqns):
+        p = f"{path}eqn{i}" if path.endswith("/") or not path \
+            else f"{path}/eqn{i}"
+        subs: list = []
+        params = " ".join(
+            f"{k}={_param_repr(eqn.params[k], p, k, subs)}"
+            for k in sorted(eqn.params))
+        effects = ""
+        if getattr(eqn, "effects", None):
+            effects = " effects=" + ",".join(
+                sorted(_ADDR.sub("0x..", str(e)) for e in eqn.effects))
+        out.append((p, " ".join(atom(v) for v in eqn.outvars)
+                    + " = " + eqn.primitive.name
+                    + "[" + params + "]" + effects + " "
+                    + " ".join(atom(v) for v in eqn.invars)))
+        for sub_path, sub in subs:
+            _canon(sub, sub_path, out)
+    out.append((path, "out(" + " ".join(atom(v) for v in j.outvars) + ")"))
+
+
+def canonical_lines(jaxpr) -> list[tuple[str, str]]:
+    """Deterministic (path, line) rendering of a jaxpr; two jaxprs are
+    alpha-equivalent iff their canonical lines are equal."""
+    out: list[tuple[str, str]] = []
+    _canon(jaxpr, "", out)
+    return out
+
+
+def first_divergence(got, want) -> dict | None:
+    """None if structurally equal, else the first diverging canonical line:
+    ``{"index", "path", "got", "want", "context"}``."""
+    a, b = canonical_lines(got), canonical_lines(want)
+    for i, (la, lb) in enumerate(zip(a, b)):
+        if la != lb:
+            ctx = [f"  {pa} | {ta}" for pa, ta in a[max(0, i - 2):i]]
+            return {"index": i, "path": la[0] or lb[0],
+                    "got": f"{la[0]}: {la[1]}", "want": f"{lb[0]}: {lb[1]}",
+                    "context": ctx}
+    if len(a) != len(b):
+        longer, tag = (a, "got") if len(a) > len(b) else (b, "want")
+        i = min(len(a), len(b))
+        return {"index": i, "path": longer[i][0],
+                "got": f"[{len(a)} lines]", "want": f"[{len(b)} lines]",
+                "context": [f"  extra {tag} line: "
+                            f"{longer[i][0]}: {longer[i][1]}"]}
+    return None
+
+
+def divergence_message(div: dict, label: str = "") -> str:
+    head = f"jaxprs structurally diverge{f' ({label})' if label else ''} " \
+           f"at canonical line {div['index']} (path {div['path'] or '<top>'})"
+    return "\n".join([head, *div["context"],
+                      f"  got:  {div['got']}", f"  want: {div['want']}"])
+
+
+def assert_structurally_equal(got, want, label: str = "") -> None:
+    """Raise AssertionError naming the first diverging equation (the
+    structural-differ replacement for ``assert str(got) == str(want)``)."""
+    div = first_divergence(got, want)
+    if div is not None:
+        raise AssertionError(divergence_message(div, label))

@@ -1,0 +1,90 @@
+"""Shared jaxpr traversal for the static-analysis passes (and tests).
+
+Everything here duck-types jax's ``Jaxpr`` / ``ClosedJaxpr`` objects
+(``.eqns`` / ``.jaxpr`` attributes) so the module imports without jax —
+the CLI needs that to configure ``XLA_FLAGS`` before jax loads.
+
+The walk replaces the one-off traversals that used to live in
+``tests/test_solver_ops.py`` (``_dots`` / ``_sub``): every equation is
+yielded with a stable path (``eqn3/branches[1]/eqn0``) usable as a finding
+anchor, and cond descent is a switch, so "count work executed
+unconditionally" and "audit what hides inside gates" are the same walk.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Iterator, NamedTuple
+
+
+def unwrap(obj):
+    """The raw ``Jaxpr`` behind a ``ClosedJaxpr`` (or the object itself)."""
+    return obj.jaxpr if hasattr(obj, "jaxpr") else obj
+
+
+def sub_jaxprs(eqn) -> list[tuple[str, Any]]:
+    """``(param_path, Jaxpr)`` for every sub-jaxpr in ``eqn.params``
+    (cond branches, scan/pjit/shard_map bodies, ...), in sorted-key order
+    so paths are deterministic."""
+    out = []
+    for key in sorted(eqn.params):
+        val = eqn.params[key]
+        if isinstance(val, (list, tuple)):
+            for i, u in enumerate(val):
+                if hasattr(u, "jaxpr") or hasattr(u, "eqns"):
+                    out.append((f"{key}[{i}]", unwrap(u)))
+        elif hasattr(val, "jaxpr") or hasattr(val, "eqns"):
+            out.append((key, unwrap(val)))
+    return out
+
+
+class EqnSite(NamedTuple):
+    """One equation plus where it sits: ``path`` is the / -joined chain of
+    eqn indices and sub-jaxpr param keys from the entry jaxpr down."""
+    path: str
+    eqn: Any
+    in_cond: bool      # True iff the site is inside any cond branch
+
+    @property
+    def depth(self) -> int:
+        return self.path.count("/") // 2
+
+
+def walk(jaxpr, *, into_conds: bool = True, _prefix: str = "",
+         _in_cond: bool = False) -> Iterator[EqnSite]:
+    """Yield every equation reachable from ``jaxpr`` depth-first.
+
+    ``into_conds=False`` skips cond branches — the remaining sites are
+    exactly the ops executed unconditionally (the old ``_dots`` contract).
+    """
+    j = unwrap(jaxpr)
+    for i, eqn in enumerate(j.eqns):
+        path = f"{_prefix}eqn{i}"
+        yield EqnSite(path, eqn, _in_cond)
+        is_cond = eqn.primitive.name == "cond"
+        if is_cond and not into_conds:
+            continue
+        for key, sub in sub_jaxprs(eqn):
+            yield from walk(sub, into_conds=into_conds,
+                            _prefix=f"{path}/{key}/",
+                            _in_cond=_in_cond or is_cond)
+
+
+def count_primitives(jaxpr, names: str | Iterable[str], *,
+                     into_conds: bool = False) -> int:
+    """How many equations with these primitive names execute — by default
+    unconditionally (cond branches excluded), the gating-audit convention."""
+    wanted = {names} if isinstance(names, str) else set(names)
+    return sum(1 for s in walk(jaxpr, into_conds=into_conds)
+               if s.eqn.primitive.name in wanted)
+
+
+def sites_of(jaxpr, names: str | Iterable[str], *,
+             into_conds: bool = True) -> list[EqnSite]:
+    """All sites whose primitive name is in ``names``."""
+    wanted = {names} if isinstance(names, str) else set(names)
+    return [s for s in walk(jaxpr, into_conds=into_conds)
+            if s.eqn.primitive.name in wanted]
+
+
+def cond_branches(eqn) -> list[Any]:
+    """The branch jaxprs of a cond equation (index 0 = predicate False)."""
+    return [unwrap(b) for b in eqn.params["branches"]]

@@ -46,6 +46,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.marks import sync_free
 from repro.sparse.blockell import BlockEll
 from repro.sparse.matrices import Problem
 
@@ -713,8 +714,8 @@ def redundancy_queue(plan, part, mesh: Mesh, batch: int = 0):
                 buf = buf.at[:, jnp.where(ns >= 0, ns, width)].set(vals)
             return buf[:, None, :width]
 
-        fn_b = lambda x: jax.lax.with_sharding_constraint(
-            push_b(x, *statics), out_sh)
+        fn_b = sync_free(lambda x: jax.lax.with_sharding_constraint(
+            push_b(x, *statics), out_sh))
         return hold_idx, fn_b
 
     out_sh = NamedSharding(mesh, P("nodes"))
@@ -745,8 +746,10 @@ def redundancy_queue(plan, part, mesh: Mesh, batch: int = 0):
             buf = buf.at[jnp.where(ns >= 0, ns, width)].set(vals)
         return buf[None, :width]
 
-    fn = lambda x: jax.lax.with_sharding_constraint(push(x, *statics),
-                                                    out_sh)
+    # the push runs inside sync-free chunk bodies: collectives only, no
+    # host round-trip (registered with the repro.analysis host-sync pass)
+    fn = sync_free(lambda x: jax.lax.with_sharding_constraint(
+        push(x, *statics), out_sh))
     return hold_idx, fn
 
 

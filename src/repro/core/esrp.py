@@ -37,6 +37,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.marks import sync_free
 from repro.core.ops import SolverOps
 from repro.core.pcg import (METRIC_FIELDS, PCGState, _vec_norm, freeze_pcg,
                             iteration_metrics, pcg_init, pcg_iterate_ops,
@@ -253,6 +254,7 @@ def esrp_step(st: ESRPState, ops: SolverOps, T: int,
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3, 5, 6, 8, 9, 10))
+@sync_free
 def run_chunk(st: ESRPState, ops: SolverOps, T: int, n_iters: int,
               thresh: jax.Array | None = None,
               rr_every: int = 0, gated: bool = True,

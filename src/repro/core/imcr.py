@@ -21,6 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.marks import sync_free
 from repro.core.ops import SolverOps
 from repro.core.pcg import (METRIC_FIELDS, PCGState, _vec_norm, freeze_pcg,
                             iteration_metrics, pcg_init, pcg_iterate_ops,
@@ -100,6 +101,7 @@ def imcr_step(st: IMCRState, ops: SolverOps, T: int, phi: int,
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 7, 8))
+@sync_free
 def run_chunk(st: IMCRState, ops: SolverOps, T: int, phi: int,
               rows_per_node: int, n_iters: int,
               thresh: jax.Array | None = None, gated: bool = True,

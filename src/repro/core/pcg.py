@@ -16,6 +16,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.marks import sync_free
 from repro.core.ops import SolverOps, batch_ops, make_closure_ops
 
 
@@ -141,6 +142,7 @@ def iteration_metrics(pcg, push, star) -> jax.Array:
                       ones * jnp.asarray(star).astype(dt), orth])
 
 
+@sync_free
 def scan_with_convergence_freeze(st, step: Callable, rnorm0: jax.Array,
                                  n_iters: int,
                                  thresh: jax.Array | None,
@@ -236,6 +238,7 @@ def scan_with_convergence_freeze(st, step: Callable, rnorm0: jax.Array,
     return st, norms
 
 
+@sync_free
 def scan_with_halt_guard(st, step: Callable, rnorm0: jax.Array,
                          n_iters: int,
                          thresh: jax.Array | None,

@@ -123,6 +123,9 @@ def spmv_dot(data: jax.Array, idx: jax.Array, x: jax.Array,
                    jax.ShapeDtypeStruct((rt,), data.dtype)),
         interpret=interpret,
     )(idx, data, xb, xr)
+    # no optimization_barrier here (unlike ref.py): the pallas_call output
+    # is already opaque to XLA, so the (rt,) partials' association cannot
+    # be re-fused (the repro.analysis determinism pass relies on this)
     return out.reshape(rt * bm), jnp.sum(partial)
 
 

@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.obs.validate artifacts/obs/failures_trace.json \
         --bench artifacts/bench/BENCH_failures.json \
         --reports artifacts/obs/serve_events.jsonl
+    PYTHONPATH=src python -m repro.obs.validate --analysis artifacts/analysis/findings.json
 
 Exit 0 iff: the trace parses, passes the Chrome-trace schema checks (sorted
 timestamps, stack-matched B/E pairs); with ``--bench``, the BENCH json
@@ -11,6 +12,12 @@ carries roofline FLOP/byte metadata for at least ``--min-kernels`` kernels
 ``solve_report`` record in the JSONL event log satisfies its schema —
 report schema_version >= 2 requires consistent ``batch_index`` /
 ``batch_size`` placement fields (the batched-serving report contract).
+
+``--analysis`` validates a ``repro.analysis`` findings document (the
+static-invariant CI artifact) against its schema: version/tool stamp,
+entry/pass inventories, and well-formed Finding records whose pass_id and
+entry cross-reference the inventories. The trace positional is optional in
+this mode.
 """
 from __future__ import annotations
 
@@ -110,22 +117,38 @@ def check_report_batch_fields(lines) -> list[str]:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("trace", help="Chrome-trace JSON to validate")
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="Chrome-trace JSON to validate (optional with "
+                         "--analysis)")
     ap.add_argument("--bench", default=None,
                     help="BENCH_*.json that must carry roofline fields")
     ap.add_argument("--min-kernels", type=int, default=3)
     ap.add_argument("--reports", default=None,
                     help="JSONL event log whose solve_report records must "
                          "satisfy the report schema (v2+: batch placement)")
+    ap.add_argument("--analysis", default=None,
+                    help="repro.analysis findings JSON to schema-check")
     args = ap.parse_args(argv)
+    if args.trace is None and args.analysis is None:
+        ap.error("nothing to validate: give a trace and/or --analysis")
 
     errors = []
-    with open(args.trace) as f:
-        doc = json.load(f)
-    errors += [f"{args.trace}: {e}" for e in validate_chrome_trace(doc)]
-    n_events = len(doc.get("traceEvents", []))
-    if not n_events:
-        errors.append(f"{args.trace}: empty traceEvents")
+    n_events = 0
+    if args.trace:
+        with open(args.trace) as f:
+            doc = json.load(f)
+        errors += [f"{args.trace}: {e}" for e in validate_chrome_trace(doc)]
+        n_events = len(doc.get("traceEvents", []))
+        if not n_events:
+            errors.append(f"{args.trace}: empty traceEvents")
+    n_findings = 0
+    if args.analysis:
+        # jax-free import: the findings schema lives outside the tracer
+        from repro.analysis.findings import check_findings_doc
+        with open(args.analysis) as f:
+            adoc = json.load(f)
+        errors += [f"{args.analysis}: {e}" for e in check_findings_doc(adoc)]
+        n_findings = len(adoc.get("findings") or [])
     if args.bench:
         with open(args.bench) as f:
             bench = json.load(f)
@@ -138,10 +161,17 @@ def main(argv=None) -> int:
     for e in errors:
         print(f"FAIL {e}", file=sys.stderr)
     if not errors:
-        print(f"OK {args.trace}: {n_events} events"
-              + (f"; {args.bench}: rooflines present" if args.bench else "")
-              + (f"; {args.reports}: report schema ok"
-                 if args.reports else ""))
+        parts = []
+        if args.trace:
+            parts.append(f"{args.trace}: {n_events} events")
+        if args.bench:
+            parts.append(f"{args.bench}: rooflines present")
+        if args.reports:
+            parts.append(f"{args.reports}: report schema ok")
+        if args.analysis:
+            parts.append(f"{args.analysis}: findings schema ok "
+                         f"({n_findings} findings)")
+        print("OK " + "; ".join(parts))
     return 1 if errors else 0
 
 

@@ -1,0 +1,224 @@
+"""Static-invariant checker (repro.analysis — ISSUE 10).
+
+The contract under test:
+  * the structural differ is exactly as strict as string equality modulo
+    alpha-renaming (variable names never matter, one extra op always does)
+    and reports the first diverging equation with its path;
+  * every pass fires on its deliberately-broken fixture (``broken.*``) and
+    stays silent on every clean registered entry point this box can build;
+  * the shared walker reproduces the old hand-rolled ``_dots`` contract
+    (recurse through pjit bodies, skip cond branches);
+  * findings documents round-trip through the JSON schema validator and
+    baseline waivers absorb exactly ``max`` occurrences of their key;
+  * the CLI gates: exit 1 on findings, 0 when the baseline absorbs them,
+    and the committed baseline keeps ``--entry all`` green (subprocess,
+    8 forced host devices — the sharded entries analyze too).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (Finding, apply_baseline, assert_structurally_equal,
+                            check_findings_doc, findings_doc,
+                            first_divergence, walker)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --------------------------------------------------------------------------- #
+# structural differ
+# --------------------------------------------------------------------------- #
+def test_differ_alpha_equivalence():
+    def f(a, b):
+        return jnp.sum(a * b) + 1.0
+
+    def g(x, y):                     # same graph, different binder names
+        return jnp.sum(x * y) + 1.0
+
+    x = jnp.ones(8)
+    assert first_divergence(jax.make_jaxpr(f)(x, x),
+                            jax.make_jaxpr(g)(x, x)) is None
+    assert_structurally_equal(jax.make_jaxpr(f)(x, x),
+                              jax.make_jaxpr(g)(x, x))
+
+
+def test_differ_catches_one_extra_op_with_path():
+    def f(a):
+        return jnp.sum(a * 2.0)
+
+    def g(a):
+        return jnp.sum(a * 2.0 + 0.0)    # one smuggled add
+
+    x = jnp.ones(8)
+    div = first_divergence(jax.make_jaxpr(f)(x), jax.make_jaxpr(g)(x))
+    assert div is not None
+    assert "eqn" in div["path"]
+    with pytest.raises(AssertionError, match="diverge"):
+        assert_structurally_equal(jax.make_jaxpr(f)(x), jax.make_jaxpr(g)(x))
+
+
+def test_differ_catches_literal_and_dtype_changes():
+    x = jnp.ones(8)
+    a = jax.make_jaxpr(lambda v: v * 2.0)(x)
+    b = jax.make_jaxpr(lambda v: v * 3.0)(x)
+    assert first_divergence(a, b) is not None
+    c = jax.make_jaxpr(lambda v: v * 2.0)(jnp.ones(8, jnp.float32))
+    assert first_divergence(a, c) is not None
+
+
+def test_differ_descends_into_cond_branches():
+    def mk(off_branch):
+        def f(v, flag):
+            return jax.lax.cond(flag, lambda u: u * 2.0, off_branch, v)
+        return jax.make_jaxpr(f)(jnp.ones(8), True)
+
+    same = first_divergence(mk(lambda u: u + 1.0), mk(lambda u: u + 1.0))
+    assert same is None
+    div = first_divergence(mk(lambda u: u + 1.0), mk(lambda u: u + 2.0))
+    assert div is not None and "branches" in div["path"]
+
+
+# --------------------------------------------------------------------------- #
+# walker (the shared traversal the gating tests migrated onto)
+# --------------------------------------------------------------------------- #
+def _gated_graph():
+    def f(v, flag):
+        w = jnp.dot(v, v) * v                      # unconditional dot
+        w = jax.jit(lambda u: u * jnp.dot(u, u))(w)   # dot inside pjit body
+        return jax.lax.cond(flag,
+                            lambda u: jnp.dot(u, u),  # dot under cond
+                            lambda u: jnp.asarray(0.0), w)
+    return jax.make_jaxpr(f)(jnp.ones(8), True)
+
+
+def test_walker_counts_match_dots_contract():
+    j = _gated_graph()
+    assert walker.count_primitives(j, "dot_general", into_conds=False) == 2
+    assert walker.count_primitives(j, "dot_general", into_conds=True) == 3
+
+
+def test_walker_sites_carry_paths_and_cond_flag():
+    sites = walker.sites_of(_gated_graph(), "dot_general")
+    assert len(sites) == 3
+    in_cond = [s for s in sites if s.in_cond]
+    assert len(in_cond) == 1 and "branches" in in_cond[0].path
+
+
+# --------------------------------------------------------------------------- #
+# findings schema + baseline waivers
+# --------------------------------------------------------------------------- #
+def _finding(**kw):
+    base = dict(pass_id="gating", entry="e", eqn_path="eqn0",
+                severity="error", code="c", explanation="why")
+    base.update(kw)
+    return Finding(**base)
+
+
+def test_findings_doc_schema_roundtrip():
+    doc = findings_doc([_finding()], entries=["e"], passes=["gating"])
+    assert check_findings_doc(json.loads(json.dumps(doc))) == []
+
+
+def test_findings_doc_schema_rejects_bad_docs():
+    good = findings_doc([_finding()], entries=["e"], passes=["gating"])
+    bad = json.loads(json.dumps(good))
+    bad["findings"][0]["severity"] = "catastrophic"
+    assert check_findings_doc(bad)
+    bad2 = json.loads(json.dumps(good))
+    bad2["findings"][0]["entry"] = "unregistered"
+    assert check_findings_doc(bad2)
+    assert check_findings_doc({"schema_version": 99})
+
+
+def test_baseline_waiver_budget():
+    waivers = [dict(pass_id="gating", entry="e", code="c", max=2,
+                    justification="known")]
+    fs = [_finding(), _finding(), _finding(),
+          _finding(code="other")]
+    new, waived = apply_baseline(fs, waivers)
+    assert len(waived) == 2             # budget caps at max
+    assert len(new) == 2                # overflow + unmatched code stay new
+
+
+# --------------------------------------------------------------------------- #
+# every pass fires on its broken fixture; clean entries stay silent
+# --------------------------------------------------------------------------- #
+_EXPECT = {
+    "broken.identity": ("identity", "jaxpr-divergence"),
+    "broken.gating": ("gating", "gated-branch-not-free"),
+    "broken.host_sync": ("host_sync", "host-sync"),
+    "broken.determinism": ("determinism", "unpinned-dot"),
+    "broken.batch": ("determinism", "batch-axis-reduction"),
+    "broken.sharding": ("sharding", "member-axis-sharded"),
+}
+
+
+@pytest.mark.parametrize("entry", sorted(_EXPECT))
+def test_broken_fixture_trips_its_pass(entry):
+    from repro.analysis import registry
+    from repro.analysis.passes import run_passes
+    pass_id, code = _EXPECT[entry]
+    found = run_passes(registry.build(entry))
+    assert any(f.pass_id == pass_id and f.code == code for f in found), \
+        [(f.pass_id, f.code) for f in found]
+
+
+def test_clean_entries_only_baselined_findings():
+    """Every entry this box can build yields no finding outside the
+    committed baseline (the in-process version of the CI gate; the
+    8-device entries run in the subprocess test below)."""
+    from repro.analysis import registry
+    from repro.analysis.findings import load_baseline
+    from repro.analysis.passes import run_passes
+    waivers = load_baseline(
+        os.path.join(REPO, "artifacts", "analysis", "baseline.json"))
+    n_dev = jax.device_count()
+    analyzed, findings = [], []
+    for name in registry.names():
+        if registry.get(name).requires_devices > n_dev:
+            continue
+        findings += run_passes(registry.build(name))
+        analyzed.append(name)
+    assert len(analyzed) >= 10, analyzed
+    new, _ = apply_baseline(findings, waivers)
+    assert not new, [(f.entry, f.pass_id, f.code, f.eqn_path) for f in new]
+
+
+# --------------------------------------------------------------------------- #
+# CLI gate (subprocess: fresh interpreter, 8 forced host devices)
+# --------------------------------------------------------------------------- #
+def _cli(*args, timeout=600):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)       # __main__ must set the device count
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, timeout=timeout, cwd=REPO, env=env)
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    r = _cli("--entry", "broken.determinism", "--format", "json",
+             "--out", str(tmp_path / "f.json"))
+    assert r.returncode == 1, r.stderr
+    doc = json.loads(r.stdout)
+    assert doc["new_findings"] and doc["tool"] == "repro.analysis"
+    with open(tmp_path / "f.json") as f:
+        assert check_findings_doc(json.load(f)) == []
+
+    ok = _cli("--entry", "kernels.spmv_dot.jnp")
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+
+@pytest.mark.slow
+def test_cli_all_entries_green_with_baseline():
+    """The committed gate itself: all registered entries — including the
+    8-device sharded ones (the subprocess forces 8 host devices) — with
+    the committed baseline."""
+    r = _cli("--entry", "all", "--baseline",
+             "artifacts/analysis/baseline.json")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "skipped" not in r.stdout, r.stdout

@@ -328,3 +328,48 @@ def test_batched_rr_every_matches_sequential(small_problem):
         assert reps[k].converged_iter == solo.converged_iter, k
         assert (np.asarray(reps[k].x) == np.asarray(solo.x)).all(), \
             f"member {k} diverged from its B=1 run under rr_every"
+
+
+# --------------------------------------------------------------------------- #
+# sdc_policy=None / obs=off adds ZERO ops on the batched path (structural
+# jaxpr identity vs the pre-telemetry freeze scan — see repro.analysis)
+# --------------------------------------------------------------------------- #
+def test_batched_chunk_metrics_off_jaxpr_identity(small_problem):
+    from repro.analysis import assert_structurally_equal
+    from repro.core import esrp
+
+    B = 3
+    ops = small_problem.solver_ops("jnp", batch=B)
+    rhs = jnp.stack([jnp.asarray(small_problem.b) * (i + 1.0)
+                     for i in range(B)])
+    st = esrp.esrp_init(ops.matvec, ops.precond, rhs, dot=ops.dot)
+    thresh = jnp.full((B,), 1e-8, rhs.dtype)
+
+    def step(s):
+        s2 = esrp.esrp_step(s, ops, 10, b=rhs, rr_every=0, gated=True,
+                            push=None)
+        return s2, jnp.linalg.norm(s2.pcg.r, axis=-1)
+
+    def ref_chunk(s0):
+        # the batched freeze scan with no aux branch anywhere: converged
+        # members hold their rows, the chunk halts when all are done
+        def advance(carry):
+            s, rnorm = carry
+            s2, rn2 = step(s)
+            done = rnorm < thresh
+            return (esrp.member_select(s, s2, done),
+                    jnp.where(done, rnorm, rn2))
+
+        def body(carry, _):
+            carry = jax.lax.cond(jnp.all(carry[1] < thresh),
+                                 lambda c: c, advance, carry)
+            return carry, carry[1]
+
+        (s0, _), norms = jax.lax.scan(
+            body, (s0, jnp.linalg.norm(s0.pcg.r, axis=-1)), None, length=8)
+        return s0, norms
+
+    got = jax.make_jaxpr(lambda s: esrp.run_chunk.__wrapped__(
+        s, ops, 10, 8, thresh, 0, True, rhs, None, False))(st)
+    want = jax.make_jaxpr(ref_chunk)(st)
+    assert_structurally_equal(got, want, "batched obs=off adds zero ops")

@@ -2,9 +2,10 @@
 
 The contract under test:
   * obs=off is FREE: ``run_chunk(..., metrics=False)`` compiles to exactly
-    the jaxpr of the pre-telemetry chunk runner (string equality against an
-    inline re-derivation for both esrp and imcr), and the driver's default
-    path stays deterministic with obs=on rejoining at the same iteration;
+    the jaxpr of the pre-telemetry chunk runner (structural alpha-equivalent
+    identity via repro.analysis against an inline re-derivation for both
+    esrp and imcr), and the driver's default path stays deterministic with
+    obs=on rejoining at the same iteration;
   * the on-device metrics ring tells the truth: the per-iteration history
     read back through the chunk record matches a host-side replay (||r||,
     rz bit-tight; push/star flags exactly the Alg. 3 schedule; orth at the
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import assert_structurally_equal
 from repro.core import esrp, imcr
 from repro.core.driver import REPORT_SCHEMA_VERSION, solve_resilient
 from repro.core.failures import FailureEvent
@@ -81,7 +83,10 @@ def test_esrp_chunk_metrics_off_jaxpr_identity(problem):
     got = jax.make_jaxpr(lambda s: esrp.run_chunk.__wrapped__(
         s, ops, 10, 8, thresh, 0, True, b, None, False))(st)
     want = jax.make_jaxpr(ref_chunk)(st)
-    assert str(got) == str(want)
+    # structural (alpha-equivalent) identity: same strictness as string
+    # equality, but a failure reports the first diverging equation instead
+    # of two multi-thousand-line reprs
+    assert_structurally_equal(got, want, "esrp obs=off adds zero ops")
 
 
 def test_imcr_chunk_metrics_off_jaxpr_identity(problem):
@@ -109,7 +114,7 @@ def test_imcr_chunk_metrics_off_jaxpr_identity(problem):
     got = jax.make_jaxpr(lambda s: imcr.run_chunk.__wrapped__(
         s, ops, 10, 1, rows, 8, thresh, True, False))(st)
     want = jax.make_jaxpr(ref_chunk)(st)
-    assert str(got) == str(want)
+    assert_structurally_equal(got, want, "imcr obs=off adds zero ops")
 
 
 def test_obs_off_deterministic_and_obs_on_rejoins(problem):

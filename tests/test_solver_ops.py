@@ -17,6 +17,7 @@ import pytest
 
 from tests._hypo import given, settings, st
 
+from repro.analysis import walker
 from repro.core import esrp
 from repro.core.driver import solve_resilient
 from repro.core.ops import make_closure_ops, pick_rows
@@ -106,31 +107,12 @@ def test_closure_ops_match_seed_numerics(problems):
 
 
 # --------------------------------------------------------------------------- #
-# cond gating
+# cond gating (traversal shared with the static analyzer: repro.analysis)
 # --------------------------------------------------------------------------- #
 def _dots(jaxpr):
     """Count dot_general eqns executed unconditionally: recurses through
     sub-jaxprs (pjit bodies etc.) but NOT into cond branches."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "dot_general":
-            n += 1
-        elif eqn.primitive.name != "cond":
-            for sub in _sub(eqn):
-                n += _dots(sub)
-    return n
-
-
-def _sub(eqn):
-    out = []
-    for v in eqn.params.values():
-        vs = v if isinstance(v, (list, tuple)) else [v]
-        for u in vs:
-            if hasattr(u, "jaxpr"):       # ClosedJaxpr
-                out.append(u.jaxpr)
-            elif hasattr(u, "eqns"):      # Jaxpr
-                out.append(u)
-    return out
+    return walker.count_primitives(jaxpr, "dot_general", into_conds=False)
 
 
 def test_cond_gates_storage_and_replacement(problems):
